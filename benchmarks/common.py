@@ -1,0 +1,72 @@
+"""Shared helpers for the paper-figure benchmarks."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.custard import compile_expr
+from repro.core.einsum import parse
+from repro.core.schedule import Format, Schedule, apply_split, build_inputs
+from repro.core.simulator import simulate
+
+RNG = np.random.default_rng(20230325)
+
+
+def uniform_sparse(shape, density, rng=None):
+    rng = rng or RNG
+    return ((rng.random(shape) < density)
+            * rng.integers(1, 9, shape)).astype(float)
+
+
+def runs_vector(dim, nnz, run_len, rng=None, phase=0):
+    """Vectors with runs of nonzeros (paper Fig. 17): ``nnz`` nonzeros in
+    runs of ``run_len``, alternating with gaps; ``phase`` offsets the
+    second vector so runs interleave."""
+    rng = rng or RNG
+    v = np.zeros(dim)
+    n_runs = max(nnz // run_len, 1)
+    period = dim // n_runs
+    pos = phase
+    left = nnz
+    for r in range(n_runs):
+        ln = min(run_len, left)
+        start = min(r * period + phase, dim - ln)
+        v[start:start + ln] = rng.integers(1, 9, ln)
+        left -= ln
+        if left <= 0:
+            break
+    return v
+
+
+def blocks_vector(dim, nnz, block, rng=None, phase=0):
+    return runs_vector(dim, nnz, block, rng, phase)
+
+
+def run_expr(expr, fmts, order, arrays, dims, *, locate=frozenset(),
+             skip=frozenset(), bitvector=frozenset(), split=None):
+    sch = Schedule(loop_order=tuple(order), locate=frozenset(locate),
+                   skip=frozenset(skip), bitvector=frozenset(bitvector),
+                   split=dict(split or {}))
+    split_of = dict(sch.split)
+    expr2, sch2 = apply_split(expr, sch)
+    assign = parse(expr2)
+    fmt = Format(dict(fmts))
+    dims2 = dict(dims)
+    for v, s in split_of.items():
+        d = dims[v]
+        dims2.pop(v, None)
+        dims2[f"{v}o"] = s
+        dims2[f"{v}i"] = -(-d // s)
+    G = compile_expr(expr2, fmt, sch2, dims2)
+    tensors = build_inputs(assign, fmt, sch2, arrays, split_of=split_of)
+    res = simulate(G, tensors)
+    return res, G
+
+
+def timed(fn, *args, reps=1, **kw):
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / reps
+    return out, dt * 1e6

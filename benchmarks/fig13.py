@@ -1,0 +1,76 @@
+"""Fig. 13: accelerator structures for sparse vector-vector multiply.
+
+x(i) = b(i) * c(i), dim 2000, comparing Dense / Crd / Crd+skip /
+Crd+split / BV / BV+split(bit-tree) over (a) urandom sparsity sweep,
+(b) run-length sweep, (c) block-size sweep (nnz=400 for b/c).
+
+Checks the paper's conclusions: bitvectors win when dense-ish and lose to
+compressed iteration as sparsity grows (a); skipping/splitting win with
+longer runs while BV stays flat (b).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import RNG, run_expr, runs_vector, uniform_sparse
+
+DIM = 2000
+EXPR = "x(i) = b(i) * c(i)"
+
+
+def variants(b, c):
+    arrays = {"b": b, "c": c}
+    dims = {"i": DIM}
+    out = {}
+    out["Dense"] = run_expr(EXPR, {"b": "d", "c": "d"}, "i", arrays, dims)[0]
+    out["Crd"] = run_expr(EXPR, {"b": "c", "c": "c"}, "i", arrays, dims)[0]
+    out["Crd_skip"] = run_expr(EXPR, {"b": "c", "c": "c"}, "i", arrays,
+                               dims, skip={"i"})[0]
+    out["Crd_split"] = run_expr(EXPR, {"b": "cc", "c": "cc"}, "i", arrays,
+                                dims, split={"i": 64})[0]
+    out["BV"] = run_expr(EXPR, {"b": "b", "c": "b"}, "i", arrays, dims,
+                         bitvector={"i"})[0]
+    out["BV_split"] = run_expr(EXPR, {"b": "bb", "c": "bb"}, "i", arrays,
+                               dims, split={"i": 64},
+                               bitvector={"i"})[0]
+    return {k: v.cycles for k, v in out.items()}
+
+
+def run(emit):
+    ok = True
+    # (a) sparsity sweep, urandom (paper sweeps to extreme sparsity)
+    crossed = False
+    for density in (0.5, 0.2, 0.1, 0.05, 0.02, 0.01, 0.004, 0.001):
+        b = uniform_sparse(DIM, density)
+        c = uniform_sparse(DIM, density)
+        cyc = variants(b, c)
+        emit(f"fig13a,density={density}," +
+             ",".join(f"{k}={v}" for k, v in cyc.items()))
+        if cyc["Crd"] < cyc["BV"]:
+            crossed = True
+        if density >= 0.5:
+            ok &= cyc["BV"] < cyc["Crd"]   # bitvector wins when dense-ish
+    ok &= crossed                           # compressed wins when sparse
+
+    # (b) run-length sweep
+    flat_bv, skip_gain = [], []
+    for run_len in (2, 8, 32, 128):
+        b = runs_vector(DIM, 400, run_len, phase=0)
+        c = runs_vector(DIM, 400, run_len, phase=run_len)
+        cyc = variants(b, c)
+        emit(f"fig13b,run={run_len}," +
+             ",".join(f"{k}={v}" for k, v in cyc.items()))
+        flat_bv.append(cyc["BV"])
+        skip_gain.append(cyc["Crd"] / max(cyc["Crd_skip"], 1))
+    ok &= max(flat_bv) <= 2.0 * min(flat_bv)      # BV flat in run length
+    ok &= skip_gain[-1] > skip_gain[0]            # skipping wins w/ runs
+
+    # (c) block-size sweep
+    for blk in (4, 16, 64, 256):
+        b = runs_vector(DIM, 400, blk, phase=0)
+        c = runs_vector(DIM, 400, blk, phase=blk // 2)
+        cyc = variants(b, c)
+        emit(f"fig13c,block={blk}," +
+             ",".join(f"{k}={v}" for k, v in cyc.items()))
+    emit(f"fig13/summary,paper_trends_reproduced,{ok}")
+    return ok

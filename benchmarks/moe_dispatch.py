@@ -1,0 +1,40 @@
+"""SAM-dispatched MoE vs dense one-hot baseline (the paper's dataflow-order
+study replayed inside an LM; DESIGN.md §4).
+
+Reports wall time and the analytic work ratio E/k. The SAM (Gustavson
+sort-order) dispatch does O(k*T*D) expert work; the dense baseline does
+O(E*T*D)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import moe as moe_mod
+
+
+def run(emit):
+    d, dff, e, k, t = 64, 128, 32, 2, 4096
+    p = moe_mod.init_moe(jax.random.PRNGKey(0), d, dff, e,
+                         dtype=jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (t, d), jnp.float32)
+
+    sam = jax.jit(lambda xx: moe_mod.moe_sam_dispatch(
+        p, xx, k=k, compute_dtype=jnp.float32))
+    dense = jax.jit(lambda xx: moe_mod.moe_dense_dispatch(
+        p, xx, k=k, compute_dtype=jnp.float32))
+
+    def bench(f):
+        f(x).block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(5):
+            f(x).block_until_ready()
+        return (time.perf_counter() - t0) / 5 * 1e6
+
+    us_sam, us_dense = bench(sam), bench(dense)
+    emit(f"moe_dispatch,sam_us,{us_sam:.0f}")
+    emit(f"moe_dispatch,dense_us,{us_dense:.0f}")
+    emit(f"moe_dispatch,wall_speedup,{us_dense / us_sam:.2f}")
+    emit(f"moe_dispatch,analytic_work_ratio,{e / k:.1f}")
+    return us_sam < us_dense

@@ -1,0 +1,47 @@
+"""Benchmark harness entry: one module per paper table/figure + the LM
+integration bench. ``PYTHONPATH=src python -m benchmarks.run [names...]``
+
+Per-row output is CSV; each module also gets a summary row
+``name,us_per_call,derived`` where derived is the pass/fail of the paper's
+qualitative claim for that table/figure.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from . import (fig11, fig12, fig13, fig14, fig15, moe_dispatch,
+                   table1, table2)
+    benches = {
+        "table1": table1.run, "table2": table2.run,
+        "fig11": fig11.run, "fig12": fig12.run, "fig13": fig13.run,
+        "fig14": fig14.run, "fig15": fig15.run,
+        "moe_dispatch": moe_dispatch.run,
+    }
+    names = sys.argv[1:] or list(benches)
+    rows = []
+    failed = []
+    for name in names:
+        t0 = time.perf_counter()
+        try:
+            ok = benches[name](lambda s: print(s, flush=True))
+        except Exception:  # noqa: BLE001
+            import traceback
+            traceback.print_exc()
+            ok = False
+        us = (time.perf_counter() - t0) * 1e6
+        rows.append(f"{name},{us:.0f},{'pass' if ok else 'FAIL'}")
+        if not ok:
+            failed.append(name)
+    print("\n# name,us_per_call,derived")
+    for r in rows:
+        print(r)
+    if failed:
+        print(f"# FAILED: {failed}")
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

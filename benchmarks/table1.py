@@ -1,0 +1,55 @@
+"""Table 1: SAM primitive counts for the paper's 12 real-world expressions.
+
+Emits one CSV row per expression and checks the counts against the
+published table (exact reproduction).
+"""
+from __future__ import annotations
+
+from repro.core.custard import compile_expr
+from repro.core.schedule import Format, Schedule
+
+CASES = [
+    ("SpMV", "x(i) = B(i,j) * c(j)", "ij",
+     {"B": "cc", "c": "c"}, (3, 1, 1, 0, 1, 1, 1, 2, 2)),
+    ("SpMSpM", "X(i,j) = B(i,k) * C(k,j)", "ikj",
+     {"B": "cc", "C": "cc"}, (4, 2, 1, 0, 1, 1, 1, 3, 2)),
+    ("SDDMM", "X(i,j) = B(i,j) * C(i,k) * D(j,k)", "ijk",
+     {"B": "cc", "C": "cc", "D": "cc"}, (6, 3, 3, 0, 2, 1, 2, 3, 3)),
+    ("InnerProd", "x = B(i,j,k) * C(i,j,k)", "ijk",
+     {"B": "ccc", "C": "ccc"}, (6, 0, 3, 0, 1, 3, 0, 1, 2)),
+    ("TTV", "X(i,j) = B(i,j,k) * c(k)", "ijk",
+     {"B": "ccc", "c": "c"}, (4, 2, 1, 0, 1, 1, 2, 3, 2)),
+    ("TTM", "X(i,j,k) = B(i,j,l) * C(k,l)", "ijkl",
+     {"B": "ccc", "C": "cc"}, (5, 3, 1, 0, 1, 1, 3, 4, 2)),
+    ("MTTKRP", "X(i,j) = B(i,k,l) * C(j,k) * D(j,l)", "ijkl",
+     {"B": "ccc", "C": "cc", "D": "cc"}, (7, 5, 3, 0, 2, 2, 3, 3, 3)),
+    ("Residual", "x(i) = b(i) - C(i,j) * d(j)", "ij",
+     {"b": "c", "C": "cc", "d": "c"}, (4, 1, 1, 1, 2, 1, 1, 2, 3)),
+    ("MatTransMul", "x(i) = alpha * Bt(i,j) * c(j) + beta * d(i)", "ij",
+     {"Bt": "cc", "c": "c", "d": "c"}, (4, 4, 1, 1, 4, 1, 1, 2, 5)),
+    ("MMAdd", "X(i,j) = B(i,j) + C(i,j)", "ij",
+     {"B": "cc", "C": "cc"}, (4, 0, 0, 2, 1, 0, 0, 3, 2)),
+    ("Plus3", "X(i,j) = B(i,j) + C(i,j) + D(i,j)", "ij",
+     {"B": "cc", "C": "cc", "D": "cc"}, (6, 0, 0, 2, 2, 0, 0, 3, 3)),
+    ("Plus2", "X(i,j,k) = B(i,j,k) + C(i,j,k)", "ijk",
+     {"B": "ccc", "C": "ccc"}, (6, 0, 0, 3, 1, 0, 0, 4, 2)),
+]
+
+COLS = ("level_scan", "repeat", "intersect", "union", "alu", "reduce",
+        "crd_drop", "level_write", "array")
+DIMS = {"i": 8, "j": 8, "k": 8, "l": 8}
+
+
+def run(emit):
+    emit("table1/header,name," + ",".join(COLS) + ",matches_paper")
+    mismatches = 0
+    for name, expr, order, fmts, expected in CASES:
+        G = compile_expr(expr, Format(dict(fmts)),
+                         Schedule(loop_order=tuple(order)), DIMS)
+        counts = G.primitive_counts()
+        got = tuple(counts[c] for c in COLS)
+        ok = got == expected
+        mismatches += 0 if ok else 1
+        emit(f"table1,{name}," + ",".join(map(str, got)) + f",{ok}")
+    emit(f"table1/summary,mismatches,{mismatches},of,{len(CASES)}")
+    return mismatches == 0

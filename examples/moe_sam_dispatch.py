@@ -1,0 +1,43 @@
+"""SAM-dispatched Mixture-of-Experts: the paper's dataflow-order study
+inside an LM layer.
+
+    PYTHONPATH=src python examples/moe_sam_dispatch.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import moe as moe_mod
+
+D, DFF, E, K, T = 64, 128, 32, 2, 8192
+p = moe_mod.init_moe(jax.random.PRNGKey(0), D, DFF, E, dtype=jnp.float32)
+x = jax.random.normal(jax.random.PRNGKey(1), (T, D), jnp.float32)
+
+print(f"MoE: {E} experts, top-{K}, {T} tokens")
+print("routing expression:  Y[e,c,d] = sum_t G[e,c,t] * X[t,d]   "
+      "(G = top-k one-hot, a sparse tensor)")
+
+sam = jax.jit(lambda xx: moe_mod.moe_sam_dispatch(
+    p, xx, k=K, capacity_factor=2.0, compute_dtype=jnp.float32))
+dense = jax.jit(lambda xx: moe_mod.moe_dense_dispatch(
+    p, xx, k=K, compute_dtype=jnp.float32))
+
+y_sam = sam(x).block_until_ready()
+y_dense = dense(x).block_until_ready()
+err = float(jnp.max(jnp.abs(y_sam - y_dense)))
+print(f"\nmax |sam - dense| = {err:.2e}  (identical up to capacity drops)")
+
+
+def bench(f):
+    t0 = time.perf_counter()
+    for _ in range(5):
+        f(x).block_until_ready()
+    return (time.perf_counter() - t0) / 5 * 1e3
+
+
+ms_sam, ms_dense = bench(sam), bench(dense)
+print(f"dense one-hot (O(E*T*D), inner-product order): {ms_dense:8.2f} ms")
+print(f"SAM sort-dispatch (O(k*T*D), Gustavson order): {ms_sam:8.2f} ms")
+print(f"speedup {ms_dense / ms_sam:.1f}x   (analytic work ratio E/k = {E // K}x)")

@@ -1,0 +1,63 @@
+"""SpM*SpM three ways: dataflow orders on the SAM simulator, the JAX
+coordinate-array backend, and the BCSR Pallas kernel (interpret mode).
+
+    PYTHONPATH=src python examples/spmm_gustavson.py
+"""
+import sys
+sys.path.insert(0, ".")   # for benchmarks.common when run from repo root
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.jax_backend import execute_expr
+from repro.core.schedule import Format, Schedule
+from repro.kernels import ops, ref
+from benchmarks.common import run_expr, uniform_sparse
+
+I, J, K = 64, 48, 56
+B = uniform_sparse((I, K), 0.3)
+# banded structure: block sparsity is what the BCSR tile level exploits
+for i in range(I):
+    for k in range(K):
+        if abs(i - k) > 12:
+            B[i, k] = 0.0
+C = uniform_sparse((K, J), 0.15)
+want = B @ C
+dims = {"i": I, "j": J, "k": K}
+
+print("=== dataflow orders on the cycle-approximate simulator ===")
+for order, label in (("ijk", "inner product"),
+                     ("ikj", "linear combination (Gustavson)"),
+                     ("kij", "outer product")):
+    res, _ = run_expr("X(i,j) = B(i,k) * C(k,j)", {"B": "cc", "C": "cc"},
+                      order, {"B": B, "C": C}, dims)
+    assert np.allclose(res.outputs["X"].to_dense(), want)
+    print(f"  {order} ({label:30s}): {res.cycles:8d} cycles, "
+          f"bottleneck {res.bottleneck().kind}")
+
+print("\n=== TPU-native coordinate-array backend ===")
+out = execute_expr("X(i,j) = B(i,k) * C(k,j)", Format({"B": "cc", "C": "cc"}),
+                   Schedule(loop_order=("i", "k", "j")),
+                   {"B": B, "C": C}, dims)
+assert np.allclose(out.to_dense(), want)
+print("  Gustavson order matches dense oracle")
+
+print("\n=== BCSR Pallas kernel (the tile-level SAM graph, interpret) ===")
+bs = 16
+Bb = np.zeros(((I + bs - 1) // bs * bs, (K + bs - 1) // bs * bs))
+Bb[:I, :K] = B
+occ = Bb.reshape(Bb.shape[0] // bs, bs, Bb.shape[1] // bs, bs) \
+    .transpose(0, 2, 1, 3)
+rows, cols = np.nonzero(np.abs(occ).sum((2, 3)) > 0)
+blocks = occ[rows, cols].astype(np.float32)
+blk_map, col_idx, blocks_p = ops.bsr_from_block_coords(
+    rows, cols, blocks, occ.shape[0])
+Cpad = np.zeros((Bb.shape[1], 128), np.float32)
+Cpad[:K, :J] = C
+got = ops.spmm_bsr(blk_map, col_idx, blocks_p, jnp.asarray(Cpad),
+                   n_tile=128, interpret=True)
+assert np.allclose(np.asarray(got)[:I, :J], want, atol=1e-4)
+nnzb = len(rows)
+total_b = occ.shape[0] * occ.shape[1]
+print(f"  {nnzb}/{total_b} nonzero blocks touched "
+      f"({100 * nnzb / total_b:.0f}% of the dense tile grid) — matches oracle")

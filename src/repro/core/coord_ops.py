@@ -1,0 +1,175 @@
+"""Coordinate-array primitives: the TPU-native realization of SAM blocks.
+
+Each SAM stream becomes a fixed-capacity coordinate/value array plus a
+validity mask and a ``parent`` index array that encodes the hierarchical
+stop-token structure (element i's fiber is identified by ``parent[i]``).
+Every op below is shape-static and jit-compatible:
+
+  scan_level      — Def 3.1 level scanner: expand (seg, crd) fibers of the
+                    selected parent references (vectorized ragged expand)
+  intersect_keys  — Def 3.2 intersecter: sorted-key membership via
+                    searchsorted (the data-parallel two-finger merge; the
+                    binary probe is also exactly §4.2's coordinate skipping)
+  union_keys      — Def 3.3 unioner: merge + dedup with per-side hole masks
+  repeat is a gather:  out = ref[parent_idx]  (Def 3.4; no op needed)
+  segment_sum     — Def 3.7 reducer (n=0): jax segment-sum over fibers
+  sorted_segment_reduce — Def 3.7 reducer (n>=1): sort-by-key + boundary
+                    detection + segment-sum + compaction (Gustavson merge)
+  compact         — level writer / final construction (Def 3.8)
+  locate_keys     — Def 4.1 locator: direct searchsorted probe
+
+Coordinate droppers (Def 3.9) need no op at all: on TPU they are predication
+— the validity mask is ANDed instead of tokens being removed.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+
+# Flattened iteration-space keys need 64-bit headroom (key = fiber-chain
+# index product). Models/kernels are explicit about their dtypes, so this
+# only widens the coordinate machinery.
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+
+I32 = jnp.int32
+I64 = jnp.int64
+PAD_KEY = jnp.iinfo(jnp.int64).max  # sorts after every real key
+
+
+def exclusive_cumsum(x):
+    return jnp.concatenate([jnp.zeros((1,), x.dtype), jnp.cumsum(x)[:-1]])
+
+
+def compact(mask: jnp.ndarray, arrays: Tuple[jnp.ndarray, ...], cap: int,
+            fill=0) -> Tuple[Tuple[jnp.ndarray, ...], jnp.ndarray]:
+    """Stable compaction of ``arrays`` rows where ``mask`` — jit-static cap.
+
+    Returns (compacted arrays, count). Rows beyond ``count`` hold ``fill``.
+    """
+    idx = jnp.cumsum(mask) - 1
+    dest = jnp.where(mask, idx, cap)  # out-of-range => dropped
+    outs = []
+    for a in arrays:
+        out = jnp.full((cap,) + a.shape[1:], fill, dtype=a.dtype)
+        outs.append(out.at[dest].set(a, mode="drop"))
+    return tuple(outs), jnp.sum(mask.astype(I32))
+
+
+def scan_level(seg: jnp.ndarray, crd: jnp.ndarray,
+               parent_ref: jnp.ndarray, parent_valid: jnp.ndarray,
+               cap: int) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray,
+                                  jnp.ndarray]:
+    """Expand the fibers addressed by ``parent_ref`` into a child stream.
+
+    Returns (crd, ref, parent_idx, valid) arrays of length ``cap``.
+    ``parent_ref < 0`` (holes from unions) scan as empty fibers.
+    """
+    if crd.shape[0] == 0:  # tensor level with no stored coordinates
+        z = jnp.zeros((cap,), I32)
+        return z, z, z, jnp.zeros((cap,), bool)
+    pr = jnp.clip(parent_ref, 0, seg.shape[0] - 2)
+    ok = parent_valid & (parent_ref >= 0)
+    lengths = jnp.where(ok, seg[pr + 1] - seg[pr], 0)
+    starts = exclusive_cumsum(lengths)
+    total = starts[-1] + lengths[-1] if lengths.shape[0] else jnp.zeros((), I32)
+    # segment id of each output slot: number of starts <= position
+    pos = jnp.arange(cap, dtype=starts.dtype)
+    sid = jnp.searchsorted(starts, pos, side="right") - 1
+    sid = jnp.clip(sid, 0, lengths.shape[0] - 1)
+    intra = pos - starts[sid]
+    valid = pos < total
+    ref = jnp.where(valid, seg[pr[sid]] + intra, 0)
+    out_crd = jnp.where(valid, crd[jnp.clip(ref, 0, crd.shape[0] - 1)], 0)
+    return out_crd.astype(I32), ref.astype(I32), sid.astype(I32), valid
+
+
+def intersect_keys(a_key, a_valid, b_key, b_valid):
+    """Sorted-key intersection. Returns (mask over a, b positions).
+
+    ``a_key``/``b_key`` must be sorted with invalid rows keyed PAD_KEY.
+    A surviving element keeps its position in *a*; its reference in *b*
+    is the searchsorted probe — which is both the two-finger merge and
+    the §4.2 gallop, collapsed into one data-parallel primitive.
+    """
+    idx = jnp.searchsorted(b_key, a_key)
+    idxc = jnp.clip(idx, 0, b_key.shape[0] - 1)
+    hit = (b_key[idxc] == a_key) & a_valid & (a_key != PAD_KEY)
+    hit = hit & b_valid[idxc]
+    return hit, idxc
+
+
+def union_keys(a_key, a_valid, b_key, b_valid, cap: int):
+    """Sorted-key union with per-side presence masks.
+
+    Returns (keys, in_a, a_pos, in_b, b_pos, valid) of length ``cap``.
+    """
+    a_key = jnp.where(a_valid, a_key, PAD_KEY)
+    b_key = jnp.where(b_valid, b_key, PAD_KEY)
+    allk = jnp.sort(jnp.concatenate([a_key, b_key]))
+    first = jnp.concatenate([jnp.ones((1,), bool), allk[1:] != allk[:-1]])
+    keep = first & (allk != PAD_KEY)
+    (keys,), count = compact(keep, (allk,), cap, fill=PAD_KEY)
+    valid = jnp.arange(cap) < count
+    ia = jnp.searchsorted(a_key, keys)
+    iac = jnp.clip(ia, 0, a_key.shape[0] - 1)
+    in_a = (a_key[iac] == keys) & valid
+    ib = jnp.searchsorted(b_key, keys)
+    ibc = jnp.clip(ib, 0, b_key.shape[0] - 1)
+    in_b = (b_key[ibc] == keys) & valid
+    return keys, in_a, iac, in_b, ibc, valid
+
+
+def locate_keys(level_seg, level_crd, parent_ref, probe_crd, valid):
+    """Def 4.1 locator: find ``probe_crd`` inside the fiber at parent_ref.
+
+    Returns (found mask, refs).
+    """
+    pr = jnp.clip(parent_ref, 0, level_seg.shape[0] - 2)
+    lo, hi = level_seg[pr], level_seg[pr + 1]
+    # searchsorted within [lo, hi) via global probe on keyed coordinates
+    n = level_crd.shape[0]
+
+    def probe_one(l, h, c):
+        i = jnp.searchsorted(level_crd, c, side="left")
+        # clamp into fiber range: gallop from lo
+        i = jnp.clip(i, l, jnp.maximum(h - 1, l))
+        hitc = level_crd[jnp.clip(i, 0, n - 1)]
+        return i, (hitc == c) & (i >= l) & (i < h)
+
+    idx, found = jax.vmap(probe_one)(lo, hi, probe_crd)
+    found = found & valid & (parent_ref >= 0) & (hi > lo)
+    return found, jnp.where(found, idx, 0).astype(I32)
+
+
+def sorted_segment_reduce(keys, vals, valid, cap: int):
+    """Def 3.7 reducer for n>=1: sum ``vals`` at equal ``keys``.
+
+    Keys encode (accumulation group, coordinate point). Returns
+    (unique_keys, summed_vals, valid) of length ``cap``. This is the op the
+    ``segment_reduce`` Pallas kernel implements for the TPU hot path.
+    """
+    keys = jnp.where(valid, keys, PAD_KEY)
+    order = jnp.argsort(keys)
+    sk = keys[order]
+    sv = jnp.where(valid[order], vals[order], 0.0)
+    first = jnp.concatenate([jnp.ones((1,), bool), sk[1:] != sk[:-1]])
+    seg_id = jnp.cumsum(first) - 1
+    sums = jax.ops.segment_sum(sv, seg_id, num_segments=keys.shape[0])
+    keep = first & (sk != PAD_KEY)
+    (uk, _), count = compact(keep, (sk, sk), cap, fill=PAD_KEY)
+    uv = sums[: cap] if cap <= keys.shape[0] else jnp.pad(
+        sums, (0, cap - keys.shape[0]))
+    # sums are indexed by seg_id order == compacted order
+    out_valid = jnp.arange(cap) < count
+    return uk, jnp.where(out_valid, uv, 0.0), out_valid
+
+
+def segment_sum(vals, parent_idx, valid, num_parents: int):
+    """Def 3.7 scalar reducer (n=0): one sum per parent fiber (zero-mode)."""
+    v = jnp.where(valid, vals, 0.0)
+    return jax.ops.segment_sum(v, parent_idx, num_segments=num_parents)

@@ -1,0 +1,381 @@
+"""Custard: compile tensor index notation + formats + schedule to SAM (§5).
+
+Lowering algorithm (paper Fig. 10, plus the dropper/reducer placement rules
+derived from §3.6-3.7 and validated against every row of Table 1):
+
+1. Parse to sum-of-products; each product term is lowered over its scope
+   ``vars(term) ∪ result_vars`` in the scheduled loop order.
+2. Tensor iteration & merging: walk index variables outer→inner. Per term,
+   a tensor with the variable gets a level scanner chained off its current
+   reference stream (or a locator, §4.2); with ≥2 in-term sources an m-ary
+   intersecter merges them. Result variables of multi-term expressions are
+   then merged across terms with an m-ary unioner. Tensors without the
+   variable get a repeater fed by the final (merged) coordinate stream.
+3. Computation: per term, value arrays load each tensor's final references;
+   an ALU tree multiplies them. Reductions are applied innermost-first; the
+   reducer dimension n = #result vars strictly below the reduced variable
+   (scalar/vector/matrix reducers of Def 3.7).
+4. Coordinate droppers:
+   * single-term: after each reduction stage, a dropper cleans the nearest
+     result variable above it, then the drop *cascades* to every result
+     variable further out; intersections below a result variable with no
+     reduction in between likewise trigger a dropper + cascade.
+   * multi-term: per-term droppers would delete union coordinates another
+     term still needs, so a single value-dropper chain cleans the final
+     result bottom-up (this reproduces Residual/MatTransMul's counts).
+5. Tensor construction: per result variable a level writer (+ one value
+   writer) stores the cleaned streams.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from . import graph as g
+from . import streams as st
+from .einsum import Access, Assignment, Term, parse
+from .schedule import Format, Schedule
+
+Port = Tuple[g.Node, str]
+
+
+@dataclasses.dataclass
+class _TermState:
+    term: Term
+    scope: Tuple[str, ...]                       # loop vars this term iterates
+    cur_ref: Dict[int, Port]                     # factor idx -> ref producer
+    crd: Dict[str, Port] = dataclasses.field(default_factory=dict)
+    val: Optional[Port] = None                   # combined value stream
+    # crd streams of result vars as currently cleaned (updated by reduce/drop)
+    out_crd: Dict[str, Port] = dataclasses.field(default_factory=dict)
+
+
+class Custard:
+    def __init__(self, assign: Assignment, fmt: Format, schedule: Schedule,
+                 dims: Dict[str, int]):
+        self.a = assign
+        self.fmt = fmt
+        self.s = schedule
+        self.dims = dims
+        self.graph = g.Graph(name=assign.lhs.tensor)
+        self.pos = {v: i for i, v in enumerate(schedule.loop_order)}
+        missing = [v for v in assign.all_vars if v not in self.pos]
+        if missing:
+            raise ValueError(f"loop order missing vars {missing}")
+        self.result_vars = [v for v in schedule.loop_order
+                            if v in assign.result_vars]
+
+    # ------------------------------------------------------------------
+    def compile(self) -> g.Graph:
+        G = self.graph
+        root = G.add(g.ROOT, "root")
+        terms: List[_TermState] = []
+        for t in self.a.terms:
+            scope = tuple(v for v in self.s.loop_order
+                          if v in t.vars or v in self.a.result_vars)
+            st_ = _TermState(term=t, scope=scope,
+                             cur_ref={i: (root, "ref")
+                                      for i in range(len(t.factors))})
+            terms.append(st_)
+
+        multi = len(terms) > 1
+        union_crd: Dict[str, Port] = {}
+
+        # -- 2. iteration & merging, variable by variable ------------------
+        for v in self.s.loop_order:
+            per_term_bundle: List[Tuple[_TermState, Port, List[Tuple[int, Port]]]] = []
+            for ts in terms:
+                if v not in ts.scope:
+                    continue
+                sources = [i for i, f in enumerate(ts.term.factors)
+                           if v in f.vars and (f.tensor, v) not in self.s.locate]
+                located = [i for i, f in enumerate(ts.term.factors)
+                           if v in f.vars and (f.tensor, v) in self.s.locate]
+                if not sources and not located:
+                    # broadcast-only var for this term: crd provided by the
+                    # union across terms (handled after union)
+                    per_term_bundle.append((ts, None, []))
+                    continue
+                use_bv = v in self.s.bitvector
+                scanned: List[Tuple[int, Port, Port]] = []  # (idx, crd, ref)
+                for i in sources:
+                    f = ts.term.factors[i]
+                    node = G.add(
+                        g.LEVEL_SCAN, f"{f.tensor}_{v}",
+                        tensor=f.tensor,
+                        mode=self.s.tensor_path(f.vars).index(v),
+                        var=v, bv=use_bv,
+                        lanes=self._lanes(v))
+                    src, port = ts.cur_ref[i]
+                    G.connect(src, port, node, "ref", st.REF)
+                    crd_port = (node, "bv" if use_bv else "crd")
+                    scanned.append((i, crd_port, (node, "ref")))
+                if len(scanned) >= 2:
+                    inter = G.add(
+                        g.INTERSECT, f"{v}_isect",
+                        arity=len(scanned), var=v,
+                        skip=(v in self.s.skip), bv=use_bv,
+                        lanes=self._lanes(v))
+                    for k, (i, crd_p, ref_p) in enumerate(scanned):
+                        G.connect(crd_p[0], crd_p[1], inter,
+                                  f"bv{k}" if use_bv else f"crd{k}",
+                                  st.BV if use_bv else st.CRD)
+                        G.connect(ref_p[0], ref_p[1], inter, f"ref{k}", st.REF)
+                    term_crd: Port = (inter, "crd")
+                    refs = [(i, (inter, f"ref{k}"))
+                            for k, (i, _, _) in enumerate(scanned)]
+                elif scanned:
+                    i, crd_p, ref_p = scanned[0]
+                    term_crd = crd_p
+                    refs = [(i, ref_p)]
+                    if use_bv and not located:
+                        # lone bitvector stream: recover crd/refs via a
+                        # 1-ary intersect (popcount reference recovery)
+                        inter = G.add(g.INTERSECT, f"{v}_bvrecover",
+                                      arity=1, var=v, bv=True,
+                                      lanes=self._lanes(v))
+                        G.connect(crd_p[0], crd_p[1], inter, "bv0", st.BV)
+                        G.connect(ref_p[0], ref_p[1], inter, "ref0", st.REF)
+                        term_crd = (inter, "crd")
+                        refs = [(i, (inter, "ref0"))]
+                else:
+                    term_crd = None
+                    refs = []
+                # locators probe with the merged coordinate stream
+                for i in located:
+                    f = ts.term.factors[i]
+                    loc = G.add(g.LOCATE, f"{f.tensor}_{v}_loc",
+                                tensor=f.tensor,
+                                mode=self.s.tensor_path(f.vars).index(v),
+                                var=v, lanes=self._lanes(v))
+                    if term_crd is None:
+                        raise ValueError(
+                            f"locate({f.tensor},{v}) needs a co-iterated "
+                            f"source stream")
+                    G.connect(term_crd[0], term_crd[1], loc, "crd", st.CRD)
+                    src, port = ts.cur_ref[i]
+                    G.connect(src, port, loc, "ref", st.REF)
+                    refs.append((i, (loc, "ref")))
+                per_term_bundle.append((ts, term_crd, refs))
+
+            if not per_term_bundle:
+                continue
+
+            # cross-term union at result variables
+            is_result = v in self.a.result_vars
+            active = [b for b in per_term_bundle if b[1] is not None]
+            if multi and is_result and len(active) > 1:
+                uni = G.add(g.UNION, f"{v}_union", arity=len(active), var=v,
+                            lanes=self._lanes(v))
+                for k, (ts, crd_p, refs) in enumerate(active):
+                    G.connect(crd_p[0], crd_p[1], uni, f"crd{k}", st.CRD)
+                    for j, (i, ref_p) in enumerate(refs):
+                        G.connect(ref_p[0], ref_p[1], uni, f"ref{k}_{j}", st.REF)
+                merged: Port = (uni, "crd")
+                union_crd[v] = merged
+                for k, (ts, crd_p, refs) in enumerate(active):
+                    ts.crd[v] = merged
+                    for j, (i, _) in enumerate(refs):
+                        ts.cur_ref[i] = (uni, f"ref{k}_{j}")
+            else:
+                for ts, crd_p, refs in per_term_bundle:
+                    crd_final = crd_p if crd_p is not None else union_crd.get(v)
+                    if crd_final is None:
+                        raise NotImplementedError(
+                            f"no coordinate source for {v} in term {ts.term}")
+                    ts.crd[v] = crd_final
+                    for i, ref_p in refs:
+                        ts.cur_ref[i] = ref_p
+
+            # repeaters for tensors missing v (fed by the final crd stream)
+            for ts, _, _ in per_term_bundle:
+                crd_src = ts.crd[v]
+                if v in self.a.result_vars:
+                    ts.out_crd[v] = crd_src
+                for i, f in enumerate(ts.term.factors):
+                    if v in f.vars:
+                        continue
+                    rep = G.add(g.REPEAT, f"{f.tensor}_rep_{v}",
+                                tensor=f.tensor, var=v, lanes=self._lanes(v))
+                    src, port = ts.cur_ref[i]
+                    G.connect(src, port, rep, "ref", st.REF)
+                    G.connect(crd_src[0], crd_src[1], rep, "crd", st.CRD)
+                    ts.cur_ref[i] = (rep, "ref")
+
+        # -- 3. computation -------------------------------------------------
+        for ts in terms:
+            vals: List[Port] = []
+            for i, f in enumerate(ts.term.factors):
+                arr = G.add(g.ARRAY, f"{f.tensor}_vals", tensor=f.tensor,
+                            lanes=self._lanes(None))
+                src, port = ts.cur_ref[i]
+                G.connect(src, port, arr, "ref", st.REF)
+                vals.append((arr, "val"))
+            cur = vals[0]
+            for nxt in vals[1:]:
+                alu = G.add(g.ALU, "mul", op="mul", lanes=self._lanes(None))
+                G.connect(cur[0], cur[1], alu, "a", st.VAL)
+                G.connect(nxt[0], nxt[1], alu, "b", st.VAL)
+                cur = (alu, "val")
+            ts.val = cur
+
+            # reductions, innermost first; each stage eagerly cleans the
+            # nearest result variable above it (paper §3.7; this eager
+            # per-stage placement is what produces e.g. MTTKRP's 3 droppers)
+            red_vars = [v for v in reversed(ts.scope)
+                        if v not in self.a.result_vars]
+            stage_drops: List[str] = []
+            for u in red_vars:
+                below = [w for w in self.result_vars
+                         if self.pos[w] > self.pos[u] and w in ts.scope]
+                n = len(below)
+                empty = self.s.reduce_empty or ("zero" if (n == 0) else "remove")
+                if multi and n == 0:
+                    empty = "zero"   # alignment across unioned terms
+                red = G.add(g.REDUCE, f"red_{u}", n=n, var=u, empty=empty,
+                            lanes=self._lanes(u))
+                G.connect(ts.val[0], ts.val[1], red, "val", st.VAL)
+                for k, w in enumerate(below):
+                    cp = ts.out_crd[w]
+                    G.connect(cp[0], cp[1], red, f"crd{k}", st.CRD)
+                    ts.out_crd[w] = (red, f"crd{k}")
+                ts.val = (red, "val")
+                if not multi:
+                    above = [w for w in self.result_vars
+                             if self.pos[w] < self.pos[u]]
+                    if above:
+                        w = above[-1]
+                        stage_drops.append(w)
+                        oc, val = self._drop_chain(
+                            {v: ts.out_crd[v] for v in self.result_vars},
+                            ts.val, [w])
+                        ts.out_crd.update(oc)
+                        ts.val = val
+
+            if not multi:
+                self._place_cascade_droppers(ts, stage_drops)
+
+        # -- combine terms ----------------------------------------------------
+        if multi:
+            cur = terms[0].val
+            if terms[0].term.sign < 0:
+                raise NotImplementedError("leading negative term")
+            for ts in terms[1:]:
+                alu = G.add(g.ALU, "addsub",
+                            op="sub" if ts.term.sign < 0 else "add")
+                G.connect(cur[0], cur[1], alu, "a", st.VAL)
+                G.connect(ts.val[0], ts.val[1], alu, "b", st.VAL)
+                cur = (alu, "val")
+            final_val = cur
+            out_crd = {v: union_crd.get(v, terms[0].out_crd.get(v))
+                       for v in self.result_vars}
+            # final value-dropper chain (bottom-up) if anything can vanish
+            needs_drop = any(
+                n.kind in (g.INTERSECT, g.REDUCE, g.LOCATE)
+                for n in G.nodes.values())
+            if needs_drop and self.result_vars:
+                out_crd, final_val = self._drop_chain(
+                    out_crd, final_val, [self.result_vars[-1]])
+        else:
+            final_val = terms[0].val
+            out_crd = dict(terms[0].out_crd)
+
+        # -- 5. construction ---------------------------------------------------
+        shape = tuple(self.dims[v] for v in self.result_vars)
+        out_fmt = self.fmt.of(self.a.lhs.tensor, len(self.result_vars))
+        # storage order follows the dataflow order; record the mode
+        # permutation so the result can be read back in lhs orientation
+        out_mode_order = tuple(self.a.lhs.vars.index(v)
+                               for v in self.result_vars)
+        val_writer = G.add(g.LEVEL_WRITE, f"{self.a.lhs.tensor}_vals",
+                           tensor=self.a.lhs.tensor, var="vals",
+                           shape=shape, format=out_fmt,
+                           mode_order=out_mode_order)
+        G.connect(final_val[0], final_val[1], val_writer, "val", st.VAL)
+        for k, v in enumerate(self.result_vars):
+            w = G.add(g.LEVEL_WRITE, f"{self.a.lhs.tensor}_{v}",
+                      tensor=self.a.lhs.tensor, var=v, pos=k,
+                      format=out_fmt)
+            cp = out_crd[v]
+            G.connect(cp[0], cp[1], w, "crd", st.CRD)
+
+        G.validate()
+        return G
+
+    # ------------------------------------------------------------------
+    def _lanes(self, v: Optional[str]) -> int:
+        if not self.s.parallelize:
+            return 1
+        # blocks at or below a parallelized variable get its lane count
+        if v is None:
+            return max(self.s.parallelize.values())
+        lanes = 1
+        for pv, l in self.s.parallelize.items():
+            if self.pos[v] >= self.pos[pv]:
+                lanes = max(lanes, l)
+        return lanes
+
+    def _place_cascade_droppers(self, ts: _TermState,
+                                stage_drops: List[str]) -> None:
+        """Cascade cleanup above the stage drops (+ rule C when none)."""
+        drops: List[str] = []
+        if stage_drops:
+            outermost = min(stage_drops, key=lambda v: self.pos[v])
+            for w in reversed(self.result_vars):
+                if self.pos[w] < self.pos[outermost]:
+                    drops.append(w)
+        else:
+            # rule C: an intersection below a result var (pure elementwise
+            # expressions with no reduction) still empties outer fibers
+            isect_levels = [n.params["var"] for n in self.graph.nodes.values()
+                            if n.kind in (g.INTERSECT, g.LOCATE)]
+            if isect_levels:
+                deepest = max(self.pos[v] for v in isect_levels)
+                above = [w for w in self.result_vars if self.pos[w] < deepest]
+                if above:
+                    drops = [w for w in reversed(self.result_vars)
+                             if self.pos[w] <= self.pos[above[-1]]]
+        if not drops:
+            return
+        drops.sort(key=lambda v: -self.pos[v])  # innermost-first
+        out_crd, val = self._drop_chain(
+            {v: ts.out_crd[v] for v in self.result_vars}, ts.val, drops)
+        ts.out_crd.update(out_crd)
+        ts.val = val
+
+    def _drop_chain(self, out_crd: Dict[str, Port], val: Port,
+                    drops: List[str]) -> Tuple[Dict[str, Port], Port]:
+        """Insert droppers for ``drops`` (innermost-first), cascading the
+        cleaned streams. Inner stream = next result level's crd stream, or
+        the value stream for the innermost result var."""
+        G = self.graph
+        out_crd = dict(out_crd)
+        for v in drops:
+            deeper = [w for w in self.result_vars if self.pos[w] > self.pos[v]]
+            inner_is_val = not deeper
+            node = G.add(g.CRD_DROP, f"drop_{v}", var=v,
+                         inner="vals" if inner_is_val else deeper[0])
+            cp = out_crd[v]
+            G.connect(cp[0], cp[1], node, "outer", st.CRD)
+            if inner_is_val:
+                G.connect(val[0], val[1], node, "inner", st.VAL)
+                val = (node, "inner")
+            else:
+                ip = out_crd[deeper[0]]
+                G.connect(ip[0], ip[1], node, "inner", st.CRD)
+                out_crd[deeper[0]] = (node, "inner")
+                # passengers: deeper crd streams + values
+                for pi, w in enumerate(deeper[1:]):
+                    pp = out_crd[w]
+                    G.connect(pp[0], pp[1], node, f"pass{pi}", st.CRD)
+                    out_crd[w] = (node, f"pass{pi}")
+                G.connect(val[0], val[1], node, f"pass{len(deeper) - 1}",
+                          st.VAL)
+                val = (node, f"pass{len(deeper) - 1}")
+            out_crd[v] = (node, "outer")
+        return out_crd, val
+
+
+def compile_expr(expr: str, fmt: Format, schedule: Schedule,
+                 dims: Dict[str, int]) -> g.Graph:
+    return Custard(parse(expr), fmt, schedule, dims).compile()

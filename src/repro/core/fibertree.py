@@ -1,0 +1,241 @@
+"""Fibertree tensor data model (paper §3.1) with per-level storage formats.
+
+A tensor is a coordinate tree: each level holds the coordinates of one
+dimension; only children with nonzero sub-trees are stored. Levels are
+independently assigned a storage format:
+
+* ``dense``      — uncompressed: stores only the dimension size; every
+                   coordinate is implicitly present (Fig. 3 left).
+* ``compressed`` — (seg, crd) arrays: segment ``[seg[r], seg[r+1])`` of the
+                   coordinate array is the fiber at parent reference ``r``
+                   (Fig. 1c: DCSR when every level is compressed).
+* ``bitvector``  — packed words; a set bit marks a nonempty sub-tree (§4.3).
+
+The in-memory layout feeds the SAM level scanners; ``from_dense``/
+``to_dense`` are the golden converters used throughout the tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+DENSE = "dense"
+COMPRESSED = "compressed"
+BITVECTOR = "bitvector"
+
+_FORMAT_ABBREV = {"d": DENSE, "c": COMPRESSED, "b": BITVECTOR,
+                  DENSE: DENSE, COMPRESSED: COMPRESSED, BITVECTOR: BITVECTOR}
+
+BV_WIDTH = 64  # bits per bitvector word (paper's Fig. 13 uses b=64)
+
+
+@dataclasses.dataclass
+class Level:
+    """One fibertree level in memory."""
+
+    format: str
+    dim: int                      # dense dimension size of this level
+    seg: Optional[np.ndarray] = None   # compressed: segment starts, len P+1
+    crd: Optional[np.ndarray] = None   # compressed: coordinates
+    words: Optional[np.ndarray] = None  # bitvector: packed uint64 words (P, W)
+
+    @property
+    def nnz(self) -> int:
+        if self.format == COMPRESSED:
+            return int(len(self.crd))
+        if self.format == BITVECTOR:
+            return int(sum(bin(int(w)).count("1") for w in self.words.ravel()))
+        raise ValueError("dense levels have implicit coordinates")
+
+    def fiber(self, ref: int) -> Tuple[np.ndarray, np.ndarray]:
+        """(coords, child_refs) of the fiber at parent reference ``ref``."""
+        if self.format == DENSE:
+            crds = np.arange(self.dim)
+            return crds, ref * self.dim + crds
+        if self.format == COMPRESSED:
+            lo, hi = int(self.seg[ref]), int(self.seg[ref + 1])
+            return self.crd[lo:hi], np.arange(lo, hi)
+        if self.format == BITVECTOR:
+            row = self.words[ref]
+            crds, refs = [], []
+            base = int(np.sum([bin(int(w)).count("1")
+                               for r in range(ref) for w in self.words[r]]))
+            count = base
+            for wi, w in enumerate(row):
+                w = int(w)
+                for b in range(BV_WIDTH):
+                    if w >> b & 1:
+                        crds.append(wi * BV_WIDTH + b)
+                        refs.append(count)
+                        count += 1
+            return np.asarray(crds, dtype=np.int64), np.asarray(refs, dtype=np.int64)
+        raise ValueError(self.format)
+
+    def num_fibers(self) -> int:
+        if self.format == COMPRESSED:
+            return len(self.seg) - 1
+        if self.format == BITVECTOR:
+            return len(self.words)
+        raise ValueError("dense levels have implicit fibers")
+
+
+@dataclasses.dataclass
+class FiberTree:
+    """A sparse tensor: a stack of levels plus the leaf value array."""
+
+    shape: Tuple[int, ...]
+    levels: List[Level]
+    vals: np.ndarray
+    mode_order: Tuple[int, ...] = None  # storage order of modes (default id)
+
+    def __post_init__(self):
+        if self.mode_order is None:
+            self.mode_order = tuple(range(len(self.shape)))
+
+    @property
+    def order(self) -> int:
+        return len(self.shape)
+
+    @property
+    def nnz(self) -> int:
+        return int(len(self.vals))
+
+    @property
+    def format_str(self) -> str:
+        return "".join(lv.format[0] for lv in self.levels)
+
+    # -- constructors -------------------------------------------------------
+    @staticmethod
+    def from_dense(arr: np.ndarray, formats: str | Sequence[str],
+                   mode_order: Sequence[int] | None = None) -> "FiberTree":
+        """Build a fibertree from a dense array.
+
+        ``formats`` is one letter per level, e.g. ``"dc"`` (CSR), ``"cc"``
+        (DCSR), ``"cb"`` (compressed over bitvector), applied in
+        ``mode_order`` (storage order; default row-major identity).
+        """
+        arr = np.asarray(arr)
+        if arr.ndim == 0:
+            return FiberTree(shape=(), levels=[],
+                             vals=arr.reshape(1).astype(np.float64))
+        if mode_order is not None:
+            arr = np.transpose(arr, mode_order)
+        else:
+            mode_order = tuple(range(arr.ndim))
+        fmts = [_FORMAT_ABBREV[f] for f in formats]
+        if len(fmts) != arr.ndim:
+            raise ValueError(f"{len(fmts)} formats for order-{arr.ndim} tensor")
+
+        coords = np.argwhere(arr != 0)          # (nnz, d) sorted row-major
+        vals = arr[tuple(coords.T)] if len(coords) else np.zeros(0)
+        return FiberTree._from_sorted_coords(
+            tuple(arr.shape), coords, np.asarray(vals, dtype=np.float64),
+            fmts, tuple(mode_order))
+
+    @staticmethod
+    def from_coords(shape: Sequence[int], coords: np.ndarray, vals: np.ndarray,
+                    formats: str | Sequence[str]) -> "FiberTree":
+        """Build from (nnz, d) coordinates (need not be sorted, no dups)."""
+        coords = np.asarray(coords).reshape(-1, len(shape))
+        vals = np.asarray(vals, dtype=np.float64)
+        key = np.lexsort(coords.T[::-1])
+        coords, vals = coords[key], vals[key]
+        fmts = [_FORMAT_ABBREV[f] for f in formats]
+        return FiberTree._from_sorted_coords(tuple(shape), coords, vals, fmts,
+                                             tuple(range(len(shape))))
+
+    @staticmethod
+    def _from_sorted_coords(shape, coords, vals, fmts, mode_order) -> "FiberTree":
+        d = len(shape)
+        levels: List[Level] = []
+        nnz = len(coords)
+
+        # Parent fiber id of each nonzero at each level: group rows by the
+        # coordinate prefix. Dense levels densify the prefix space.
+        # We iterate top-down, tracking the set of fibers (unique prefixes).
+        parent_ids = np.zeros(nnz, dtype=np.int64)   # fiber index per nonzero
+        num_parents = 1
+        for lvl in range(d):
+            fmt = fmts[lvl]
+            dim = shape[lvl]
+            c = coords[:, lvl] if nnz else np.zeros(0, dtype=np.int64)
+            if fmt == DENSE:
+                levels.append(Level(format=DENSE, dim=dim))
+                parent_ids = parent_ids * dim + c
+                num_parents = num_parents * dim
+            elif fmt == COMPRESSED:
+                # fibers keyed by (parent_id); coordinates sorted within
+                seg = np.zeros(num_parents + 1, dtype=np.int64)
+                if nnz:
+                    # unique (parent, coord) pairs are the stored entries
+                    pair_key = parent_ids * (dim + 1) + c
+                    uniq, inv = np.unique(pair_key, return_inverse=True)
+                    up = uniq // (dim + 1)
+                    uc = uniq % (dim + 1)
+                    counts = np.bincount(up, minlength=num_parents)
+                    seg[1:] = np.cumsum(counts)
+                    levels.append(Level(format=COMPRESSED, dim=dim,
+                                        seg=seg, crd=uc.astype(np.int64)))
+                    parent_ids = inv.astype(np.int64)
+                    num_parents = len(uniq)
+                else:
+                    levels.append(Level(format=COMPRESSED, dim=dim, seg=seg,
+                                        crd=np.zeros(0, dtype=np.int64)))
+                    num_parents = 0
+            elif fmt == BITVECTOR:
+                nwords = -(-dim // BV_WIDTH)
+                words = np.zeros((num_parents, nwords), dtype=np.uint64)
+                if nnz:
+                    pair_key = parent_ids * (dim + 1) + c
+                    uniq, inv = np.unique(pair_key, return_inverse=True)
+                    up = (uniq // (dim + 1)).astype(np.int64)
+                    uc = (uniq % (dim + 1)).astype(np.int64)
+                    for p, cc in zip(up, uc):
+                        words[p, cc // BV_WIDTH] |= np.uint64(1 << (cc % BV_WIDTH))
+                    levels.append(Level(format=BITVECTOR, dim=dim, words=words))
+                    parent_ids = inv.astype(np.int64)
+                    num_parents = len(uniq)
+                else:
+                    levels.append(Level(format=BITVECTOR, dim=dim, words=words))
+                    num_parents = 0
+            else:
+                raise ValueError(fmt)
+
+        # Leaf values: one per surviving (deepest-level) position. For dense
+        # trailing levels the value array is densified with explicit zeros.
+        if all(f != DENSE for f in fmts):
+            out_vals = vals
+        else:
+            out_vals = np.zeros(max(num_parents, 0))
+            if nnz:
+                out_vals[parent_ids] = vals
+        return FiberTree(shape=tuple(shape), levels=levels, vals=out_vals,
+                         mode_order=mode_order)
+
+    # -- conversions ---------------------------------------------------------
+    def to_dense(self) -> np.ndarray:
+        """Expand back to a dense array in the ORIGINAL (pre-mode-order) axes."""
+        if self.order == 0:
+            return np.asarray(self.vals[0])
+        out = np.zeros(tuple(self.shape))
+        for coord, v in self.items():
+            out[coord] += v
+        inv = np.argsort(self.mode_order)
+        # self.shape is in storage order; undo the transpose
+        return np.transpose(out, inv)
+
+    def items(self):
+        """Yield ((c0, c1, ...), value) for every stored position."""
+        def rec(lvl: int, ref: int, prefix: tuple):
+            if lvl == self.order:
+                yield prefix, float(self.vals[ref])
+                return
+            crds, refs = self.levels[lvl].fiber(ref)
+            for c, r in zip(crds, refs):
+                yield from rec(lvl + 1, int(r), prefix + (int(c),))
+        yield from rec(0, 0, ())
+
+    def root_fibers(self) -> int:
+        return 1

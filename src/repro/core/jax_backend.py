@@ -1,0 +1,399 @@
+"""JAX backend: binds SAM graphs to TPU-native coordinate-array execution.
+
+This is the deployable engine (the simulator keeps the paper's wire-level
+timing model). A Custard-produced SAM graph is walked in topological order
+— the same automatic binding the paper does for its simulator — but each
+block lowers to the data-parallel primitive from ``coord_ops``:
+
+  level scanner  -> ragged fiber expansion (scan_level)
+  intersecter    -> sorted-key searchsorted membership (predication mask)
+  locator        -> direct fiber probe
+  repeater       -> a gather:  ref[child.parent]
+  array/ALU      -> gathers / elementwise arithmetic
+  reducer n=0    -> per-fiber segment_sum (zero-mode comes for free)
+  reducer n>=1   -> ONE fused keyed segment-reduce over the final result
+                    coordinates. On TPU, cascading merge hardware is the
+                    wrong schedule — a single sort+segment-sum keyed by the
+                    result coordinates is the native Gustavson merge. All
+                    remaining reductions collapse into it (sums commute);
+                    this scheduling substitution is documented in DESIGN.md.
+  crd dropper    -> predication: nothing to do — ineffectual coordinates
+                    never reach the output COO (masks instead of token
+                    removal; the TPU has no token streams to clean).
+  level writer   -> final compaction into an output FiberTree.
+
+Streams carry a ``parent`` index array instead of stop tokens: element i of
+a level belongs to the fiber of element ``parent[i]`` one level up — the
+array encoding of the hierarchical control tokens of §3.2.
+
+Supported: any *single-term* expression (all of Table 1 except the additive
+rows) under any loop order with locate; multi-term expressions run one term
+at a time via ``execute_expr`` and are combined with a keyed union — the
+same factorization the paper applies to OuterSPACE's two-phase dataflow.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import coord_ops as co
+from . import graph as g
+from .einsum import Assignment, Term, parse
+from .fibertree import COMPRESSED, DENSE, FiberTree
+from .schedule import Format, Schedule, build_inputs
+
+PAD = co.PAD_KEY
+
+
+@dataclasses.dataclass
+class JLevel:
+    seg: jnp.ndarray
+    crd: jnp.ndarray
+    dim: int
+
+
+@dataclasses.dataclass
+class JTensor:
+    levels: List[JLevel]
+    vals: jnp.ndarray
+
+    @staticmethod
+    def from_fibertree(ft: FiberTree) -> "JTensor":
+        levels = []
+        num_parents = 1
+        for lv in ft.levels:
+            if lv.format == COMPRESSED:
+                levels.append(JLevel(jnp.asarray(lv.seg, jnp.int32),
+                                     jnp.asarray(lv.crd, jnp.int32), lv.dim))
+                num_parents = len(lv.crd)
+            elif lv.format == DENSE:
+                # densified: fiber r is [0, dim) with refs r*dim + c
+                seg = jnp.arange(num_parents + 1, dtype=jnp.int32) * lv.dim
+                crd = jnp.tile(jnp.arange(lv.dim, dtype=jnp.int32),
+                               num_parents)
+                levels.append(JLevel(seg, crd, lv.dim))
+                num_parents *= lv.dim
+            else:
+                raise NotImplementedError(
+                    f"JAX backend supports d/c levels, not {lv.format}")
+        return JTensor(levels, jnp.asarray(ft.vals, jnp.float32))
+
+
+@dataclasses.dataclass
+class CanonStream:
+    """Canonical iteration stream at one level (parent-indexed coords)."""
+
+    var: str
+    crd: jnp.ndarray
+    parent_idx: jnp.ndarray
+    valid: jnp.ndarray
+    dim: int
+    parent: Optional["CanonStream"]
+    _key: Optional[jnp.ndarray] = None
+
+    @property
+    def size(self) -> int:
+        return self.crd.shape[0]
+
+    def key(self) -> jnp.ndarray:
+        if self._key is None:
+            if self.parent is None:
+                base = jnp.zeros_like(self.crd, dtype=jnp.int64)
+            else:
+                pk = self.parent.key()
+                base = pk[jnp.clip(self.parent_idx, 0, pk.shape[0] - 1)]
+            k = base * self.dim + self.crd.astype(jnp.int64)
+            self._key = jnp.where(
+                self.valid & (base != PAD), k, PAD)
+        return self._key
+
+    def ancestors(self) -> List["CanonStream"]:
+        out, s = [], self
+        while s is not None:
+            out.append(s)
+            s = s.parent
+        return out  # innermost first
+
+
+@dataclasses.dataclass
+class RefStream:
+    stream: Optional[CanonStream]        # None => scalar/root alignment
+    ref: jnp.ndarray
+    valid: jnp.ndarray
+
+
+@dataclasses.dataclass
+class ValStream:
+    stream: Optional[CanonStream]
+    vals: jnp.ndarray
+    valid: jnp.ndarray
+
+
+@dataclasses.dataclass
+class COOResult:
+    keys: jnp.ndarray
+    vals: jnp.ndarray
+    valid: jnp.ndarray
+    strides: List[Tuple[str, int]]       # (var, dim) outer->inner
+
+
+class JaxBackend:
+    """Executes a single-term SAM graph on coordinate arrays."""
+
+    def __init__(self, graph_: g.Graph, tensors: Dict[str, JTensor],
+                 dims: Dict[str, int], result_vars: List[str]):
+        self.g = graph_
+        self.t = tensors
+        self.dims = dims
+        self.result_vars = result_vars
+        self.env: Dict[Tuple[int, str], Any] = {}
+        self.final: Optional[COOResult] = None
+
+    # -- helpers -------------------------------------------------------
+    def _ins(self, node):
+        return {e.dst_port: self.env[(e.src, e.src_port)]
+                for e in self.g.in_edges(node)}
+
+    @staticmethod
+    def _cap(n: int) -> int:
+        return max(8, int(np.ceil(n / 8)) * 8)
+
+    # -- handlers -------------------------------------------------------
+    def _root(self, node, ins):
+        return {"ref": RefStream(None, jnp.zeros((1,), jnp.int32),
+                                 jnp.ones((1,), bool))}
+
+    def _level_scan(self, node, ins):
+        t = self.t[node.params["tensor"]]
+        lv = t.levels[node.params["mode"]]
+        r: RefStream = ins["ref"]
+        pr = jnp.clip(r.ref, 0, lv.seg.shape[0] - 2)
+        lengths = jnp.where(r.valid & (r.ref >= 0), lv.seg[pr + 1] - lv.seg[pr], 0)
+        cap = self._cap(int(jnp.sum(lengths)))
+        crd, ref, sid, valid = co.scan_level(lv.seg, lv.crd, r.ref, r.valid, cap)
+        cs = CanonStream(var=node.params["var"], crd=crd, parent_idx=sid,
+                         valid=valid, dim=lv.dim, parent=r.stream)
+        return {"crd": cs, "ref": RefStream(cs, ref, valid)}
+
+    def _intersect(self, node, ins):
+        m = node.params.get("arity", 2)
+        crds: List[CanonStream] = [ins[f"crd{i}"] for i in range(m)]
+        refs: List[RefStream] = [ins[f"ref{i}"] for i in range(m)]
+        base = crds[0]
+        hit = base.valid
+        out_refs = [refs[0].ref]
+        out_refs_valid = [refs[0].valid]
+        akey = base.key()
+        for i in range(1, m):
+            bkey = crds[i].key()
+            h, idx = co.intersect_keys(akey, hit, bkey, crds[i].valid)
+            hit = h
+            out_refs.append(refs[i].ref[idx])
+            out_refs_valid.append(refs[i].valid[idx])
+        cs = CanonStream(var=base.var, crd=base.crd, parent_idx=base.parent_idx,
+                         valid=hit, dim=base.dim, parent=base.parent)
+        out = {"crd": cs}
+        for i in range(m):
+            out[f"ref{i}"] = RefStream(cs, out_refs[i],
+                                       hit & out_refs_valid[i])
+        return out
+
+    def _locate(self, node, ins):
+        t = self.t[node.params["tensor"]]
+        lv = t.levels[node.params["mode"]]
+        cs: CanonStream = ins["crd"]
+        pref: RefStream = ins["ref"]
+        # parent refs of the located tensor, gathered to element positions
+        if pref.stream is None:
+            par_ref = jnp.broadcast_to(pref.ref[0], cs.crd.shape)
+            par_ok = jnp.broadcast_to(pref.valid[0], cs.crd.shape)
+        else:
+            par_ref = pref.ref[cs.parent_idx]
+            par_ok = pref.valid[cs.parent_idx]
+        found, idx = co.locate_keys(lv.seg, lv.crd, par_ref, cs.crd,
+                                    cs.valid & par_ok)
+        return {"crd": cs, "ref": RefStream(cs, idx, found),
+                "ref_in": pref}
+
+    def _repeat(self, node, ins):
+        r: RefStream = ins["ref"]
+        cs: CanonStream = ins["crd"]
+        if r.stream is None:
+            ref = jnp.broadcast_to(r.ref[0], cs.crd.shape)
+            ok = jnp.broadcast_to(r.valid[0], cs.crd.shape) & cs.valid
+        else:
+            ref = r.ref[cs.parent_idx]
+            ok = r.valid[cs.parent_idx] & cs.valid
+        return {"ref": RefStream(cs, ref, ok)}
+
+    def _array(self, node, ins):
+        t = self.t[node.params["tensor"]]
+        r: RefStream = ins["ref"]
+        if t.vals.shape[0] == 0:   # tensor with no stored values
+            vals = jnp.zeros(r.ref.shape, jnp.float32)
+            return {"val": ValStream(r.stream, vals, r.valid)}
+        idx = jnp.clip(r.ref, 0, t.vals.shape[0] - 1)
+        vals = jnp.where(r.valid, t.vals[idx], 0.0)
+        return {"val": ValStream(r.stream, vals, r.valid)}
+
+    def _alu(self, node, ins):
+        a: ValStream = ins["a"]
+        b: ValStream = ins["b"]
+        op = node.params["op"]
+        f = {"mul": jnp.multiply, "add": jnp.add, "sub": jnp.subtract}[op]
+        if a.vals.shape != b.vals.shape:
+            raise ValueError("ALU operands misaligned in JAX backend")
+        return {"val": ValStream(a.stream, f(a.vals, b.vals),
+                                 a.valid | b.valid)}
+
+    def _reduce(self, node, ins):
+        v: ValStream = ins["val"]
+        if self.final is not None:      # already collapsed into final reduce
+            return {"val": v, **{f"crd{k}": ins[f"crd{k}"]
+                                 for k in range(int(node.params.get("n", 0)))
+                                 if f"crd{k}" in ins}}
+        n = int(node.params.get("n", 0))
+        cs = v.stream
+        if n == 0:
+            parent = cs.parent
+            num = parent.size if parent is not None else 1
+            sums = co.segment_sum(v.vals, cs.parent_idx, v.valid & cs.valid, num)
+            pvalid = parent.valid if parent is not None else jnp.ones((1,), bool)
+            return {"val": ValStream(parent, sums, pvalid)}
+        # n >= 1: fuse every remaining reduction into one keyed reduce over
+        # the final result coordinates.
+        coo = self._collapse_to_result(v)
+        self.final = coo
+        out = {"val": coo}
+        for k in range(n):
+            if f"crd{k}" in ins:
+                out[f"crd{k}"] = coo
+        return out
+
+    def _collapse_to_result(self, v: ValStream) -> COOResult:
+        cs = v.stream
+        chain = cs.ancestors()           # innermost first
+        strides: List[Tuple[str, int]] = []
+        key = jnp.zeros(cs.size, dtype=jnp.int64)
+        mult = 1
+        idx = jnp.arange(cs.size)
+        valid = v.valid & cs.valid
+        for s in chain:
+            if s.var in self.result_vars:
+                key = key + s.crd[idx].astype(jnp.int64) * mult
+                strides.append((s.var, self.dims[s.var]))
+                mult *= self.dims[s.var]
+            valid = valid & s.valid[idx]
+            if s.parent is not None:
+                idx = s.parent_idx[idx]
+        strides.reverse()                # outer -> inner
+        cap = self._cap(int(jnp.sum(valid)))
+        uk, uv, uvalid = co.sorted_segment_reduce(key, v.vals, valid, cap)
+        return COOResult(uk, uv, uvalid, strides)
+
+    def _crd_drop(self, node, ins):
+        # predication: masks already guarantee ineffectual coordinates never
+        # reach the output; explicit zeros are filtered at assembly.
+        out = {}
+        if "outer" in ins:
+            out["outer"] = ins["outer"]
+        if "inner" in ins:
+            out["inner"] = ins["inner"]
+        for k in ins:
+            if k.startswith("pass"):
+                out[k] = ins[k]
+        return out
+
+    def _level_write(self, node, ins):
+        return dict(ins)
+
+    def run(self) -> Dict[str, FiberTree]:
+        handlers = {
+            g.ROOT: self._root, g.LEVEL_SCAN: self._level_scan,
+            g.INTERSECT: self._intersect, g.UNION: self._union_unsupported,
+            g.REPEAT: self._repeat, g.ARRAY: self._array, g.ALU: self._alu,
+            g.REDUCE: self._reduce, g.CRD_DROP: self._crd_drop,
+            g.LOCATE: self._locate, g.LEVEL_WRITE: self._level_write,
+        }
+        for node in self.g.topo_order():
+            outs = handlers[node.kind](node, self._ins(node))
+            for port, val in outs.items():
+                self.env[(node.id, port)] = val
+        return self._assemble()
+
+    def _union_unsupported(self, node, ins):
+        raise NotImplementedError(
+            "multi-term graphs: use execute_expr (per-term + keyed union)")
+
+    # -- output assembly ---------------------------------------------------
+    def _assemble(self) -> Dict[str, FiberTree]:
+        out: Dict[str, FiberTree] = {}
+        for n in self.g.of_kind(g.LEVEL_WRITE):
+            if n.params.get("var") != "vals":
+                continue
+            v = self.env[(n.id, "val")]
+            tname = n.params["tensor"]
+            shape = n.params.get("shape", ())
+            mo = n.params.get("mode_order")
+            if isinstance(v, COOResult):
+                coo = v
+            elif isinstance(v, ValStream):
+                if v.stream is None:     # scalar result
+                    val = float(jnp.sum(jnp.where(v.valid, v.vals, 0.0)))
+                    out[tname] = FiberTree.from_dense(np.asarray(val), "")
+                    continue
+                coo = self._collapse_to_result(v)
+            else:
+                raise TypeError(type(v))
+            keys = np.asarray(coo.keys)
+            vals = np.asarray(coo.vals)
+            valid = np.asarray(coo.valid) & (vals != 0.0)
+            keys, vals = keys[valid], vals[valid]
+            coords = np.zeros((len(keys), len(coo.strides)), dtype=np.int64)
+            rem = keys
+            for col in range(len(coo.strides) - 1, -1, -1):
+                dim = coo.strides[col][1]
+                coords[:, col] = rem % dim
+                rem = rem // dim
+            fmt = n.params.get("format", "c" * len(coo.strides))
+            ft = FiberTree.from_coords(shape, coords, vals, fmt)
+            if mo is not None:
+                ft.mode_order = tuple(mo)
+            out[tname] = ft
+        return out
+
+
+# ---------------------------------------------------------------------------
+# public API
+# ---------------------------------------------------------------------------
+
+def execute_graph(graph_: g.Graph, tensors: Dict[str, FiberTree],
+                  dims: Dict[str, int], result_vars: List[str]
+                  ) -> Dict[str, FiberTree]:
+    jt = {k: JTensor.from_fibertree(v) for k, v in tensors.items()}
+    return JaxBackend(graph_, jt, dims, list(result_vars)).run()
+
+
+def execute_expr(expr: str, fmt: Format, schedule: Schedule,
+                 arrays: Dict[str, np.ndarray], dims: Dict[str, int]
+                 ) -> FiberTree:
+    """Compile + execute an expression; multi-term handled per term."""
+    from .custard import Custard
+
+    assign = parse(expr)
+    rvars = [v for v in schedule.loop_order if v in assign.result_vars]
+    shape = tuple(dims[v] for v in rvars)
+    total: Optional[np.ndarray] = None
+    for term in assign.terms:
+        sub = Assignment(lhs=assign.lhs, terms=(Term(1, term.factors),))
+        G = Custard(sub, fmt, schedule, dims).compile()
+        tensors = build_inputs(sub, fmt, schedule, arrays)
+        res = execute_graph(G, tensors, dims, rvars)
+        dense = res[assign.lhs.tensor].to_dense()
+        total = term.sign * dense if total is None else total + term.sign * dense
+    out_fmt = fmt.of(assign.lhs.tensor, len(rvars))
+    return FiberTree.from_dense(np.asarray(total), out_fmt or "")

@@ -1,0 +1,121 @@
+"""Custard's format and scheduling languages (paper §5, TACO input APIs).
+
+``Format`` assigns each tensor a per-level storage format string (one char
+per mode: d/c/b). ``Schedule`` carries the dataflow (index-variable) order
+and the §4 optimizations: iterate-locate, coordinate skipping, bitvector
+iteration, iteration splitting, and parallelization.
+
+``build_inputs`` constructs concordant fibertrees for a scheduled
+expression from dense numpy arrays: each tensor is stored with its modes
+ordered by the loop order (e.g. the outer-product SpM*SpM schedule stores B
+column-major), which is exactly the paper's assumption that formats are
+chosen to match the dataflow.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, FrozenSet, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .einsum import Assignment
+from .fibertree import FiberTree
+
+
+@dataclasses.dataclass
+class Format:
+    formats: Dict[str, str] = dataclasses.field(default_factory=dict)
+    default: str = "c"
+
+    def of(self, tensor: str, order: int) -> str:
+        return self.formats.get(tensor, self.default * order)
+
+
+@dataclasses.dataclass
+class Schedule:
+    loop_order: Sequence[str]
+    locate: FrozenSet[Tuple[str, str]] = frozenset()      # (tensor, var)
+    skip: FrozenSet[str] = frozenset()                     # vars w/ galloping
+    bitvector: FrozenSet[str] = frozenset()                # vars iterated as bv
+    split: Dict[str, int] = dataclasses.field(default_factory=dict)
+    parallelize: Dict[str, int] = dataclasses.field(default_factory=dict)
+    reduce_empty: Optional[str] = None                     # override zero/remove
+
+    def tensor_path(self, access_vars: Sequence[str]) -> Tuple[str, ...]:
+        """The tensor's level order under this schedule (concordant)."""
+        pos = {v: i for i, v in enumerate(self.loop_order)}
+        return tuple(sorted(access_vars, key=lambda v: pos[v]))
+
+
+def apply_split(assign_text: str, schedule: Schedule) -> Tuple[str, Schedule]:
+    """Rewrite ``v`` into ``(v_o, v_i)`` in an expression + schedule (§4.1).
+
+    Returns the rewritten expression text and schedule. The corresponding
+    data transformation happens in ``build_inputs`` (dimension reshaped to
+    (split, dim // split)).
+    """
+    if not schedule.split:
+        return assign_text, schedule
+    text = assign_text
+    order = []
+    for v in schedule.loop_order:
+        if v in schedule.split:
+            order += [f"{v}o", f"{v}i"]
+        else:
+            order.append(v)
+    import re
+    for v in schedule.split:
+        text = re.sub(rf"\b{v}\b(?![A-Za-z_0-9])", f"{v}o,{v}i", text)
+    new = dataclasses.replace(
+        schedule, loop_order=tuple(order), split={},
+        bitvector=frozenset(
+            {f"{v}i" if v in schedule.split else v for v in schedule.bitvector}
+            | {f"{v}o" for v in schedule.bitvector if v in schedule.split}),
+        skip=frozenset({f"{v}i" if v in schedule.split else v
+                        for v in schedule.skip}
+                       | {f"{v}o" for v in schedule.skip if v in schedule.split}),
+        locate=frozenset((t, f"{v}i" if v in schedule.split else v)
+                         for t, v in schedule.locate))
+    return text, new
+
+
+def build_inputs(assign: Assignment, fmt: Format, schedule: Schedule,
+                 arrays: Dict[str, np.ndarray],
+                 split_of: Optional[Dict[str, int]] = None
+                 ) -> Dict[str, FiberTree]:
+    """Construct concordant FiberTrees for every input tensor."""
+    out: Dict[str, FiberTree] = {}
+    split_of = split_of or {}
+    for term in assign.terms:
+        for acc in term.factors:
+            if acc.tensor in out:
+                continue
+            arr = np.asarray(arrays[acc.tensor], dtype=np.float64)
+            # split vars: adjacent (vo, vi) pairs reshape the original axis
+            # into (factor, dim/factor) chunks
+            ax = 0
+            for v in acc.vars:
+                if (v.endswith("o") and v[:-1] in split_of
+                        and ax < arr.ndim):
+                    arr = split_dense(arr, ax, split_of[v[:-1]])
+                    ax += 2
+                else:
+                    ax += 1
+            path = schedule.tensor_path(acc.vars)
+            mode_order = tuple(acc.vars.index(v) for v in path)
+            out[acc.tensor] = FiberTree.from_dense(
+                arr, fmt.of(acc.tensor, arr.ndim), mode_order=mode_order)
+    return out
+
+
+def split_dense(arr: np.ndarray, axis: int, factor: int) -> np.ndarray:
+    """Reshape one axis into (factor, dim/factor) chunks (§4.1 splitting)."""
+    d = arr.shape[axis]
+    pad = (-d) % factor
+    if pad:
+        widths = [(0, 0)] * arr.ndim
+        widths[axis] = (0, pad)
+        arr = np.pad(arr, widths)
+    new_shape = (arr.shape[:axis] + (factor, (d + pad) // factor)
+                 + arr.shape[axis + 1:])
+    return arr.reshape(new_shape)

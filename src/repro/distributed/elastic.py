@@ -1,0 +1,70 @@
+"""Elastic scaling: re-lay-out a training state onto a different mesh.
+
+When the fleet grows or shrinks (node failure absorbed by restart with
+fewer hosts, or capacity added), the sharding rules in sharding.py are
+pure functions of (mesh, param path/shape) — so resharding is: rebuild the
+mesh, recompute every leaf's NamedSharding, and device_put the checkpoint
+onto it. Divisibility is validated (a 16-way TP dim cannot move to a
+12-way axis) and the nearest valid mesh is suggested.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+
+from .sharding import params_shardings
+
+
+def validate_mesh_for(params, mesh: Mesh) -> list:
+    """Returns a list of (path, shape, axis) divisibility violations."""
+    problems = []
+    shardings = params_shardings(params, mesh)
+
+    def check(path, leaf, sh):
+        spec = sh.spec
+        shape = np.shape(leaf)
+        for dim, axes in enumerate(spec):
+            if axes is None:
+                continue
+            axes_t = axes if isinstance(axes, tuple) else (axes,)
+            size = int(np.prod([mesh.shape[a] for a in axes_t]))
+            if dim < len(shape) and shape[dim] % size != 0:
+                problems.append((jax.tree_util.keystr(path), shape, axes))
+
+    jax.tree_util.tree_map_with_path(check, params, shardings)
+    return problems
+
+
+def reshard(state, new_mesh: Mesh):
+    """Re-lay-out (host-resident or device) state onto ``new_mesh``."""
+    problems = validate_mesh_for(state, new_mesh)
+    if problems:
+        raise ValueError(f"mesh {dict(new_mesh.shape)} incompatible: "
+                         f"{problems[:3]} (+{max(0, len(problems)-3)} more)")
+    shardings = params_shardings(state, new_mesh)
+    return jax.tree.map(
+        lambda leaf, sh: jax.device_put(np.asarray(jax.device_get(leaf)), sh),
+        state, shardings)
+
+
+def shrink_mesh(mesh: Mesh, failed_hosts: int, devices_per_host: int
+                ) -> Tuple[Optional[Mesh], int]:
+    """Propose a replacement mesh after losing ``failed_hosts`` hosts:
+    keep the model axis (TP topology is rigid), shrink the data axis."""
+    axes = dict(mesh.shape)
+    model = axes.get("model", 1)
+    lost = failed_hosts * devices_per_host
+    total = mesh.devices.size - lost
+    data = total // (model * axes.get("pod", 1))
+    if data < 1:
+        return None, 0
+    new_shape = tuple(v for v in ((axes.get("pod"), "pod"),
+                                  (data, "data"), (model, "model"))
+                      if v[0] is not None)
+    names = tuple(n for _, n in new_shape)
+    dims = tuple(d for d, _ in new_shape)
+    devs = np.asarray(mesh.devices).reshape(-1)[: int(np.prod(dims))]
+    return Mesh(devs.reshape(dims), names), data

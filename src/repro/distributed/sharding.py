@@ -1,0 +1,239 @@
+"""Sharding rules: DP/FSDP over (pod, data), TP/EP over model.
+
+Rules are path+shape based so every architecture family shares one policy:
+
+  * 2D projection weights (D_in, D_out): FSDP on the input axis over
+    (pod, data), tensor-parallel on the output axis over model — column
+    parallel for up/qkv projections, row parallel (reversed) for
+    down/output projections (``_ROW_PARALLEL`` suffixes).
+  * MoE expert stacks (E, D, F): expert-parallel — E over model.
+  * Embeddings (V, D): vocab over model, d_model over (pod, data).
+  * Per-layer scan stacks have a leading L axis: spec gets None prefixed.
+  * Norms / small vectors: replicated.
+
+Batch specs shard the global batch over (pod, data). The same rules drive
+both meshes: (data, model) single-pod and (pod, data, model) multi-pod —
+the pod axis joins the FSDP/DP group, making the gradient reduction
+hierarchical (reduce-scatter intra-pod, all-reduce inter-pod under SPMD).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# parameter-name suffixes that are ROW parallel (contract model-sharded dim)
+_ROW_PARALLEL = ("wo", "w_down", "out_proj")
+# names that carry a leading expert axis
+_EXPERT = ("w_gate", "w_up", "w_down")
+_REPLICATE_SMALL = 2 ** 16
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def path_str(path) -> str:
+    out = []
+    for p_ in path:
+        if hasattr(p_, "key"):
+            out.append(str(p_.key))
+        elif hasattr(p_, "idx"):
+            out.append(str(p_.idx))
+    return "/".join(out)
+
+
+def _fit_spec(spec: P, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Drop sharding on any dim the mesh axes do not divide."""
+    out = []
+    for dim, axes in enumerate(spec):
+        if axes is None or dim >= len(shape):
+            out.append(None)
+            continue
+        axes_t = axes if isinstance(axes, tuple) else (axes,)
+        size = int(np.prod([mesh.shape[a] for a in axes_t]))
+        out.append(axes if shape[dim] % size == 0 else None)
+    return P(*out)
+
+
+def param_spec(path: str, shape: Tuple[int, ...], mesh: Mesh,
+               stacked: bool = True, fsdp: bool = True) -> P:
+    """PartitionSpec for one parameter."""
+    return _fit_spec(_param_spec(path, shape, mesh, stacked, fsdp),
+                     shape, mesh)
+
+
+def _param_spec(path: str, shape: Tuple[int, ...], mesh: Mesh,
+                stacked: bool = True, fsdp: bool = True) -> P:
+    daxes = data_axes(mesh)
+    name = path.split("/")[-1]
+    in_moe = "/moe/" in path or path.endswith(tuple(
+        "moe/" + e for e in _EXPERT))
+    nd = len(shape)
+    # scan-stacked leaves have a leading layer axis
+    lead: Tuple[Optional[Any], ...] = ()
+    core = shape
+    if stacked and nd >= 2 and ("layers" in path or "mamba_layers" in path
+                                or "mlstm_layers" in path):
+        lead = (None,)
+        core = shape[1:]
+        nd -= 1
+
+    if int(np.prod(shape)) < _REPLICATE_SMALL or nd == 1:
+        return P(*(lead + (None,) * nd))
+
+    if in_moe and nd == 3 and name in _EXPERT:
+        # (E, D, F): expert-parallel on E ONLY. Never shard the D/F
+        # contraction dims over data: XLA would partial-sum the (huge)
+        # expert activations and all-reduce them (measured: §Perf iter 3).
+        # When E divides model x data, spread experts across both.
+        for cand in (P(("model",) + daxes), P(("model", "data")),
+                     P("model")):
+            if _fit_spec(cand, core[:1], mesh) == cand:
+                return P(*(lead + tuple(cand) + (None, None)))
+        return P(*(lead + (None, None, None)))
+    if name == "embed":
+        # vocab-parallel preferred; fall back for non-divisible vocabs
+        for cand in (P("model", daxes if fsdp else None),
+                     P(None, "model"), P(None, daxes)):
+            if _fit_spec(cand, shape, mesh) == cand:
+                return P(*(lead + tuple(cand)))
+        return P(*(lead + (None, None)))
+    if name == "lm_head":
+        return P(*(lead + (daxes if fsdp else None, "model")))
+    if nd == 2:
+        if name in _ROW_PARALLEL:
+            return P(*(lead + ("model", daxes if fsdp else None)))
+        return P(*(lead + (daxes if fsdp else None, "model")))
+    if nd == 3:
+        # e.g. slstm recurrent blocks (H, hd, 4hd)
+        return P(*(lead + (None,) * nd))
+    return P(*(lead + (None,) * nd))
+
+
+def params_shardings(params, mesh: Mesh, fsdp: bool = True):
+    def spec(path, leaf):
+        return NamedSharding(
+            mesh, param_spec(path_str(path), np.shape(leaf), mesh, fsdp=fsdp))
+    return jax.tree_util.tree_map_with_path(spec, params)
+
+
+def batch_spec(mesh: Mesh, ndim: int, seq_shard: bool = False) -> P:
+    """Batch arrays: leading axis over (pod, data). ``seq_shard`` shards
+    axis 1 (sequence) over the data group instead — used for long-context
+    decode where global_batch=1 (KV/sequence parallelism)."""
+    daxes = data_axes(mesh)
+    if seq_shard:
+        return P(None, daxes, *([None] * (ndim - 2)))
+    return P(daxes, *([None] * (ndim - 1)))
+
+
+def batch_shardings(mesh: Mesh, batch, seq_shard: bool = False):
+    return jax.tree.map(
+        lambda a: NamedSharding(mesh, batch_spec(mesh, np.ndim(a),
+                                                 seq_shard)), batch)
+
+
+_STACKED_CACHE_SEGS = ("layers", "dense_layers", "mlstm", "mamba")
+
+
+def cache_spec(mesh: Mesh, path: str, shape: Tuple[int, ...],
+               batch_sharded: bool) -> P:
+    """KV/state caches: batch over (pod,data) when batch is shardable,
+    otherwise shard the sequence axis (long_500k); heads stay replicated
+    (they travel with the model-parallel attention output all-reduce).
+    Scan-stacked caches carry a leading L axis (replicated)."""
+    daxes = data_axes(mesh)
+    segs = path.split("/")
+    name = segs[-1]
+    lead: Tuple = ()
+    core = shape
+    if any(s in _STACKED_CACHE_SEGS for s in segs[:-1]):
+        lead = (None,)
+        core = shape[1:]
+    nd = len(core)
+    if name == "pos":
+        spec = P(*(lead + ((daxes,) if batch_sharded and nd else
+                           (None,) * nd)))
+    elif batch_sharded:
+        # batch over (pod, data); the sequence axis of KV-shaped caches
+        # additionally shards over model (32k-context caches dominate HBM)
+        if nd >= 3:
+            spec = P(*(lead + (daxes, "model") + (None,) * (nd - 2)))
+        else:
+            spec = P(*(lead + (daxes,) + (None,) * (nd - 1)))
+    elif nd >= 2:
+        # batch=1: shard the sequence axis (KV/sequence parallelism)
+        spec = P(*(lead + (None, daxes) + (None,) * (nd - 2)))
+    else:
+        spec = P(*(lead + (None,) * nd))
+    return _fit_spec(spec, shape, mesh)
+
+
+def cache_shardings(mesh: Mesh, caches, batch_sharded: bool = True):
+    def spec(path, leaf):
+        return NamedSharding(
+            mesh, cache_spec(mesh, path_str(path), np.shape(leaf),
+                             batch_sharded))
+    return jax.tree_util.tree_map_with_path(spec, caches)
+
+
+# ---------------------------------------------------------------------------
+# activation sharding constraints (set by launchers, no-op in plain tests)
+# ---------------------------------------------------------------------------
+_ACT_POLICY: dict | None = None
+
+
+def set_activation_policy(mesh: Optional[Mesh], *,
+                          batch_axes: Optional[Tuple[str, ...]] = None,
+                          model_axis: Optional[str] = "model",
+                          seq_axis: Optional[str] = None) -> None:
+    """Install the activation-sharding policy used by ``shard_activation``.
+
+    ``batch_axes`` default to the mesh's (pod, data) group. ``seq_axis``
+    shards the sequence dimension instead (long-context batch=1 cells).
+    Pass ``mesh=None`` to clear.
+    """
+    global _ACT_POLICY
+    if mesh is None:
+        _ACT_POLICY = None
+        return
+    _ACT_POLICY = {
+        "mesh": mesh,
+        "batch": batch_axes if batch_axes is not None else data_axes(mesh),
+        "model": model_axis if model_axis in mesh.axis_names else None,
+        "seq": seq_axis,
+    }
+
+
+def data_group_size() -> int:
+    """Number of shards in the (pod, data) group under the active policy."""
+    if _ACT_POLICY is None:
+        return 1
+    mesh = _ACT_POLICY["mesh"]
+    g = 1
+    for a in _ACT_POLICY["batch"] or ():
+        g *= dict(mesh.shape).get(a, 1)
+    return g
+
+
+def shard_activation(x, kind: str = "btd"):
+    """Constraint hook called from model code. kinds:
+    ``btd`` (batch, seq, d_model) — batch over (pod,data);
+    ``logits`` — batch over (pod,data), vocab over model."""
+    if _ACT_POLICY is None:
+        return x
+    pol = _ACT_POLICY
+    nd = x.ndim
+    if pol["seq"] and nd >= 2:
+        spec = P(None, pol["batch"], *([None] * (nd - 2)))
+    elif kind == "logits":
+        spec = P(pol["batch"], *([None] * (nd - 2)), pol["model"])
+    else:
+        spec = P(pol["batch"], *([None] * (nd - 1)))
+    spec = _fit_spec(spec, x.shape, pol["mesh"])
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(pol["mesh"], spec))

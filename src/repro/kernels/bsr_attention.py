@@ -1,0 +1,113 @@
+"""Block-sparse flash attention: fused SDDMM -> softmax -> SpMM.
+
+This is the SAM SDDMM+SpMM pipeline (the paper's fused dataflow of §6.3)
+compiled into a single resident-accumulator kernel: for each query block,
+only the kv blocks named in the BCSR mask are visited; scores, the running
+softmax (max/sum), and the weighted-value accumulation all stay in VMEM.
+Work and memory traffic are proportional to surviving blocks — the fused
+asymptotic advantage of Fig. 11 — while each visit is MXU-shaped.
+
+Layout (per batch*head):
+  q        : (BH, S, D)
+  k, v     : (BH, S, D)
+  kv_idx   : (n_qblk, max_kv) block-col per slot, padded with ``n_kvblk``
+             (an out-of-range sentinel that masks the whole slot)
+  causal   : additionally applies the within-block triangular mask on
+             diagonal blocks and masks above-diagonal slots
+
+Grid = (BH, n_qblk, max_kv); kv innermost with (acc, m, l) VMEM scratch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(kv_idx_ref, q_ref, k_ref, v_ref, o_ref,
+            acc_ref, m_ref, l_ref, *, scale, causal, bq, bkv, n_kvblk):
+    qi = pl.program_id(1)
+    s = pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    kv_blk = kv_idx_ref[qi, s]
+    valid = kv_blk < n_kvblk
+
+    qb = q_ref[0].astype(jnp.float32)
+    kb = k_ref[0].astype(jnp.float32)
+    scores = jnp.dot(qb, kb.T, preferred_element_type=jnp.float32) * scale
+
+    if causal:
+        q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+        k_pos = kv_blk * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+        scores = jnp.where(q_pos >= k_pos, scores, NEG_INF)
+    scores = jnp.where(valid, scores, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(scores, axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(scores - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    vb = v_ref[0].astype(jnp.float32)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, vb, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(s == pl.num_programs(2) - 1)
+    def _():
+        l = l_ref[...]
+        safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_ref[...] / safe).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bq", "bkv", "causal", "interpret"))
+def bsr_flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        kv_idx: jnp.ndarray, *, bq: int = 128,
+                        bkv: int = 128, scale: float | None = None,
+                        causal: bool = False,
+                        interpret: bool = False) -> jnp.ndarray:
+    bh, s, d = q.shape
+    n_qblk, max_kv = kv_idx.shape
+    n_kvblk = k.shape[1] // bkv
+    assert n_qblk == s // bq
+    scale = float(scale if scale is not None else 1.0 / d ** 0.5)
+
+    grid = (bh, n_qblk, max_kv)
+    spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, qi, si, idx: (b, qi, 0)),
+            pl.BlockSpec((1, bkv, d),
+                         lambda b, qi, si, idx: (
+                             b, jnp.minimum(idx[qi, si],
+                                            k.shape[1] // bkv - 1), 0)),
+            pl.BlockSpec((1, bkv, d),
+                         lambda b, qi, si, idx: (
+                             b, jnp.minimum(idx[qi, si],
+                                            k.shape[1] // bkv - 1), 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, qi, si, idx: (b, qi, 0)),
+        scratch_shapes=[pltpu.VMEM((bq, d), jnp.float32),
+                        pltpu.VMEM((bq, 1), jnp.float32),
+                        pltpu.VMEM((bq, 1), jnp.float32)],
+    )
+    kern = functools.partial(_kernel, scale=scale, causal=causal, bq=bq,
+                             bkv=bkv, n_kvblk=n_kvblk)
+    return pl.pallas_call(
+        kern,
+        grid_spec=spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(kv_idx, q, k, v)

@@ -1,0 +1,93 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to auto: Python-interpreted on CPU (this container),
+compiled Mosaic on real TPU. All wrappers accept/return standard jnp arrays
+and handle BSR bookkeeping (building padded slot maps from COO block
+coordinates, sentinel padding, causal local masks).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .bsr_attention import bsr_flash_attention as _bsr_attn
+from .segment_reduce import segment_reduce as _segment_reduce
+from .sddmm_bsr import sddmm_bsr as _sddmm
+from .spmm_bsr import spmm_bsr as _spmm
+
+
+def _auto_interpret(interpret: Optional[bool]) -> bool:
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+def bsr_from_block_coords(rows: np.ndarray, cols: np.ndarray,
+                          blocks: np.ndarray, n_brow: int
+                          ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """COO block coordinates -> padded per-row slot maps for spmm_bsr.
+
+    Returns (blk_map, col_idx, blocks_padded); pad slots point at the
+    appended all-zero block.
+    """
+    rows = np.asarray(rows)
+    cols = np.asarray(cols)
+    nnzb = len(rows)
+    counts = np.bincount(rows, minlength=n_brow)
+    max_nnz = max(int(counts.max(initial=0)), 1)
+    blk_map = np.full((n_brow, max_nnz), nnzb, dtype=np.int32)
+    col_idx = np.zeros((n_brow, max_nnz), dtype=np.int32)
+    slot = np.zeros(n_brow, dtype=np.int64)
+    for b, (r, c) in enumerate(zip(rows, cols)):
+        blk_map[r, slot[r]] = b
+        col_idx[r, slot[r]] = c
+        slot[r] += 1
+    zeros = np.zeros((1,) + blocks.shape[1:], blocks.dtype)
+    return blk_map, col_idx, np.concatenate([blocks, zeros], axis=0)
+
+
+def spmm_bsr(blk_map, col_idx, blocks, c, *, n_tile: int = 128,
+             interpret: Optional[bool] = None):
+    return _spmm(jnp.asarray(blk_map), jnp.asarray(col_idx),
+                 jnp.asarray(blocks), jnp.asarray(c), n_tile=n_tile,
+                 interpret=_auto_interpret(interpret))
+
+
+def sddmm_bsr(rows, cols, a, b, bs: int = 128, *, k_tile: int = 128,
+              interpret: Optional[bool] = None):
+    return _sddmm(jnp.asarray(rows), jnp.asarray(cols), jnp.asarray(a),
+                  jnp.asarray(b), bs, k_tile=k_tile,
+                  interpret=_auto_interpret(interpret))
+
+
+def bsr_flash_attention(q, k, v, kv_idx, *, bq: int = 128, bkv: int = 128,
+                        scale: Optional[float] = None, causal: bool = False,
+                        interpret: Optional[bool] = None):
+    return _bsr_attn(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                     jnp.asarray(kv_idx), bq=bq, bkv=bkv, scale=scale,
+                     causal=causal, interpret=_auto_interpret(interpret))
+
+
+def segment_reduce(vals, seg_ids, *, num_segments: int, t_tile: int = 512,
+                   d_tile: int = 128, interpret: Optional[bool] = None):
+    return _segment_reduce(jnp.asarray(vals), jnp.asarray(seg_ids),
+                           num_segments=num_segments, t_tile=t_tile,
+                           d_tile=d_tile,
+                           interpret=_auto_interpret(interpret))
+
+
+def sliding_window_kv_idx(n_qblk: int, n_kvblk: int, window_blocks: int,
+                          causal: bool = True) -> np.ndarray:
+    """BCSR mask for sliding-window attention: each q block attends to the
+    ``window_blocks`` kv blocks at/before it (the sub-quadratic long-context
+    path). Padded with the out-of-range sentinel ``n_kvblk``."""
+    idx = np.full((n_qblk, window_blocks), n_kvblk, dtype=np.int32)
+    for qi in range(n_qblk):
+        hi = qi if causal else min(qi + window_blocks // 2, n_kvblk - 1)
+        lo = max(0, hi - window_blocks + 1)
+        w = list(range(lo, hi + 1))
+        idx[qi, :len(w)] = w
+    return idx

@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def spmm_bsr_ref(blk_map, col_idx, blocks, c):
+    """Densify the BSR matrix and multiply."""
+    n_brow, max_nnz = blk_map.shape
+    bs = blocks.shape[1]
+    k_dim = c.shape[0]
+    dense = jnp.zeros((n_brow * bs, k_dim), blocks.dtype)
+    for i in range(n_brow):
+        for s in range(max_nnz):
+            b = blk_map[i, s]
+            j = col_idx[i, s]
+            blk = blocks[b]
+            dense = dense.at[i * bs:(i + 1) * bs,
+                             j * bs:(j + 1) * bs].add(blk)
+    return dense @ c
+
+
+def sddmm_bsr_ref(rows, cols, a, b, bs):
+    full = a @ b.T
+    out = []
+    for r, c in zip(rows, cols):
+        out.append(full[r * bs:(r + 1) * bs, c * bs:(c + 1) * bs])
+    return jnp.stack(out)
+
+
+def bsr_flash_attention_ref(q, k, v, kv_idx, *, bq, bkv, scale=None,
+                            causal=False):
+    """Dense attention restricted to the block mask."""
+    bh, s, d = q.shape
+    n_qblk, max_kv = kv_idx.shape
+    n_kvblk = k.shape[1] // bkv
+    scale = float(scale if scale is not None else 1.0 / d ** 0.5)
+    mask = jnp.zeros((s, k.shape[1]), bool)
+    for qi in range(n_qblk):
+        for slot in range(max_kv):
+            kb = int(kv_idx[qi, slot])
+            if kb >= n_kvblk:
+                continue
+            mask = mask.at[qi * bq:(qi + 1) * bq,
+                           kb * bkv:(kb + 1) * bkv].set(True)
+    if causal:
+        causal_m = jnp.tril(jnp.ones((s, k.shape[1]), bool))
+        mask = mask & causal_m
+    scores = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    scores = jnp.where(mask[None], scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)  # fully-masked rows
+    out = jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def segment_reduce_ref(vals, seg_ids, *, num_segments):
+    return jax.ops.segment_sum(vals, seg_ids, num_segments=num_segments)

@@ -1,0 +1,66 @@
+"""Block SDDMM kernel: out_b = A[row_b] @ B[col_b]^T for each mask block.
+
+SDDMM is the paper's flagship fusion example (Fig. 11): computing the dense
+product only at the sampled (nonzero) positions. At block granularity on
+TPU, the sampled positions are BCSR blocks and each one is a dense MXU
+matmul — work is proportional to surviving blocks, the fused asymptotic
+win of §6.3.
+
+Layout:
+  a        : (M, K) dense        (e.g. Q)
+  b        : (N, K) dense        (e.g. K — contracted along K)
+  rows     : (nnzb,) block-row of each sampled block
+  cols     : (nnzb,) block-col of each sampled block
+  out      : (nnzb, bs, bs) sampled dense blocks
+
+Grid = (nnzb, k_tiles); K is tiled and accumulated in VMEM scratch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(rows_ref, cols_ref, a_ref, b_ref, o_ref, acc_ref):
+    kt = pl.program_id(1)
+
+    @pl.when(kt == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(a_ref[...], b_ref[...].T,
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(kt == pl.num_programs(1) - 1)
+    def _():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bs", "k_tile", "interpret"))
+def sddmm_bsr(rows: jnp.ndarray, cols: jnp.ndarray, a: jnp.ndarray,
+              b: jnp.ndarray, bs: int = 128, *, k_tile: int = 128,
+              interpret: bool = False) -> jnp.ndarray:
+    nnzb = rows.shape[0]
+    m, k_dim = a.shape
+    assert k_dim % k_tile == 0, (k_dim, k_tile)
+    grid = (nnzb, k_dim // k_tile)
+    spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bs, k_tile), lambda nb, kt, r, c: (r[nb], kt)),
+            pl.BlockSpec((bs, k_tile), lambda nb, kt, r, c: (c[nb], kt)),
+        ],
+        out_specs=pl.BlockSpec((1, bs, bs), lambda nb, kt, r, c: (nb, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((bs, bs), jnp.float32)],
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=spec,
+        out_shape=jax.ShapeDtypeStruct((nnzb, bs, bs), a.dtype),
+        interpret=interpret,
+    )(rows, cols, a, b)

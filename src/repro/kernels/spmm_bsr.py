@@ -1,0 +1,76 @@
+"""BCSR block-sparse matmul kernel (Gustavson i->k->j at block granularity).
+
+The paper's linear-combination-of-rows SpM*SpM dataflow (Fig. 4), adapted to
+the TPU: the SAM tile-sequencing graph (§4.1, Fig. 9) becomes the BCSR
+block-coordinate walk, and each surviving (block-row, block-col) intersection
+is a dense ``bs x bs`` MXU matmul. Sparsity lives at tile granularity —
+exactly the hierarchical split the paper applies to fit finite memories —
+and the per-tile compute is hardware-aligned (block sizes are multiples of
+the 128-lane MXU on real TPU; tests use smaller blocks in interpret mode).
+
+Layout:
+  blocks  : (nnzb + 1, bs, bs)  — dense nonzero blocks; the LAST block is
+                                   all-zeros and serves as the padding target
+  blk_map : (n_brow, max_nnz)   — flat block index per (block-row, slot),
+                                   padded with nnzb (the zero block)
+  col_idx : (n_brow, max_nnz)   — block-column per slot, padded with 0
+  C       : (K, N) dense rhs    ->  out (M, N)
+
+Grid = (n_brow, n_ntile, max_nnz); the k slot loop is innermost so the
+output block stays resident in VMEM while the row's blocks stream through.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(blk_map_ref, col_idx_ref, blocks_ref, c_ref, o_ref, acc_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(blocks_ref[0], c_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == pl.num_programs(2) - 1)
+    def _():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("n_tile", "interpret"))
+def spmm_bsr(blk_map: jnp.ndarray, col_idx: jnp.ndarray,
+             blocks: jnp.ndarray, c: jnp.ndarray, *,
+             n_tile: int = 128, interpret: bool = False) -> jnp.ndarray:
+    """out[M, N] = BSR(blocks) @ c. See module docstring for layout."""
+    n_brow, max_nnz = blk_map.shape
+    bs = blocks.shape[1]
+    k_dim, n = c.shape
+    assert n % n_tile == 0, (n, n_tile)
+    grid = (n_brow, n // n_tile, max_nnz)
+
+    spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bs, bs),
+                         lambda i, j, k, bm, ci: (bm[i, k], 0, 0)),
+            pl.BlockSpec((bs, n_tile),
+                         lambda i, j, k, bm, ci: (ci[i, k], j)),
+        ],
+        out_specs=pl.BlockSpec((bs, n_tile),
+                               lambda i, j, k, bm, ci: (i, j)),
+        scratch_shapes=[pltpu.VMEM((bs, n_tile), jnp.float32)],
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=spec,
+        out_shape=jax.ShapeDtypeStruct((n_brow * bs, n), c.dtype),
+        interpret=interpret,
+    )(blk_map, col_idx, blocks, c)

@@ -1,0 +1,204 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run (deliverable e): lower + compile every
+(architecture x input-shape x mesh) cell on the production meshes.
+
+The two lines above MUST precede every other import — jax locks the device
+count at first backend init. Run as::
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-3b \
+        --shape train_4k [--multi-pod] [--remat dots] [--json out.json]
+
+or ``--all`` for the full 40-cell x 2-mesh matrix. For each cell this
+prints ``compiled.memory_analysis()`` (proves the state fits per-device
+HBM) and ``compiled.cost_analysis()`` (FLOPs/bytes for §Roofline), and —
+with ``--json`` — records collective bytes parsed from the optimized HLO.
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import SHAPES, get_config, list_archs, supports_shape
+from ..distributed.sharding import (batch_shardings, cache_shardings,
+                                    params_shardings)
+from ..train.optimizer import AdamWConfig
+from ..train.train_step import (make_prefill_step, make_serve_step,
+                                make_train_step)
+from .mesh import make_production_mesh
+from .specs import input_specs
+
+V5E = {"bf16_flops": 197e12, "hbm_gbs": 819e9, "ici_gbs": 50e9,
+       "hbm_bytes": 16 * 2 ** 30}
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+               remat: str = "dots", n_micro: int = 1,
+               compress_grads: bool = False, donate: bool = True,
+               mesh=None, cfg_override=None):
+    """Returns (lowered, compiled, meta) for one cell."""
+    cfg = cfg_override or get_config(arch)
+    shape = SHAPES[shape_name]
+    if not supports_shape(cfg, shape_name):
+        raise ValueError(f"{arch} skips {shape_name} (full attention; "
+                         f"see DESIGN.md §5)")
+    mesh = mesh or make_production_mesh(multi_pod=multi_pod)
+    from ..distributed.sharding import set_activation_policy
+    set_activation_policy(mesh, seq_axis=("data" if shape.global_batch == 1
+                                          else None))
+    opt = AdamWConfig()
+    specs = input_specs(cfg, shape, opt)
+    p_sh = params_shardings(specs["params"], mesh)
+    # batch=1 cells shard the sequence/cache axis instead of batch
+    batch_sharded = shape.global_batch >= mesh.devices.size // \
+        mesh.shape.get("model", 1) or shape.global_batch >= 16
+    b_sh = batch_shardings(mesh, specs["batch"],
+                           seq_shard=False)
+    if shape.global_batch == 1:
+        b_sh = jax.tree.map(
+            lambda a: NamedSharding(mesh, P()), specs["batch"])
+
+    with mesh:
+        if shape.kind == "train":
+            o_sh = params_shardings(specs["opt_state"], mesh)
+            step = make_train_step(cfg, opt, remat=remat, n_micro=n_micro,
+                                   compress_grads=compress_grads)
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_sh, {"m": o_sh["m"], "v": o_sh["v"],
+                                     "step": NamedSharding(mesh, P())},
+                              b_sh),
+                out_shardings=(p_sh, {"m": o_sh["m"], "v": o_sh["v"],
+                                      "step": NamedSharding(mesh, P())},
+                               None),
+                donate_argnums=(0, 1) if donate else ())
+            lowered = jitted.lower(specs["params"], specs["opt_state"],
+                                   specs["batch"])
+        else:
+            c_sh = cache_shardings(mesh, specs["caches"],
+                                   batch_sharded=shape.global_batch > 1)
+            step = (make_serve_step(cfg) if shape.kind == "decode"
+                    else make_prefill_step(cfg))
+            jitted = jax.jit(step, in_shardings=(p_sh, c_sh, b_sh),
+                             out_shardings=(None, c_sh),
+                             donate_argnums=(1,) if donate else ())
+            lowered = jitted.lower(specs["params"], specs["caches"],
+                                   specs["batch"])
+        compiled = lowered.compile()
+
+    cost = compiled.cost_analysis() or {}
+    mem = compiled.memory_analysis()
+    meta = {
+        "arch": arch, "shape": shape_name,
+        "mesh": dict(mesh.shape), "n_devices": int(mesh.devices.size),
+        "remat": remat, "n_micro": n_micro,
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        "mem_per_device": {
+            "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "peak_bytes": int(getattr(mem, "temp_size_in_bytes", 0)
+                              + getattr(mem, "argument_size_in_bytes", 0)),
+        },
+    }
+    return lowered, compiled, meta
+
+
+def run_cell(arch, shape_name, *, multi_pod=False, remat="dots", n_micro=1,
+             compress_grads=False, collect_collectives=True, mesh=None):
+    from ..roofline.analysis import analyze_cell
+    t0 = time.time()
+    lowered, compiled, meta = lower_cell(
+        arch, shape_name, multi_pod=multi_pod, remat=remat, n_micro=n_micro,
+        compress_grads=compress_grads, mesh=mesh)
+    meta["compile_s"] = time.time() - t0
+    if collect_collectives:
+        meta["roofline"] = analyze_cell(compiled, meta)
+    mem = compiled.memory_analysis()
+    print(f"[dryrun] {arch} x {shape_name} "
+          f"mesh={meta['mesh']} compile={meta['compile_s']:.1f}s")
+    print(f"  memory_analysis: {mem}")
+    ca = {k: v for k, v in (compiled.cost_analysis() or {}).items()
+          if k in ("flops", "bytes accessed")}
+    print(f"  cost_analysis: {ca}")
+    if "roofline" in meta:
+        r = meta["roofline"]
+        print(f"  roofline: compute={r['t_compute']:.3e}s "
+              f"memory={r['t_memory']:.3e}s "
+              f"collective={r['t_collective']:.3e}s "
+              f"bottleneck={r['bottleneck']}")
+    return meta
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list_archs())
+    ap.add_argument("--shape", choices=sorted(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--remat", default="dots",
+                    choices=["none", "dots", "full"])
+    ap.add_argument("--n-micro", type=int, default=1)
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args(argv)
+
+    cells = []
+    if args.all:
+        for arch in list_archs():
+            for shape in SHAPES:
+                cells.append((arch, shape))
+    else:
+        if not (args.arch and args.shape):
+            ap.error("need --arch and --shape (or --all)")
+        cells = [(args.arch, args.shape)]
+
+    meshes = [False, True] if (args.both_meshes or args.all) \
+        else [args.multi_pod]
+    results, failures = [], []
+    for arch, shape in cells:
+        cfg = get_config(arch)
+        if not supports_shape(cfg, shape):
+            print(f"[dryrun] SKIP {arch} x {shape} (full attention @ 500k, "
+                  f"DESIGN.md §5)")
+            results.append({"arch": arch, "shape": shape, "skipped": True})
+            continue
+        for mp in meshes:
+            try:
+                results.append(run_cell(arch, shape, multi_pod=mp,
+                                        remat=args.remat,
+                                        n_micro=args.n_micro,
+                                        compress_grads=args.compress_grads))
+            except Exception as e:  # noqa: BLE001 - report and continue
+                traceback.print_exc()
+                failures.append((arch, shape, mp, str(e)))
+                results.append({"arch": arch, "shape": shape,
+                                "multi_pod": mp, "error": str(e)})
+            if args.json:  # incremental, crash-safe
+                with open(args.json + ".tmp", "w") as f:
+                    json.dump(results, f, indent=1)
+                os.replace(args.json + ".tmp", args.json)
+    if args.json:
+        with open(args.json + ".tmp", "w") as f:
+            json.dump(results, f, indent=1)
+        os.replace(args.json + ".tmp", args.json)
+    if failures:
+        print(f"[dryrun] {len(failures)} FAILURES:")
+        for f_ in failures:
+            print("  ", f_)
+        sys.exit(1)
+    print(f"[dryrun] all {len(results)} cells OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+"""Probe-based roofline sweep (§Roofline): every (arch x shape) cell on the
+single-pod 16x16 mesh, trip-count-corrected via layer probes.
+
+    PYTHONPATH=src python -m repro.launch.roofline_sweep --json roofline.json
+"""
+import argparse
+import json
+import time
+import traceback
+
+from ..configs import SHAPES, get_config, list_archs, supports_shape
+from ..roofline.probe import probe_cell
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="roofline_baseline.json")
+    ap.add_argument("--remat", default="dots")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    args = ap.parse_args(argv)
+
+    results = []
+    archs = [args.arch] if args.arch else list_archs()
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    for arch in archs:
+        cfg = get_config(arch)
+        for shape in shapes:
+            if not supports_shape(cfg, shape):
+                results.append({"arch": arch, "shape": shape,
+                                "skipped": True})
+                continue
+            t0 = time.time()
+            try:
+                r = probe_cell(arch, shape, remat=args.remat)
+                r["probe_s"] = time.time() - t0
+                results.append(r)
+                print(f"[roofline] {arch} x {shape}: "
+                      f"comp={r['t_compute']:.3e} mem={r['t_memory']:.3e} "
+                      f"coll={r['t_collective']:.3e} "
+                      f"bneck={r['bottleneck']} frac={r['roofline_fraction']:.3f} "
+                      f"useful={r['useful_flop_ratio']:.2f} "
+                      f"({r['probe_s']:.0f}s)", flush=True)
+            except Exception as e:  # noqa: BLE001
+                traceback.print_exc()
+                results.append({"arch": arch, "shape": shape,
+                                "error": str(e)})
+            with open(args.json + ".tmp", "w") as f:
+                json.dump(results, f, indent=1)
+            os.replace(args.json + ".tmp", args.json)
+    print(f"[roofline] wrote {len(results)} records to {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Serving launcher: batched prefill + decode with per-family caches.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --reduced \
+        --batch 4 --prompt-len 32 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import get_config, list_archs
+from ..models.model import decode_step, forward, init_caches, init_params
+from ..train.train_step import make_prefill_step, make_serve_step
+
+
+def generate(cfg, params, prompts, gen_len: int, max_seq: int,
+             temperature: float = 0.0, seed: int = 0):
+    """prompts: (B, P) int32. Greedy/temperature sampling, batched."""
+    b, plen = prompts.shape
+    caches = init_caches(cfg, b, max_seq)
+    prefill = jax.jit(make_prefill_step(cfg))
+    step = jax.jit(make_serve_step(cfg))
+
+    logits, caches = prefill(params, caches, {"tokens": prompts})
+    out = [prompts]
+    key = jax.random.PRNGKey(seed)
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    for i in range(gen_len):
+        out.append(tok)
+        logits, caches = step(params, caches, {"tokens": tok})
+        if temperature > 0:
+            key, k2 = jax.random.split(key)
+            tok = jax.random.categorical(
+                k2, logits / temperature)[:, None].astype(jnp.int32)
+        else:
+            tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    return jnp.concatenate(out, axis=1)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list_archs(), default="qwen3-0.6b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    prompts = jax.random.randint(jax.random.PRNGKey(1),
+                                 (args.batch, args.prompt_len), 0, cfg.vocab,
+                                 jnp.int32)
+    t0 = time.perf_counter()
+    seqs = generate(cfg, params, prompts, args.gen,
+                    args.prompt_len + args.gen + 8, args.temperature)
+    dt = time.perf_counter() - t0
+    tput = args.batch * args.gen / dt
+    print(f"[serve] {args.arch}: batch={args.batch} prompt={args.prompt_len} "
+          f"gen={args.gen}: {dt:.2f}s  ({tput:.1f} tok/s incl. compile)")
+    print("[serve] first sequence:", seqs[0, :24].tolist(), "...")
+    return seqs
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""ShapeDtypeStruct stand-ins for every (arch x shape) dry-run cell.
+
+``input_specs`` returns weak-type-correct, shardable specs with NO device
+allocation: model/optimizer states come from ``jax.eval_shape`` over the
+real init functions, batches are constructed directly. The dry-run lowers
+the jitted step functions against these.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..models.model import init_caches, init_params
+from ..train.optimizer import AdamWConfig, init_opt_state
+
+I32 = jnp.int32
+F32 = jnp.float32
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    b = shape.global_batch
+    s = shape.seq_len if shape.kind != "decode" else 1
+    sds = jax.ShapeDtypeStruct
+    out: Dict[str, Any] = {}
+    if cfg.frontend == "encodec_stub":
+        out["frames"] = sds((b, s, cfg.d_model), F32)
+    else:
+        out["tokens"] = sds((b, s), I32)
+    if cfg.frontend == "siglip_stub":
+        out["patches"] = sds((b, cfg.n_patches, cfg.patch_dim), F32)
+    if shape.kind == "train":
+        out["labels"] = sds((b, s), I32)
+    return out
+
+
+def params_specs(cfg: ModelConfig):
+    return jax.eval_shape(
+        lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def opt_specs(cfg: ModelConfig, opt: AdamWConfig, params_tree):
+    return jax.eval_shape(lambda p: init_opt_state(opt, p), params_tree)
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig):
+    return jax.eval_shape(
+        lambda: init_caches(cfg, shape.global_batch, shape.seq_len,
+                            jnp.bfloat16))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                opt: AdamWConfig | None = None) -> Dict[str, Any]:
+    """All
+
+    step-function inputs for one cell: train -> (params, opt_state,
+    batch); prefill/decode -> (params, caches, batch)."""
+    p = params_specs(cfg)
+    if shape.kind == "train":
+        return {"params": p,
+                "opt_state": opt_specs(cfg, opt or AdamWConfig(), p),
+                "batch": batch_specs(cfg, shape)}
+    return {"params": p,
+            "caches": cache_specs(cfg, shape),
+            "batch": batch_specs(cfg, shape)}

@@ -1,0 +1,115 @@
+"""GQA/MQA attention with RoPE, qk-norm, sliding windows, and KV caching.
+
+Pure-XLA einsum formulation (sharding-friendly for the SPMD dry-run); the
+``kernels.bsr_attention`` Pallas kernel is the TPU hot-path alternative for
+block-sparse masks and is validated against the same reference in tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import apply_rope, dense_init, init_rms, rms_norm, rope_angles
+
+NEG_INF = -2.3819763e38
+
+
+def init_attention(key, d_model: int, n_heads: int, n_kv: int,
+                   head_dim: int, dtype, qk_norm: bool = False) -> dict:
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d_model, n_heads * head_dim, dtype),
+        "wk": dense_init(ks[1], d_model, n_kv * head_dim, dtype),
+        "wv": dense_init(ks[2], d_model, n_kv * head_dim, dtype),
+        "wo": dense_init(ks[3], n_heads * head_dim, d_model, dtype),
+    }
+    if qk_norm:
+        p["q_norm"] = init_rms(head_dim, dtype)
+        p["k_norm"] = init_rms(head_dim, dtype)
+    return p
+
+
+def _mask(q_pos, k_pos, window: Optional[int], prefix_len):
+    """(..., Sq, Sk) boolean attention mask."""
+    m = q_pos[..., :, None] >= k_pos[..., None, :]
+    if prefix_len is not None:
+        # prefix-LM: bidirectional attention within the prefix (PaliGemma)
+        m = m | (k_pos[..., None, :] < prefix_len)
+    if window is not None:
+        m = m & (q_pos[..., :, None] - k_pos[..., None, :] < window)
+    return m
+
+
+def attention(p: dict, x: jnp.ndarray, *, n_heads: int, n_kv: int,
+              head_dim: int, rope_theta: float = 10000.0,
+              qk_norm: bool = False, window: Optional[int] = None,
+              prefix_len=None, compute_dtype=jnp.bfloat16,
+              cache: Optional[dict] = None,
+              soft_cap: Optional[float] = None
+              ) -> Tuple[jnp.ndarray, Optional[dict]]:
+    """x: (B, S, D). With ``cache`` given, S is the new-token count and
+    attention runs against cache + new tokens (decode/prefill-extend)."""
+    b, s, d = x.shape
+    x = x.astype(compute_dtype)
+    q = (x @ p["wq"].astype(compute_dtype)).reshape(b, s, n_heads, head_dim)
+    k = (x @ p["wk"].astype(compute_dtype)).reshape(b, s, n_kv, head_dim)
+    v = (x @ p["wv"].astype(compute_dtype)).reshape(b, s, n_kv, head_dim)
+
+    if qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+
+    if cache is None:
+        q_pos = jnp.arange(s)[None, :].astype(jnp.int32)
+        k_pos = q_pos
+        cos, sin = rope_angles(q_pos, head_dim, rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+        new_cache = None
+    else:
+        pos = cache["pos"]                       # (B,) current lengths
+        q_pos = pos[:, None] + jnp.arange(s)[None, :]
+        cos, sin = rope_angles(q_pos, head_dim, rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+        k_cache = _scatter_tokens(cache["k"], k, pos)
+        v_cache = _scatter_tokens(cache["v"], v, pos)
+        k, v = k_cache.astype(compute_dtype), v_cache.astype(compute_dtype)
+        k_pos = jnp.arange(k.shape[1])[None, :].astype(jnp.int32)
+        new_cache = {"k": k_cache, "v": v_cache, "pos": pos + s}
+
+    group = n_heads // n_kv
+    qg = q.reshape(b, -1, n_kv, group, head_dim)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qg, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores / (head_dim ** 0.5)
+    if soft_cap is not None:
+        scores = jnp.tanh(scores / soft_cap) * soft_cap
+    mask = _mask(q_pos, k_pos, window, prefix_len)
+    if cache is not None:
+        mask = mask & (k_pos[..., None, :] < (cache["pos"] + s)[:, None, None])
+    scores = jnp.where(mask[:, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(compute_dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v)
+    out = out.reshape(b, -1, n_heads * head_dim)
+    return out @ p["wo"].astype(compute_dtype), new_cache
+
+
+def _scatter_tokens(cache_arr, new, pos):
+    """Write ``new`` (B, s, ...) at per-batch offsets ``pos`` (decode)."""
+    b, s = new.shape[:2]
+    idx = pos[:, None] + jnp.arange(s)[None, :]
+    bidx = jnp.arange(b)[:, None] * jnp.ones((1, s), jnp.int32)
+    return cache_arr.at[bidx, idx].set(new.astype(cache_arr.dtype))
+
+
+def init_kv_cache(batch: int, max_seq: int, n_kv: int, head_dim: int,
+                  dtype=jnp.bfloat16) -> dict:
+    return {
+        "k": jnp.zeros((batch, max_seq, n_kv, head_dim), dtype),
+        "v": jnp.zeros((batch, max_seq, n_kv, head_dim), dtype),
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }

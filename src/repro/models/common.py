@@ -1,0 +1,97 @@
+"""Shared model components: norms, rotary embeddings, MLPs, embeddings.
+
+Pure-functional style: ``init_*`` builds parameter pytrees (dicts of
+arrays), ``apply`` functions are stateless. Parameters are created in
+``param_dtype`` (fp32 by default) and computed in ``compute_dtype``
+(bf16 by default) — the mixed-precision policy lives in the config.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6,
+             add_unit_offset: bool = False) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    w = scale.astype(jnp.float32)
+    if add_unit_offset:       # gemma convention
+        w = 1.0 + w
+    return (x * w).astype(dt)
+
+
+def init_rms(d: int, dtype) -> jnp.ndarray:
+    return jnp.ones((d,), dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, dtype,
+               scale: Optional[float] = None) -> jnp.ndarray:
+    scale = scale if scale is not None else (1.0 / d_in) ** 0.5
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32)
+            * scale).astype(dtype)
+
+
+def rope_angles(positions: jnp.ndarray, head_dim: int,
+                theta: float = 10000.0) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """positions (..., S) -> cos/sin of shape (..., S, head_dim // 2)."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray
+               ) -> jnp.ndarray:
+    """x: (..., S, H, hd); cos/sin: (..., S, half). Rotates pairs."""
+    dt = x.dtype
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    c = cos[..., None, :]  # broadcast over heads
+    s = sin[..., None, :]
+    out = jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+    return out.astype(dt)
+
+
+# -- gated MLPs ----------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d_model, d_ff, dtype),
+        "w_up": dense_init(k2, d_model, d_ff, dtype),
+        "w_down": dense_init(k3, d_ff, d_model, dtype),
+    }
+
+
+def apply_mlp(p: dict, x: jnp.ndarray, activation: str = "silu",
+              compute_dtype=jnp.bfloat16) -> jnp.ndarray:
+    x = x.astype(compute_dtype)
+    g = x @ p["w_gate"].astype(compute_dtype)
+    u = x @ p["w_up"].astype(compute_dtype)
+    act = jax.nn.silu if activation == "silu" else (
+        lambda t: jax.nn.gelu(t, approximate=True))
+    return (act(g.astype(jnp.float32)).astype(compute_dtype) * u) \
+        @ p["w_down"].astype(compute_dtype)
+
+
+def init_embedding(key, vocab: int, d_model: int, dtype) -> jnp.ndarray:
+    return (jax.random.normal(key, (vocab, d_model), jnp.float32)
+            * 0.02).astype(dtype)
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Token-mean cross entropy in fp32."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - ll
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,120 @@
+"""Mamba2 block (state space duality form, arXiv:2405.21060) for Zamba2.
+
+in_proj -> [z | x | B | C | dt], causal depthwise conv over (x,B,C),
+selective SSM via the shared chunked gated recurrence (q=C, k=B,
+decay=A*dt, beta=dt), skip connection D*x, gated output y*silu(z),
+RMSNorm, out_proj. Decode keeps (conv window, SSM state) as the cache —
+O(1) per token, which is what makes the 500k-token cell lowerable.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init, init_rms, rms_norm
+from .ssm_common import chunked_gated_recurrence, gated_recurrence_step
+
+D_CONV = 4
+
+
+def init_mamba2(key, d_model: int, *, expand: int = 2, headdim: int = 64,
+                d_state: int = 64, n_groups: int = 1, dtype=jnp.float32
+                ) -> dict:
+    d_inner = expand * d_model
+    n_heads = d_inner // headdim
+    ks = jax.random.split(key, 5)
+    d_in_proj = 2 * d_inner + 2 * n_groups * d_state + n_heads
+    conv_dim = d_inner + 2 * n_groups * d_state
+    return {
+        "in_proj": dense_init(ks[0], d_model, d_in_proj, dtype),
+        "conv_w": (jax.random.normal(ks[1], (D_CONV, conv_dim), jnp.float32)
+                   * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.zeros((n_heads,), jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "D_skip": jnp.ones((n_heads,), jnp.float32),
+        "norm": init_rms(d_inner, dtype),
+        "out_proj": dense_init(ks[2], d_inner, d_model, dtype),
+    }
+
+
+def _split(zxbcdt, d_inner, gn):
+    z = zxbcdt[..., :d_inner]
+    xbc = zxbcdt[..., d_inner:d_inner + d_inner + 2 * gn]
+    dt = zxbcdt[..., d_inner + d_inner + 2 * gn:]
+    return z, xbc, dt
+
+
+def mamba2(p: dict, xin: jnp.ndarray, *, expand: int = 2, headdim: int = 64,
+           d_state: int = 64, n_groups: int = 1, chunk: int = 64,
+           compute_dtype=jnp.bfloat16, cache: Optional[dict] = None
+           ) -> Tuple[jnp.ndarray, Optional[dict]]:
+    b, s, d_model = xin.shape
+    d_inner = expand * d_model
+    n_heads = d_inner // headdim
+    gn = n_groups * d_state
+    xin = xin.astype(compute_dtype)
+
+    zxbcdt = xin @ p["in_proj"].astype(compute_dtype)
+    z, xbc, dt = _split(zxbcdt, d_inner, gn)
+
+    # causal depthwise conv over (x, B, C)
+    if cache is None:
+        pad = jnp.zeros((b, D_CONV - 1, xbc.shape[-1]), xbc.dtype)
+        win = jnp.concatenate([pad, xbc], axis=1)
+        new_conv = win[:, -(D_CONV - 1):]
+    else:
+        win = jnp.concatenate([cache["conv"].astype(xbc.dtype), xbc], axis=1)
+        new_conv = win[:, -(D_CONV - 1):]
+    conv = jnp.zeros_like(xbc)
+    for i in range(D_CONV):
+        conv = conv + win[:, i:i + s] * p["conv_w"][i].astype(xbc.dtype)
+    xbc = jax.nn.silu((conv + p["conv_b"].astype(xbc.dtype))
+                      .astype(jnp.float32)).astype(compute_dtype)
+
+    x = xbc[..., :d_inner].reshape(b, s, n_heads, headdim)
+    B = xbc[..., d_inner:d_inner + gn].reshape(b, s, n_groups, d_state)
+    C = xbc[..., d_inner + gn:].reshape(b, s, n_groups, d_state)
+    # broadcast groups over heads
+    rep = n_heads // n_groups
+    Bh = jnp.repeat(B, rep, axis=2)
+    Ch = jnp.repeat(C, rep, axis=2)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,S,H)
+    a = -jnp.exp(p["A_log"])[None, None, :] * dt                  # <= 0
+
+    if cache is None:
+        y, hfin = chunked_gated_recurrence(Ch, Bh, x, a, dt, chunk=chunk)
+        new_cache = None
+    elif s == 1:
+        y1, hfin = gated_recurrence_step(
+            cache["ssm"], Ch[:, 0], Bh[:, 0], x[:, 0], a[:, 0], dt[:, 0])
+        y = y1[:, None]
+        new_cache = {"conv": new_conv.astype(cache["conv"].dtype),
+                     "ssm": hfin}
+    else:  # prefill: chunked recurrence seeded from the cached state
+        y, hfin = chunked_gated_recurrence(Ch, Bh, x, a, dt, chunk=chunk,
+                                           h0=cache["ssm"])
+        new_cache = {"conv": new_conv.astype(cache["conv"].dtype),
+                     "ssm": hfin}
+    y = y.astype(compute_dtype) + x * p["D_skip"].astype(compute_dtype)[
+        None, None, :, None]
+    y = y.reshape(b, s, d_inner)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(compute_dtype),
+                 p["norm"])
+    out = y @ p["out_proj"].astype(compute_dtype)
+    return out, new_cache
+
+
+def init_mamba2_cache(batch: int, d_model: int, *, expand: int = 2,
+                      headdim: int = 64, d_state: int = 64,
+                      n_groups: int = 1, dtype=jnp.bfloat16) -> dict:
+    d_inner = expand * d_model
+    n_heads = d_inner // headdim
+    conv_dim = d_inner + 2 * n_groups * d_state
+    return {
+        "conv": jnp.zeros((batch, D_CONV - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((batch, n_heads, d_state, headdim), jnp.float32),
+    }

@@ -1,0 +1,114 @@
+"""Multi-head Latent Attention (DeepSeek-V3, arXiv:2412.19437 §2.1).
+
+Queries are low-rank projected through ``q_lora_rank``; keys/values share a
+compressed latent ``kv_lora_rank`` plus a decoupled RoPE key of
+``rope_head_dim``. Only (c_kv, k_rope) is cached — the KV cache is
+(kv_lora_rank + rope_head_dim) per token instead of 2*H*hd, which is the
+architecture's long-context win and what makes decode_32k x batch 128 fit.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import apply_rope, dense_init, init_rms, rms_norm, rope_angles
+
+NEG_INF = -2.3819763e38
+
+
+def init_mla(key, d_model: int, n_heads: int, *, q_lora_rank: int = 1536,
+             kv_lora_rank: int = 512, qk_nope_dim: int = 128,
+             rope_dim: int = 64, v_head_dim: int = 128, dtype=jnp.float32
+             ) -> dict:
+    ks = jax.random.split(key, 8)
+    qk_head = qk_nope_dim + rope_dim
+    return {
+        "wq_a": dense_init(ks[0], d_model, q_lora_rank, dtype),
+        "q_a_norm": init_rms(q_lora_rank, dtype),
+        "wq_b": dense_init(ks[1], q_lora_rank, n_heads * qk_head, dtype),
+        "wkv_a": dense_init(ks[2], d_model, kv_lora_rank + rope_dim, dtype),
+        "kv_a_norm": init_rms(kv_lora_rank, dtype),
+        "wkv_b": dense_init(ks[3], kv_lora_rank,
+                            n_heads * (qk_nope_dim + v_head_dim), dtype),
+        "wo": dense_init(ks[4], n_heads * v_head_dim, d_model, dtype),
+    }
+
+
+def mla_attention(p: dict, x: jnp.ndarray, *, n_heads: int,
+                  qk_nope_dim: int = 128, rope_dim: int = 64,
+                  v_head_dim: int = 128, kv_lora_rank: int = 512,
+                  rope_theta: float = 10000.0, compute_dtype=jnp.bfloat16,
+                  cache: Optional[dict] = None
+                  ) -> Tuple[jnp.ndarray, Optional[dict]]:
+    b, s, _ = x.shape
+    x = x.astype(compute_dtype)
+    qk_head = qk_nope_dim + rope_dim
+
+    q = rms_norm(x @ p["wq_a"].astype(compute_dtype), p["q_a_norm"])
+    q = (q @ p["wq_b"].astype(compute_dtype)).reshape(b, s, n_heads, qk_head)
+    q_nope, q_rope = q[..., :qk_nope_dim], q[..., qk_nope_dim:]
+
+    kv = x @ p["wkv_a"].astype(compute_dtype)
+    c_kv, k_rope = kv[..., :kv_lora_rank], kv[..., kv_lora_rank:]
+    c_kv = rms_norm(c_kv, p["kv_a_norm"])
+    k_rope = k_rope[..., None, :]  # single shared rope key head
+
+    if cache is None:
+        pos = jnp.zeros((b,), jnp.int32)
+        q_pos = jnp.arange(s)[None, :].astype(jnp.int32)
+        new_cache = None
+        kv_len = s
+    else:
+        pos = cache["pos"]
+        q_pos = pos[:, None] + jnp.arange(s)[None, :]
+        kv_len = cache["c_kv"].shape[1]
+
+    cos, sin = rope_angles(q_pos, rope_dim, rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    k_rope = apply_rope(k_rope, cos, sin)
+
+    if cache is not None:
+        idx = pos[:, None] + jnp.arange(s)[None, :]
+        bidx = jnp.arange(b)[:, None] * jnp.ones((1, s), jnp.int32)
+        c_kv_all = cache["c_kv"].at[bidx, idx].set(
+            c_kv.astype(cache["c_kv"].dtype))
+        k_rope_all = cache["k_rope"].at[bidx, idx].set(
+            k_rope[..., 0, :].astype(cache["k_rope"].dtype))
+        new_cache = {"c_kv": c_kv_all, "k_rope": k_rope_all, "pos": pos + s}
+        c_kv = c_kv_all.astype(compute_dtype)
+        k_rope = k_rope_all.astype(compute_dtype)[..., None, :]
+        k_pos = jnp.arange(kv_len)[None, :].astype(jnp.int32)
+    else:
+        k_pos = q_pos
+
+    # expand latent to per-head keys/values
+    kv_b = (c_kv @ p["wkv_b"].astype(compute_dtype)).reshape(
+        b, -1, n_heads, qk_nope_dim + v_head_dim)
+    k_nope, v = kv_b[..., :qk_nope_dim], kv_b[..., qk_nope_dim:]
+
+    scale = 1.0 / (qk_head ** 0.5)
+    scores = (jnp.einsum("bqhd,bshd->bhqs", q_nope, k_nope,
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bqhd,bsxd->bhqs", q_rope,
+                           jnp.broadcast_to(
+                               k_rope, k_rope.shape[:2] + (1, rope_dim)),
+                           preferred_element_type=jnp.float32)) * scale
+    mask = q_pos[:, :, None] >= k_pos[:, None, :]
+    if cache is not None:
+        mask = mask & (k_pos[:, None, :] < (pos + s)[:, None, None])
+    scores = jnp.where(mask[:, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(compute_dtype)
+    out = jnp.einsum("bhqs,bshd->bqhd", probs, v)
+    out = out.reshape(b, -1, n_heads * v_head_dim)
+    return out @ p["wo"].astype(compute_dtype), new_cache
+
+
+def init_mla_cache(batch: int, max_seq: int, kv_lora_rank: int = 512,
+                   rope_dim: int = 64, dtype=jnp.bfloat16) -> dict:
+    return {
+        "c_kv": jnp.zeros((batch, max_seq, kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, max_seq, rope_dim), dtype),
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }

@@ -1,0 +1,359 @@
+"""Unified LM assembly for every assigned architecture family.
+
+Functional: ``init_params(cfg, key)`` builds the pytree; ``forward`` runs
+train/prefill; ``decode_step`` runs one cached token. Layer stacks carry a
+leading L axis and are traversed with ``lax.scan`` so giant configs (61L
+DeepSeek, 54L Zamba2) lower to compact HLO for the 512-device dry-run.
+
+Families:
+  dense / vlm / audio : pre-norm attention + gated MLP
+  moe                 : first_dense_layers dense, then MoE (SAM dispatch)
+  ssm (xlstm)         : mLSTM blocks with sLSTM at cfg.slstm_layers
+  hybrid (zamba2)     : mamba2 stack; ONE shared attention+MLP block
+                        applied every cfg.attn_every layers (weight reuse)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..distributed.sharding import shard_activation
+from .attention import attention, init_attention, init_kv_cache
+from .common import (apply_mlp, cross_entropy, dense_init, init_embedding,
+                     init_mlp, init_rms, rms_norm)
+from .mamba2 import init_mamba2, init_mamba2_cache, mamba2
+from .mla import init_mla, init_mla_cache, mla_attention
+from .moe import apply_moe, init_moe
+from .xlstm import (init_mlstm, init_mlstm_cache, init_slstm,
+                    init_slstm_cache, mlstm, slstm)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _stacked(init_fn, key, n: int):
+    """vmap an init over a leading layer axis."""
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+def _init_tf_layer(cfg: ModelConfig, moe: bool):
+    def f(key):
+        k1, k2 = jax.random.split(key)
+        p = {"ln1": init_rms(cfg.d_model, cfg.pdtype),
+             "ln2": init_rms(cfg.d_model, cfg.pdtype)}
+        if cfg.use_mla:
+            p["attn"] = init_mla(
+                k1, cfg.d_model, cfg.n_heads, q_lora_rank=cfg.q_lora_rank,
+                kv_lora_rank=cfg.kv_lora_rank, qk_nope_dim=cfg.qk_nope_dim,
+                rope_dim=cfg.rope_dim, v_head_dim=cfg.v_head_dim,
+                dtype=cfg.pdtype)
+        else:
+            p["attn"] = init_attention(
+                k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                cfg.resolved_head_dim, cfg.pdtype, qk_norm=cfg.qk_norm)
+        if moe:
+            p["moe"] = init_moe(k2, cfg.d_model, cfg.moe_d_ff,
+                                cfg.n_experts, cfg.n_shared_experts,
+                                cfg.n_shared_experts * cfg.moe_d_ff or None,
+                                dtype=cfg.pdtype)
+        else:
+            p["mlp"] = init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.pdtype)
+        return p
+    return f
+
+
+def init_params(cfg: ModelConfig, key) -> Dict[str, Any]:
+    ks = jax.random.split(key, 8)
+    p: Dict[str, Any] = {
+        "embed": init_embedding(ks[0], cfg.vocab, cfg.d_model, cfg.pdtype),
+        "ln_f": init_rms(cfg.d_model, cfg.pdtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(ks[1], cfg.d_model, cfg.vocab, cfg.pdtype)
+
+    if cfg.family in ("dense", "vlm", "audio"):
+        p["layers"] = _stacked(_init_tf_layer(cfg, False), ks[2], cfg.n_layers)
+    elif cfg.family == "moe":
+        nd = cfg.first_dense_layers
+        if nd:
+            p["dense_layers"] = _stacked(_init_tf_layer(cfg, False), ks[2], nd)
+        p["layers"] = _stacked(_init_tf_layer(cfg, True), ks[3],
+                               cfg.n_layers - nd)
+    elif cfg.family == "ssm":
+        def init_m(key):
+            kk = jax.random.split(key, 2)
+            return {"ln": init_rms(cfg.d_model, cfg.pdtype),
+                    "cell": init_mlstm(kk[0], cfg.d_model, cfg.n_heads,
+                                       dtype=cfg.pdtype)}
+        mpos = [i for i in range(cfg.n_layers) if i not in cfg.slstm_layers]
+        p["mlstm_layers"] = _stacked(init_m, ks[2], len(mpos))
+        p["slstm_layers"] = [
+            {"ln": init_rms(cfg.d_model, cfg.pdtype),
+             "cell": init_slstm(k, cfg.d_model, cfg.n_heads, cfg.pdtype)}
+            for k in jax.random.split(ks[3], len(cfg.slstm_layers))]
+    elif cfg.family == "hybrid":
+        def init_mb(key):
+            return {"ln": init_rms(cfg.d_model, cfg.pdtype),
+                    "cell": init_mamba2(key, cfg.d_model,
+                                        expand=cfg.ssm_expand,
+                                        headdim=cfg.ssm_headdim,
+                                        d_state=cfg.ssm_state,
+                                        dtype=cfg.pdtype)}
+        p["mamba_layers"] = _stacked(init_mb, ks[2], cfg.n_layers)
+        p["shared_attn"] = _init_tf_layer(cfg, False)(ks[3])
+    else:
+        raise ValueError(cfg.family)
+
+    if cfg.frontend == "siglip_stub":
+        p["patch_proj"] = dense_init(ks[4], cfg.patch_dim, cfg.d_model,
+                                     cfg.pdtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _tf_layer(cfg: ModelConfig, p, x, moe: bool, cache=None, prefix_len=None):
+    h = rms_norm(x, p["ln1"], add_unit_offset=(cfg.activation == "gelu"))
+    if cfg.use_mla:
+        a, new_cache = mla_attention(
+            p["attn"], h, n_heads=cfg.n_heads, qk_nope_dim=cfg.qk_nope_dim,
+            rope_dim=cfg.rope_dim, v_head_dim=cfg.v_head_dim,
+            kv_lora_rank=cfg.kv_lora_rank, rope_theta=cfg.rope_theta,
+            compute_dtype=cfg.cdtype, cache=cache)
+    else:
+        a, new_cache = attention(
+            p["attn"], h, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+            head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta,
+            qk_norm=cfg.qk_norm, window=cfg.window, prefix_len=prefix_len,
+            compute_dtype=cfg.cdtype, cache=cache, soft_cap=cfg.soft_cap)
+    x = x + a.astype(x.dtype)
+    h = rms_norm(x, p["ln2"], add_unit_offset=(cfg.activation == "gelu"))
+    if moe:
+        m = apply_moe(p["moe"], h, k=cfg.top_k, dispatch=cfg.moe_dispatch,
+                      compute_dtype=cfg.cdtype)
+    else:
+        m = apply_mlp(p["mlp"], h, activation=cfg.activation,
+                      compute_dtype=cfg.cdtype)
+    return x + m.astype(x.dtype), new_cache
+
+
+def _remat_policy(name):
+    if name in (None, "none"):
+        return None
+    if name == "dots":
+        return jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    if name == "full":
+        return jax.checkpoint_policies.nothing_saveable
+    raise ValueError(name)
+
+
+def _scan_stack(cfg, stack, x, layer_fn, caches=None, remat=None):
+    """lax.scan over a stacked layer pytree (+ optional stacked caches).
+
+    ``cfg.unroll_scan`` unrolls the loop — used by the roofline probes,
+    whose per-layer cost extrapolation needs layer bodies visible in the
+    HLO (XLA's cost analysis counts a while body only once)."""
+    unroll = bool(getattr(cfg, "unroll_scan", False))
+    if caches is None:
+        def body(h, lp):
+            h2, _ = layer_fn(lp, h, None)
+            return shard_activation(h2), 0.0
+        if remat not in (None, "none"):
+            body = jax.checkpoint(body, policy=_remat_policy(remat))
+        x, _ = jax.lax.scan(body, x, stack, unroll=unroll)
+        return x, None
+
+    def body(h, inp):
+        lp, c = inp
+        h2, c2 = layer_fn(lp, h, c)
+        return shard_activation(h2), c2
+    x, new_caches = jax.lax.scan(body, x, (stack, caches), unroll=unroll)
+    return x, new_caches
+
+
+def embed_inputs(cfg: ModelConfig, params, batch: Dict[str, jnp.ndarray]):
+    """Token/frame/patch embedding (modality stubs live here)."""
+    cd = cfg.cdtype
+    if cfg.frontend == "encodec_stub":
+        x = batch["frames"].astype(cd)            # (B, S, D) precomputed
+        prefix_len = None
+    elif cfg.frontend == "siglip_stub":
+        patches = batch["patches"].astype(cd) @ params["patch_proj"].astype(cd)
+        tok = params["embed"][batch["tokens"]].astype(cd)
+        x = jnp.concatenate([patches, tok], axis=1)
+        prefix_len = cfg.n_patches
+    else:
+        x = params["embed"][batch["tokens"]].astype(cd)
+        prefix_len = None
+    if cfg.family in ("dense", "vlm") and cfg.activation == "gelu":
+        x = x * jnp.asarray(cfg.d_model ** 0.5, cd)   # gemma scaling
+    return x, prefix_len
+
+
+def forward(cfg: ModelConfig, params, batch, caches=None, remat=None
+            ) -> Tuple[jnp.ndarray, Any]:
+    """Returns (logits (B, S, V), new caches or None)."""
+    x, prefix_len = embed_inputs(cfg, params, batch)
+    x = shard_activation(x)
+    new_caches: Dict[str, Any] = {}
+
+    if cfg.family in ("dense", "vlm", "audio"):
+        fn = lambda lp, h, c: _tf_layer(cfg, lp, h, False, c, prefix_len)
+        x, nc = _scan_stack(cfg, params["layers"], x, fn,
+                            caches["layers"] if caches else None, remat)
+        new_caches["layers"] = nc
+    elif cfg.family == "moe":
+        if "dense_layers" in params:
+            fn = lambda lp, h, c: _tf_layer(cfg, lp, h, False, c)
+            x, nc = _scan_stack(cfg, params["dense_layers"], x, fn,
+                                caches["dense_layers"] if caches else None,
+                                remat)
+            new_caches["dense_layers"] = nc
+        fn = lambda lp, h, c: _tf_layer(cfg, lp, h, True, c)
+        x, nc = _scan_stack(cfg, params["layers"], x, fn,
+                            caches["layers"] if caches else None, remat)
+        new_caches["layers"] = nc
+    elif cfg.family == "ssm":
+        x, new_caches = _ssm_forward(cfg, params, x, caches)
+    elif cfg.family == "hybrid":
+        x, new_caches = _hybrid_forward(cfg, params, x, caches, remat)
+
+    x = rms_norm(x, params["ln_f"],
+                 add_unit_offset=(cfg.activation == "gelu"))
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"]).astype(cfg.cdtype)
+    logits = shard_activation(x.astype(cfg.cdtype) @ head, "logits")
+    if cfg.frontend == "siglip_stub":
+        logits = logits[:, cfg.n_patches:]        # text positions only
+    return logits, (new_caches if caches is not None else None)
+
+
+def _ssm_forward(cfg, params, x, caches):
+    mpos = [i for i in range(cfg.n_layers) if i not in cfg.slstm_layers]
+    new_caches = {"mlstm": [], "slstm": []}
+    mi = si = 0
+    for i in range(cfg.n_layers):
+        if i in cfg.slstm_layers:
+            p = params["slstm_layers"][si]
+            c = caches["slstm"][si] if caches else None
+            h = rms_norm(x, p["ln"])
+            y, c2 = slstm(p["cell"], h, n_heads=cfg.n_heads,
+                          compute_dtype=cfg.cdtype, cache=c)
+            new_caches["slstm"].append(c2)
+            si += 1
+        else:
+            p = jax.tree.map(lambda a: a[mi], params["mlstm_layers"])
+            c = jax.tree.map(lambda a: a[mi], caches["mlstm"]) \
+                if caches else None
+            h = rms_norm(x, p["ln"])
+            y, c2 = mlstm(p["cell"], h, n_heads=cfg.n_heads,
+                          chunk=cfg.ssm_chunk, compute_dtype=cfg.cdtype,
+                          cache=c)
+            new_caches["mlstm"].append(c2)
+            mi += 1
+        x = x + y.astype(x.dtype)
+    if caches is not None and new_caches["mlstm"]:
+        new_caches["mlstm"] = jax.tree.map(
+            lambda *xs: jnp.stack(xs), *new_caches["mlstm"])
+    return x, new_caches
+
+
+def _hybrid_forward(cfg, params, x, caches, remat=None):
+    """Zamba2: groups of attn_every mamba layers + the shared attn block."""
+    g = cfg.attn_every
+    n_groups = cfg.n_layers // g
+    stacked = jax.tree.map(
+        lambda a: a.reshape((n_groups, g) + a.shape[1:]),
+        params["mamba_layers"])
+    new_caches = {"mamba": [], "attn": []}
+
+    def mamba_layer(lp, h, c):
+        hh = rms_norm(h, lp["ln"])
+        y, c2 = mamba2(lp["cell"], hh, expand=cfg.ssm_expand,
+                       headdim=cfg.ssm_headdim, d_state=cfg.ssm_state,
+                       chunk=cfg.ssm_chunk, compute_dtype=cfg.cdtype,
+                       cache=c)
+        return h + y.astype(h.dtype), c2
+
+    for gi in range(n_groups):
+        grp = jax.tree.map(lambda a: a[gi], stacked)
+        c = caches["mamba"][gi] if caches else None
+        x, c2 = _scan_stack(cfg, grp, x, mamba_layer, c, remat)
+        new_caches["mamba"].append(c2)
+        ac = caches["attn"][gi] if caches else None
+        x, ac2 = _tf_layer(cfg, params["shared_attn"], x, False, ac)
+        new_caches["attn"].append(ac2)
+    return x, new_caches
+
+
+# ---------------------------------------------------------------------------
+# caches + loss
+# ---------------------------------------------------------------------------
+
+def init_caches(cfg: ModelConfig, batch: int, max_seq: int,
+                dtype=jnp.bfloat16) -> Dict[str, Any]:
+    if cfg.family in ("dense", "vlm", "audio", "moe"):
+        if cfg.use_mla:
+            one = lambda: init_mla_cache(batch, max_seq, cfg.kv_lora_rank,
+                                         cfg.rope_dim, dtype)
+        else:
+            one = lambda: init_kv_cache(batch, max_seq, cfg.n_kv_heads,
+                                        cfg.resolved_head_dim, dtype)
+        out = {}
+        if cfg.family == "moe" and cfg.first_dense_layers:
+            out["dense_layers"] = jax.tree.map(
+                lambda *xs: jnp.stack(xs),
+                *[one() for _ in range(cfg.first_dense_layers)])
+            out["layers"] = jax.tree.map(
+                lambda *xs: jnp.stack(xs),
+                *[one() for _ in range(cfg.n_layers
+                                       - cfg.first_dense_layers)])
+        else:
+            out["layers"] = jax.tree.map(
+                lambda *xs: jnp.stack(xs),
+                *[one() for _ in range(cfg.n_layers)])
+        return out
+    if cfg.family == "ssm":
+        n_m = cfg.n_layers - len(cfg.slstm_layers)
+        return {
+            "mlstm": jax.tree.map(
+                lambda *xs: jnp.stack(xs),
+                *[init_mlstm_cache(batch, cfg.d_model, cfg.n_heads)
+                  for _ in range(n_m)]),
+            "slstm": [init_slstm_cache(batch, cfg.d_model, cfg.n_heads)
+                      for _ in range(len(cfg.slstm_layers))],
+        }
+    if cfg.family == "hybrid":
+        g = cfg.attn_every
+        n_groups = cfg.n_layers // g
+        mk = lambda: init_mamba2_cache(batch, cfg.d_model,
+                                       expand=cfg.ssm_expand,
+                                       headdim=cfg.ssm_headdim,
+                                       d_state=cfg.ssm_state, dtype=dtype)
+        return {
+            "mamba": [jax.tree.map(lambda *xs: jnp.stack(xs),
+                                   *[mk() for _ in range(g)])
+                      for _ in range(n_groups)],
+            "attn": [init_kv_cache(batch, max_seq, cfg.n_kv_heads,
+                                   cfg.resolved_head_dim, dtype)
+                     for _ in range(n_groups)],
+        }
+    raise ValueError(cfg.family)
+
+
+def loss_fn(cfg: ModelConfig, params, batch, remat=None) -> jnp.ndarray:
+    logits, _ = forward(cfg, params, batch, remat=remat)
+    return cross_entropy(logits, batch["labels"], batch.get("mask"))
+
+
+def decode_step(cfg: ModelConfig, params, caches, batch):
+    """One new token against the KV/state caches. Returns (logits, caches)."""
+    logits, new_caches = forward(cfg, params, batch, caches)
+    return logits[:, -1], new_caches

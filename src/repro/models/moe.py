@@ -1,0 +1,228 @@
+"""Mixture-of-Experts with SAM-lowered sparse dispatch.
+
+Routing is the sparse tensor algebra expression
+
+    Y[e, c, d] = sum_t  G[e, c, t] * X[t, d]
+
+with ``G`` the top-k one-hot routing tensor. Two dispatch algorithms are
+implemented, mirroring the paper's dataflow-order study (§6.3):
+
+* ``dense``  — the inner-product-style baseline: one-hot einsum over the
+               full (E x T) iteration space, O(E*T*D). This is what a
+               fixed-function "factorized" pipeline does.
+* ``sam``    — the Gustavson-ordered SAM lowering: iterate the *nonzero*
+               routing coordinates only. Sort (token, choice) pairs by
+               expert (= the level-scanner's concordant e->t fiber order),
+               crop to capacity (finite-memory tiling, §4.1), gather ->
+               expert batches, and combine with the segment-reduce kernel
+               (Def 3.7 reducer). O(k*T*D) — work scales with nnz, the
+               paper's asymptotic fusion argument inside an LM.
+
+Both paths are numerically identical (up to capacity drops) and tested
+against each other; the benchmark harness reports the work ratio.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed import sharding as shd
+from .common import dense_init
+
+
+def _shard(x, *spec):
+    """Expert-parallel sharding constraints (no-op without a policy)."""
+    if shd._ACT_POLICY is None:
+        return x
+    pol = shd._ACT_POLICY
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    resolved = tuple(pol["batch"] if s == "data" else
+                     (pol["model"] if s == "model" else None) for s in spec)
+    fitted = shd._fit_spec(P(*resolved), x.shape, pol["mesh"])
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(pol["mesh"], fitted))
+
+
+def init_moe(key, d_model: int, d_ff: int, n_experts: int,
+             n_shared: int = 0, shared_d_ff: Optional[int] = None,
+             dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], d_model, n_experts, dtype, scale=0.02),
+        # experts stacked on a leading E axis (EP-shardable)
+        "w_gate": dense_init(ks[1], d_model, n_experts * d_ff, dtype
+                             ).reshape(d_model, n_experts, d_ff)
+                  .transpose(1, 0, 2),
+        "w_up": dense_init(ks[2], d_model, n_experts * d_ff, dtype
+                           ).reshape(d_model, n_experts, d_ff)
+                .transpose(1, 0, 2),
+        "w_down": dense_init(ks[3], d_ff, n_experts * d_model, dtype
+                             ).reshape(d_ff, n_experts, d_model)
+                  .transpose(1, 0, 2),
+    }
+    if n_shared:
+        sd = shared_d_ff or d_ff * n_shared
+        from .common import init_mlp
+        p["shared"] = init_mlp(ks[4], d_model, sd, dtype)
+    return p
+
+
+def route_topk(router_w, x, k: int, *, bias: Optional[jnp.ndarray] = None):
+    """Returns (weights (T,k) fp32 normalized, expert ids (T,k) int32)."""
+    logits = (x.astype(jnp.float32) @ router_w.astype(jnp.float32))
+    if bias is not None:
+        logits = logits + bias
+    gates = jax.nn.softmax(logits, axis=-1)
+    w, ids = jax.lax.top_k(gates, k)
+    w = w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-9)
+    return w, ids.astype(jnp.int32)
+
+
+def _expert_ffn(p, xe, compute_dtype):
+    """xe: (E, C, D) -> (E, C, D); batched per-expert SwiGLU."""
+    xe = xe.astype(compute_dtype)
+    g = jnp.einsum("ecd,edf->ecf", xe, p["w_gate"].astype(compute_dtype))
+    u = jnp.einsum("ecd,edf->ecf", xe, p["w_up"].astype(compute_dtype))
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(compute_dtype) * u
+    return jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(compute_dtype))
+
+
+def moe_dense_dispatch(p: dict, x: jnp.ndarray, *, k: int,
+                       compute_dtype=jnp.bfloat16) -> jnp.ndarray:
+    """Baseline: every expert runs every token, combined through the dense
+    one-hot gate tensor — the full E x T iteration space, O(E*T*D). This is
+    the "inner-product order" dataflow of Fig. 12: no coordinates are
+    intersected before the expensive traversal."""
+    t, d = x.shape
+    e = p["router"].shape[1]
+    w, ids = route_topk(p["router"], x, k)
+    onehot = jax.nn.one_hot(ids, e, dtype=jnp.float32)         # (T, k, E)
+    g = jnp.einsum("tke,tk->et", onehot, w)                    # (E, T)
+    xe = jnp.broadcast_to(x.astype(compute_dtype), (e, t, d))  # all pairs
+    ye = _expert_ffn(p, xe, compute_dtype)                     # (E, T, D)
+    return jnp.einsum("et,etd->td", g.astype(compute_dtype), ye)
+
+
+def _sam_build_local(e, x, w, ids, *, k: int, cap: int, compute_dtype):
+    """One data-shard's dispatch build: local sort, local capacity.
+
+    x: (T_l, D); w/ids: (T_l, k). Returns (xe (E, cap, D), keep, slot,
+    sorted weights, sorted token ids)."""
+    t, d = x.shape
+    flat_e = ids.reshape(-1)                                   # (T_l*k,)
+    flat_t = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)
+    flat_w = w.reshape(-1)
+
+    # level-scanner order: sort coordinates by expert fiber (stable in t)
+    order = jnp.argsort(flat_e * t + flat_t)
+    se, stk, sw = flat_e[order], flat_t[order], flat_w[order]
+    # position within each expert fiber -> capacity crop
+    pos_in_e = jnp.arange(t * k) - jnp.searchsorted(se, se, side="left")
+    keep = pos_in_e < cap
+    slot = jnp.where(keep, se * cap + pos_in_e, e * cap)       # drop -> pad
+
+    xe = jnp.zeros((e * cap + 1, d), compute_dtype)
+    xe = xe.at[slot].set(x[stk].astype(compute_dtype), mode="drop")
+    return xe[:-1].reshape(e, cap, d), keep, slot, sw, stk
+
+
+def _sam_combine_local(e, cap, t, ye, keep, slot, sw, stk, compute_dtype):
+    """Weighted gather back to tokens (the Def-3.7 reducer: sum over k)."""
+    yflat = ye.reshape(e * cap, -1)
+    contrib = jnp.where(keep[:, None], yflat[jnp.clip(slot, 0, e * cap - 1)],
+                        0.0) * sw[:, None].astype(compute_dtype)
+    return jax.ops.segment_sum(contrib, stk, num_segments=t)
+
+
+def _ep_axes(e: int):
+    """Expert-parallel mesh axes: (model, data...) when E divides both."""
+    if shd._ACT_POLICY is None:
+        return None
+    pol = shd._ACT_POLICY
+    shape = dict(pol["mesh"].shape)
+    axes = [pol["model"]] if pol["model"] else []
+    n = shape.get(pol["model"], 1)
+    for a in pol["batch"] or ():
+        if e % (n * shape.get(a, 1)) == 0:
+            axes.append(a)
+            n *= shape.get(a, 1)
+    return tuple(axes) if axes else None
+
+
+def moe_sam_dispatch(p: dict, x: jnp.ndarray, *, k: int,
+                     capacity_factor: float = 1.25,
+                     compute_dtype=jnp.bfloat16) -> jnp.ndarray:
+    """SAM lowering: sort-by-expert concordant traversal, O(k*T*D).
+
+    The (expert, token) routing fibers are materialized by sorting the
+    nonzero coordinates (level-scanner order), cropped to per-expert
+    capacity (the §4.1 finite-memory tile), processed as dense per-expert
+    batches (EP-sharded over the model axis), and combined by the Def-3.7
+    reducer (weighted scatter-add).
+
+    Distribution: the token axis is pre-grouped by data shard and the
+    dispatch is vmapped over groups, so the expert-order sort runs
+    *locally* per shard (a global sharded sort would be a giant bitonic
+    exchange — measured in EXPERIMENTS.md §Perf iteration 1). Capacity is
+    per (shard, expert), the standard local-balance policy.
+    """
+    t, d = x.shape
+    e = p["router"].shape[1]
+    g = shd.data_group_size() if shd._ACT_POLICY is not None else 1
+    g = g if t % g == 0 else 1
+    tl = t // g
+    cap = max(8, int(capacity_factor * tl * k / e))
+
+    w, ids = route_topk(p["router"], x, k)                     # (T, k)
+    xs = _shard(x.reshape(g, tl, d), "data", None, None)
+    ws = _shard(w.reshape(g, tl, k), "data", None, None)
+    idss = _shard(ids.reshape(g, tl, k), "data", None, None)
+
+    xe, keep, slot, sw, stk = jax.vmap(
+        lambda xx, ww, ii: _sam_build_local(
+            e, xx, ww, ii, k=k, cap=cap, compute_dtype=compute_dtype)
+    )(xs, ws, idss)
+
+    # token->expert all-to-all: reshard the dispatch buffers from
+    # group(data)-major onto the expert-parallel axes, run the expert FFN
+    # there, and reshard back for the combine. Constraining explicitly is
+    # what keeps XLA from an involuntary full rematerialization
+    # (EXPERIMENTS.md §Perf iteration 4).
+    ep = _ep_axes(e)
+    if ep is not None:
+        xe = jax.lax.with_sharding_constraint(
+            xe, shd.NamedSharding(shd._ACT_POLICY["mesh"],
+                                  shd.P(None, ep, None, None)))
+    ye = jax.vmap(lambda b: _expert_ffn(p, b, compute_dtype))(xe)
+    if ep is not None:
+        ye = jax.lax.with_sharding_constraint(
+            ye, shd.NamedSharding(shd._ACT_POLICY["mesh"],
+                                  shd.P(None, ep, None, None)))
+    ye = _shard(ye, "data", None, None, None)
+
+    out = jax.vmap(
+        lambda yy, kk, ss, ww, tt: _sam_combine_local(
+            e, cap, tl, yy, kk, ss, ww, tt, compute_dtype)
+    )(ye, keep, slot, sw, stk)
+    return _shard(out, "data", None, None).reshape(t, d)
+
+
+def apply_moe(p: dict, x: jnp.ndarray, *, k: int, dispatch: str = "sam",
+              capacity_factor: float = 1.25,
+              compute_dtype=jnp.bfloat16) -> jnp.ndarray:
+    """x: (B, S, D) -> (B, S, D); adds shared experts if present."""
+    b, s, d = x.shape
+    xf = x.reshape(b * s, d)
+    if dispatch == "sam":
+        y = moe_sam_dispatch(p, xf, k=k, capacity_factor=capacity_factor,
+                             compute_dtype=compute_dtype)
+    else:
+        y = moe_dense_dispatch(p, xf, k=k, compute_dtype=compute_dtype)
+    y = y.reshape(b, s, d)
+    if "shared" in p:
+        from .common import apply_mlp
+        y = y + apply_mlp(p["shared"], x, compute_dtype=compute_dtype)
+    return y

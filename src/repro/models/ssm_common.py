@@ -1,0 +1,94 @@
+"""Chunk-parallel gated outer-product recurrence.
+
+Both Mamba2's SSD and xLSTM's mLSTM share the recurrence
+
+    H_t = exp(a_t) * H_{t-1} + beta_t * k_t v_t^T        (state per head)
+    y_t = q_t @ H_t
+
+(Mamba2: q=C, k=B, a=A*dt, beta=dt; mLSTM: q/k/v with log-sigmoid forget
+and input gates.) The chunked evaluation computes the quadratic
+intra-chunk term with MXU-shaped matmuls and carries the state across
+chunks with a `lax.scan` — the state-space-duality schedule, which is the
+TPU-native form (sequence-parallel within chunks, O(S/Q) serial steps).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def chunked_gated_recurrence(q, k, v, log_decay, beta, *, chunk: int = 64,
+                             h0: Optional[jnp.ndarray] = None
+                             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """q,k: (B,S,H,Dk); v: (B,S,H,Dv); log_decay/beta: (B,S,H).
+
+    Returns (y: (B,S,H,Dv), final state (B,H,Dk,Dv)).
+    """
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    orig_s = s
+    pad = (-s) % chunk
+    if pad:
+        # pads are state-neutral: decay 0 (exp=1) and beta 0
+        zpad = lambda a: jnp.pad(a, [(0, 0), (0, pad)] +
+                                 [(0, 0)] * (a.ndim - 2))
+        q, k, v = zpad(q), zpad(k), zpad(v)
+        log_decay, beta = zpad(log_decay), zpad(beta)
+        s = s + pad
+    nc = s // chunk
+    f32 = jnp.float32
+    qc = q.reshape(b, nc, chunk, h, dk).astype(f32)
+    kc = k.reshape(b, nc, chunk, h, dk).astype(f32)
+    vc = v.reshape(b, nc, chunk, h, dv).astype(f32)
+    ac = log_decay.reshape(b, nc, chunk, h).astype(f32)
+    bc = beta.reshape(b, nc, chunk, h).astype(f32)
+
+    cums = jnp.cumsum(ac, axis=2)                       # inclusive
+    total = cums[:, :, -1:, :]                          # (B,NC,1,H)
+
+    # intra-chunk quadratic term: scores[t,s] = q_t.k_s e^{cums_t - cums_s} b_s
+    decay_ts = cums[:, :, :, None, :] - cums[:, :, None, :, :]  # (B,NC,T,S,H)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    decay_ts = jnp.where(tri[None, None, :, :, None], decay_ts, -jnp.inf)
+    qk = jnp.einsum("bcthd,bcshd->bctsh", qc, kc)
+    w = qk * jnp.exp(decay_ts) * bc[:, :, None, :, :]
+    y_intra = jnp.einsum("bctsh,bcshv->bcthv", w, vc)
+
+    # per-chunk state contribution: sum_s e^{total - cums_s} b_s k_s v_s^T
+    carry_w = jnp.exp(total - cums) * bc                # (B,NC,T,H)
+    chunk_state = jnp.einsum("bcthd,bcth,bcthv->bchdv", kc, carry_w, vc)
+    chunk_decay = jnp.exp(total[:, :, 0, :])            # (B,NC,H)
+
+    if h0 is None:
+        h0 = jnp.zeros((b, h, dk, dv), f32)
+
+    def step(hprev, inp):
+        cstate, cdecay = inp                            # (B,H,Dk,Dv),(B,H)
+        hnew = hprev * cdecay[..., None, None] + cstate
+        return hnew, hprev
+
+    hfin, hprevs = jax.lax.scan(
+        step,
+        h0,
+        (chunk_state.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    hprevs = hprevs.transpose(1, 0, 2, 3, 4)            # (B,NC,H,Dk,Dv)
+
+    # inter-chunk term: y_t += e^{cums_t} q_t @ H_prev
+    y_inter = jnp.einsum("bcthd,bchdv->bcthv", qc * jnp.exp(cums)[..., None],
+                         hprevs)
+    y = (y_intra + y_inter).reshape(b, s, h, dv)[:, :orig_s]
+    return y, hfin
+
+
+def gated_recurrence_step(h, q, k, v, log_decay, beta):
+    """Single-token decode: q,k,v (B,H,D*); log_decay/beta (B,H).
+
+    Returns (y (B,H,Dv), new state)."""
+    f32 = jnp.float32
+    h = h * jnp.exp(log_decay.astype(f32))[..., None, None]
+    h = h + (beta.astype(f32)[..., None, None]
+             * k.astype(f32)[..., :, None] * v.astype(f32)[..., None, :])
+    y = jnp.einsum("bhd,bhdv->bhv", q.astype(f32), h)
+    return y, h

@@ -1,0 +1,150 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, chunk-parallel)
+and sLSTM (scalar memory, inherently sequential scan).
+
+mLSTM maps onto the shared gated outer-product recurrence (q/k/v heads,
+sigmoid forget gate -> log decay, exp input gate clipped for stability —
+the paper's stabilizer state is replaced by gate clipping, noted in
+DESIGN.md). sLSTM keeps the paper's recurrent formulation and is lowered
+as a `lax.scan` over time — its sequential dependence is the architectural
+point, so no chunk parallelism exists to exploit.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init, init_rms, rms_norm
+from .ssm_common import chunked_gated_recurrence, gated_recurrence_step
+
+GATE_CLIP = 8.0
+
+
+# -- mLSTM ---------------------------------------------------------------------
+
+def init_mlstm(key, d_model: int, n_heads: int, *, proj_factor: float = 2.0,
+               dtype=jnp.float32) -> dict:
+    d_inner = int(d_model * proj_factor)
+    hd = d_inner // n_heads
+    ks = jax.random.split(key, 7)
+    return {
+        "w_up": dense_init(ks[0], d_model, 2 * d_inner, dtype),
+        "wq": dense_init(ks[1], d_inner, d_inner, dtype),
+        "wk": dense_init(ks[2], d_inner, d_inner, dtype),
+        "wv": dense_init(ks[3], d_inner, d_inner, dtype),
+        "w_if": dense_init(ks[4], d_inner, 2 * n_heads, dtype, scale=0.02),
+        "norm": init_rms(d_inner, dtype),
+        "w_down": dense_init(ks[5], d_inner, d_model, dtype),
+    }
+
+
+def mlstm(p: dict, xin: jnp.ndarray, *, n_heads: int, chunk: int = 64,
+          compute_dtype=jnp.bfloat16, cache: Optional[dict] = None
+          ) -> Tuple[jnp.ndarray, Optional[dict]]:
+    b, s, _ = xin.shape
+    xin = xin.astype(compute_dtype)
+    up = xin @ p["w_up"].astype(compute_dtype)
+    d_inner = up.shape[-1] // 2
+    xi, gate = up[..., :d_inner], up[..., d_inner:]
+    hd = d_inner // n_heads
+
+    q = (xi @ p["wq"].astype(compute_dtype)).reshape(b, s, n_heads, hd)
+    k = (xi @ p["wk"].astype(compute_dtype)).reshape(b, s, n_heads, hd) \
+        / (hd ** 0.5)
+    v = (xi @ p["wv"].astype(compute_dtype)).reshape(b, s, n_heads, hd)
+    if_ = (xi @ p["w_if"].astype(compute_dtype)).astype(jnp.float32)
+    i_log = jnp.clip(if_[..., :n_heads], -GATE_CLIP, GATE_CLIP)
+    f_gate = jax.nn.log_sigmoid(if_[..., n_heads:])      # log decay <= 0
+    beta = jnp.exp(i_log)
+
+    if cache is None:
+        y, hfin = chunked_gated_recurrence(q, k, v, f_gate, beta, chunk=chunk)
+        new_cache = None
+    elif s == 1:
+        y1, hfin = gated_recurrence_step(
+            cache["mlstm"], q[:, 0], k[:, 0], v[:, 0], f_gate[:, 0],
+            beta[:, 0])
+        y = y1[:, None]
+        new_cache = {"mlstm": hfin}
+    else:  # prefill: chunked recurrence seeded from the cached state
+        y, hfin = chunked_gated_recurrence(q, k, v, f_gate, beta,
+                                           chunk=chunk, h0=cache["mlstm"])
+        new_cache = {"mlstm": hfin}
+    y = y.astype(compute_dtype).reshape(b, s, d_inner)
+    y = rms_norm(y, p["norm"])
+    y = y * jax.nn.silu(gate.astype(jnp.float32)).astype(compute_dtype)
+    return y @ p["w_down"].astype(compute_dtype), new_cache
+
+
+def init_mlstm_cache(batch: int, d_model: int, n_heads: int,
+                     proj_factor: float = 2.0) -> dict:
+    d_inner = int(d_model * proj_factor)
+    hd = d_inner // n_heads
+    return {"mlstm": jnp.zeros((batch, n_heads, hd, hd), jnp.float32)}
+
+
+# -- sLSTM ---------------------------------------------------------------------
+
+def init_slstm(key, d_model: int, n_heads: int, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 3)
+    hd = d_model // n_heads
+    return {
+        # input projections for (i, f, z, o) gates
+        "w_in": dense_init(ks[0], d_model, 4 * d_model, dtype),
+        # block-diagonal recurrent weights, per head
+        "r": (jax.random.normal(ks[1], (n_heads, hd, 4 * hd), jnp.float32)
+              / hd ** 0.5).astype(dtype),
+        "norm": init_rms(d_model, dtype),
+        "w_down": dense_init(ks[2], d_model, d_model, dtype),
+    }
+
+
+def slstm(p: dict, xin: jnp.ndarray, *, n_heads: int,
+          compute_dtype=jnp.bfloat16, cache: Optional[dict] = None
+          ) -> Tuple[jnp.ndarray, Optional[dict]]:
+    b, s, d = xin.shape
+    hd = d // n_heads
+    xin = xin.astype(compute_dtype)
+    gates_in = (xin @ p["w_in"].astype(compute_dtype)) \
+        .reshape(b, s, n_heads, 4 * hd).astype(jnp.float32)
+    r = p["r"].astype(jnp.float32)
+
+    if cache is None:
+        h0 = jnp.zeros((b, n_heads, hd), jnp.float32)
+        c0 = jnp.zeros_like(h0)
+        n0 = jnp.ones_like(h0)
+        m0 = jnp.zeros((b, n_heads, hd), jnp.float32)
+    else:
+        h0, c0, n0, m0 = (cache["h"], cache["c"], cache["n"], cache["m"])
+
+    def cell(carry, g_t):
+        h, c, n, m = carry
+        rec = jnp.einsum("bhd,hdk->bhk", h, r)           # (B,H,4hd)
+        z_all = g_t + rec
+        i_log = jnp.clip(z_all[..., 0 * hd:1 * hd], -GATE_CLIP, GATE_CLIP)
+        f_log = jax.nn.log_sigmoid(z_all[..., 1 * hd:2 * hd])
+        z = jnp.tanh(z_all[..., 2 * hd:3 * hd])
+        o = jax.nn.sigmoid(z_all[..., 3 * hd:4 * hd])
+        m_new = jnp.maximum(f_log + m, i_log)            # stabilizer
+        i = jnp.exp(i_log - m_new)
+        f = jnp.exp(f_log + m - m_new)
+        c_new = f * c + i * z
+        n_new = f * n + i
+        h_new = o * c_new / jnp.maximum(jnp.abs(n_new), 1.0)
+        return (h_new, c_new, n_new, m_new), h_new
+
+    (hT, cT, nT, mT), hs = jax.lax.scan(
+        cell, (h0, c0, n0, m0), gates_in.transpose(1, 0, 2, 3))
+    y = hs.transpose(1, 0, 2, 3).reshape(b, s, d).astype(compute_dtype)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"h": hT, "c": cT, "n": nT, "m": mT}
+    y = rms_norm(y, p["norm"])
+    return y @ p["w_down"].astype(compute_dtype), new_cache
+
+
+def init_slstm_cache(batch: int, d_model: int, n_heads: int) -> dict:
+    hd = d_model // n_heads
+    z = jnp.zeros((batch, n_heads, hd), jnp.float32)
+    return {"h": z, "c": z, "n": jnp.ones_like(z), "m": z}

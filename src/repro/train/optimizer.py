@@ -1,0 +1,84 @@
+"""AdamW with low-precision moments + LR schedule + global-norm clipping.
+
+Moments are stored in ``state_dtype`` (bf16 by default) and upcast at the
+update — the distributed-memory trick that lets deepseek-v3-671b training
+fit 512 v5e chips (napkin in DESIGN.md §6). All math runs in fp32.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    state_dtype: str = "bfloat16"
+
+
+def lr_at(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (0.1 + 0.9 * cos)
+
+
+def init_opt_state(cfg: AdamWConfig, params) -> dict:
+    dt = jnp.dtype(cfg.state_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(cfg: AdamWConfig, params, grads, state
+                 ) -> Tuple[Any, dict]:
+    step = state["step"] + 1
+    lr = lr_at(cfg, step)
+    if cfg.clip_norm is not None:
+        gn = global_norm(grads)
+        scale = jnp.minimum(1.0, cfg.clip_norm / (gn + 1e-9))
+        grads = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+
+    bc1 = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+    sdt = jnp.dtype(cfg.state_dtype)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m32 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g32
+        v32 = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g32 * g32
+        mh = m32 / bc1
+        vh = v32 / bc2
+        delta = mh / (jnp.sqrt(vh) + cfg.eps)
+        p32 = p.astype(jnp.float32)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            delta = delta + cfg.weight_decay * p32
+        return ((p32 - lr * delta).astype(p.dtype),
+                m32.astype(sdt), v32.astype(sdt))
+
+    flat = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    new_params = jax.tree.map(lambda t: t[0], flat,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], flat,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], flat,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, {"m": new_m, "v": new_v, "step": step}

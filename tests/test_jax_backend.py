@@ -1,0 +1,178 @@
+"""JAX backend vs. simulator/numpy: same graphs, TPU-native execution."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as hst
+
+from repro.core import coord_ops as co
+from repro.core.custard import compile_expr
+from repro.core.einsum import parse
+from repro.core.jax_backend import execute_expr, execute_graph
+from repro.core.schedule import Format, Schedule, build_inputs
+
+import jax.numpy as jnp
+
+RNG = np.random.default_rng(7)
+
+
+def sparse(shape, density=0.4):
+    return ((RNG.random(shape) < density)
+            * RNG.integers(1, 9, shape)).astype(float)
+
+
+DIMS = {"i": 7, "j": 6, "k": 5, "l": 4}
+
+SINGLE_TERM = [
+    ("SpMV", "x(i) = B(i,j) * c(j)", "ij", {"B": "cc", "c": "c"}),
+    ("SpMSpM_lc", "X(i,j) = B(i,k) * C(k,j)", "ikj", {"B": "cc", "C": "cc"}),
+    ("SpMSpM_ip", "X(i,j) = B(i,k) * C(k,j)", "ijk", {"B": "cc", "C": "cc"}),
+    ("SpMSpM_op", "X(i,j) = B(i,k) * C(k,j)", "kij", {"B": "cc", "C": "cc"}),
+    ("SDDMM", "X(i,j) = B(i,j) * C(i,k) * D(j,k)", "ijk",
+     {"B": "cc", "C": "cc", "D": "cc"}),
+    ("InnerProd", "x = B(i,j,k) * C(i,j,k)", "ijk", {"B": "ccc", "C": "ccc"}),
+    ("TTV", "X(i,j) = B(i,j,k) * c(k)", "ijk", {"B": "ccc", "c": "c"}),
+    ("TTM", "X(i,j,k) = B(i,j,l) * C(k,l)", "ijkl", {"B": "ccc", "C": "cc"}),
+    ("MTTKRP", "X(i,j) = B(i,k,l) * C(j,k) * D(j,l)", "ijkl",
+     {"B": "ccc", "C": "cc", "D": "cc"}),
+    ("Elemwise", "X(i,j) = B(i,j) * C(i,j)", "ij", {"B": "cc", "C": "cc"}),
+    ("DenseVec", "x(i) = B(i,j) * c(j)", "ij", {"B": "cc", "c": "d"}),
+]
+
+
+def make_arrays(assign):
+    arrays = {}
+    for term in assign.terms:
+        for acc in term.factors:
+            if acc.tensor not in arrays:
+                arrays[acc.tensor] = (
+                    np.asarray(float(RNG.integers(1, 5))) if not acc.vars
+                    else sparse(tuple(DIMS[v] for v in acc.vars)))
+    return arrays
+
+
+def np_oracle(assign, arrays):
+    total = None
+    for t in assign.terms:
+        spec = ",".join("".join(f.vars) for f in t.factors)
+        out = np.einsum(spec + "->" + "".join(assign.result_vars),
+                        *[arrays[f.tensor] for f in t.factors])
+        total = t.sign * out if total is None else total + t.sign * out
+    return total
+
+
+@pytest.mark.parametrize("name,expr,order,fmts", SINGLE_TERM,
+                         ids=[c[0] for c in SINGLE_TERM])
+def test_backend_matches_numpy(name, expr, order, fmts):
+    assign = parse(expr)
+    arrays = make_arrays(assign)
+    fmt = Format(dict(fmts))
+    sch = Schedule(loop_order=tuple(order))
+    got = execute_expr(expr, fmt, sch, arrays, DIMS).to_dense()
+    np.testing.assert_allclose(got, np_oracle(assign, arrays), err_msg=name)
+
+
+@pytest.mark.parametrize("name,expr,order,fmts", [
+    ("Residual", "x(i) = b(i) - C(i,j) * d(j)", "ij",
+     {"b": "c", "C": "cc", "d": "c"}),
+    ("MMAdd", "X(i,j) = B(i,j) + C(i,j)", "ij", {"B": "cc", "C": "cc"}),
+    ("Plus3", "X(i,j) = B(i,j) + C(i,j) + D(i,j)", "ij",
+     {"B": "cc", "C": "cc", "D": "cc"}),
+], ids=["Residual", "MMAdd", "Plus3"])
+def test_backend_multiterm(name, expr, order, fmts):
+    assign = parse(expr)
+    arrays = make_arrays(assign)
+    got = execute_expr(expr, Format(dict(fmts)),
+                       Schedule(loop_order=tuple(order)), arrays,
+                       DIMS).to_dense()
+    np.testing.assert_allclose(got, np_oracle(assign, arrays), err_msg=name)
+
+
+def test_backend_locate_schedule():
+    B, c = sparse((9, 8), 0.3), sparse(8, 0.9)
+    sch = Schedule(loop_order=("i", "j"), locate=frozenset({("c", "j")}))
+    got = execute_expr("x(i) = B(i,j) * c(j)",
+                       Format({"B": "cc", "c": "d"}), sch,
+                       {"B": B, "c": c}, {"i": 9, "j": 8}).to_dense()
+    np.testing.assert_allclose(got, B @ c)
+
+
+# -- coord_ops property tests -------------------------------------------------
+@settings(max_examples=15, deadline=None)
+@given(hst.integers(0, 2**31 - 1))
+def test_intersect_keys_property(seed):
+    rng = np.random.default_rng(seed)
+    a = np.unique(rng.integers(0, 40, rng.integers(1, 20)))
+    b = np.unique(rng.integers(0, 40, rng.integers(1, 20)))
+    ak = jnp.asarray(a, jnp.int64)
+    bk = jnp.asarray(b, jnp.int64)
+    hit, idx = co.intersect_keys(ak, jnp.ones(len(a), bool),
+                                 bk, jnp.ones(len(b), bool))
+    got = set(np.asarray(ak)[np.asarray(hit)].tolist())
+    assert got == set(a) & set(b)
+    # surviving b references point at the matching key
+    for p, h in zip(np.asarray(idx), np.asarray(hit)):
+        if h:
+            assert b[p] in (set(a) & set(b))
+
+
+@settings(max_examples=15, deadline=None)
+@given(hst.integers(0, 2**31 - 1))
+def test_union_keys_property(seed):
+    rng = np.random.default_rng(seed)
+    a = np.unique(rng.integers(0, 30, rng.integers(1, 15)))
+    b = np.unique(rng.integers(0, 30, rng.integers(1, 15)))
+    cap = 64
+    keys, in_a, _, in_b, _, valid = co.union_keys(
+        jnp.asarray(a, jnp.int64), jnp.ones(len(a), bool),
+        jnp.asarray(b, jnp.int64), jnp.ones(len(b), bool), cap)
+    got = np.asarray(keys)[np.asarray(valid)]
+    assert got.tolist() == sorted(set(a) | set(b))
+    np.testing.assert_array_equal(
+        np.asarray(in_a)[np.asarray(valid)],
+        np.isin(got, a))
+
+
+@settings(max_examples=15, deadline=None)
+@given(hst.integers(0, 2**31 - 1))
+def test_sorted_segment_reduce_property(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(1, 40))
+    keys = rng.integers(0, 10, n)
+    vals = rng.normal(size=n)
+    valid = rng.random(n) < 0.8
+    cap = 48
+    uk, uv, uvalid = co.sorted_segment_reduce(
+        jnp.asarray(keys, jnp.int64), jnp.asarray(vals, jnp.float32),
+        jnp.asarray(valid), cap)
+    want = {}
+    for k, v, ok in zip(keys, vals, valid):
+        if ok:
+            want[k] = want.get(k, 0.0) + v
+    got = {int(k): float(v) for k, v, ok in
+           zip(np.asarray(uk), np.asarray(uv), np.asarray(uvalid)) if ok}
+    assert set(got) == set(want)
+    for k in want:
+        np.testing.assert_allclose(got[k], want[k], rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(hst.integers(0, 2**31 - 1))
+def test_scan_level_property(seed):
+    rng = np.random.default_rng(seed)
+    nf = int(rng.integers(1, 6))
+    lens = rng.integers(0, 5, nf)
+    seg = np.concatenate([[0], np.cumsum(lens)]).astype(np.int32)
+    crd = rng.integers(0, 100, int(seg[-1])).astype(np.int32)
+    refs = rng.permutation(nf)[: max(1, nf - 1)].astype(np.int32)
+    cap = 64
+    ocrd, oref, sid, valid = co.scan_level(
+        jnp.asarray(seg), jnp.asarray(crd), jnp.asarray(refs),
+        jnp.ones(len(refs), bool), cap)
+    got_c = np.asarray(ocrd)[np.asarray(valid)]
+    want = np.concatenate([crd[seg[r]:seg[r + 1]] for r in refs]) \
+        if len(refs) else np.zeros(0)
+    np.testing.assert_array_equal(got_c, want)
+    # parent ids point at the right input slot
+    for c, s, ok in zip(np.asarray(ocrd), np.asarray(sid), np.asarray(valid)):
+        if ok:
+            r = refs[s]
+            assert c in crd[seg[r]:seg[r + 1]]

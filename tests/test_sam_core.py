@@ -1,0 +1,101 @@
+"""Unit + property tests for the SAM core: streams, fibertree, simulator."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as hst
+
+from repro.core import streams as st
+from repro.core.fibertree import BV_WIDTH, FiberTree
+from repro.core.graph import Graph, LEVEL_SCAN, ROOT
+from repro.core.streams import D, N, Stop
+
+
+# -- paper wire-encoding golden examples -------------------------------------
+def test_fig1d_value_stream():
+    # ((1),(2,3),(4,5))  <->  1 S0 2 3 S0 4 5 S1 D   (paper §3.2)
+    toks = st.nested_to_tokens([[1], [2, 3], [4, 5]])
+    assert toks == [1, Stop(0), 2, 3, Stop(0), 4, 5, Stop(1), D]
+
+
+def test_fig7_reducer_streams():
+    toks = st.nested_to_tokens([[3, 1], [2, 0], [1]])
+    assert toks == [3, 1, Stop(0), 2, 0, Stop(0), 1, Stop(1), D]
+    out = st.nested_to_tokens([0, 1, 2, 3])
+    assert out == [0, 1, 2, 3, Stop(0), D]
+
+
+def test_empty_fiber_encoding():
+    toks = st.nested_to_tokens([[1], [], [2]])
+    assert toks == [1, Stop(0), Stop(0), 2, Stop(1), D]
+    assert st.tokens_to_nested(toks) == [[1], [], [2]]
+
+
+def test_empty_token():
+    toks = st.nested_to_tokens([[1, None], [2]])
+    assert toks == [1, N, Stop(0), 2, Stop(1), D]
+    assert st.tokens_to_nested(toks) == [[1, None], [2]]
+
+
+# -- property: token <-> nested bijection -------------------------------------
+def nested_strategy(depth):
+    leaf = hst.integers(min_value=0, max_value=50)
+    s = hst.lists(leaf, min_size=0, max_size=4)
+    for _ in range(depth - 1):
+        s = hst.lists(s, min_size=1, max_size=3)
+    return s
+
+
+@settings(max_examples=200, deadline=None)
+@given(hst.integers(min_value=1, max_value=4).flatmap(nested_strategy))
+def test_stream_roundtrip(nested):
+    toks = st.nested_to_tokens(nested)
+    back = st.tokens_to_nested(toks, depth=st.nested_depth(nested))
+    assert back == st.normalize(nested)
+
+
+@settings(max_examples=100, deadline=None)
+@given(hst.integers(min_value=0, max_value=2**32 - 1),
+       hst.integers(min_value=2, max_value=5),
+       hst.integers(min_value=2, max_value=5))
+def test_fibertree_roundtrip_property(seed, rows, cols):
+    rng = np.random.default_rng(seed)
+    arr = ((rng.random((rows, cols)) < 0.4)
+           * rng.integers(1, 9, (rows, cols))).astype(float)
+    for fmt in ("cc", "dc", "cd", "dd", "cb", "bc"):
+        ft = FiberTree.from_dense(arr, fmt)
+        np.testing.assert_array_equal(ft.to_dense(), arr)
+
+
+def test_fibertree_fig1_dcsr():
+    A = np.array([[0, 1, 0, 0], [2, 0, 3, 0], [0, 0, 0, 0], [0, 4, 0, 5]],
+                 dtype=float)
+    ft = FiberTree.from_dense(A, "cc")
+    np.testing.assert_array_equal(ft.levels[0].crd, [0, 1, 3])
+    np.testing.assert_array_equal(ft.levels[0].seg, [0, 3])
+    np.testing.assert_array_equal(ft.levels[1].crd, [1, 0, 2, 1, 3])
+    np.testing.assert_array_equal(ft.levels[1].seg, [0, 1, 3, 5])
+    np.testing.assert_array_equal(ft.vals, [1, 2, 3, 4, 5])
+
+
+def test_bitvector_level_popcount_refs():
+    v = np.zeros(2 * BV_WIDTH)
+    v[[0, 3, BV_WIDTH + 1]] = [1.0, 2.0, 3.0]
+    ft = FiberTree.from_dense(v, "b")
+    crds, refs = ft.levels[0].fiber(0)
+    np.testing.assert_array_equal(crds, [0, 3, BV_WIDTH + 1])
+    np.testing.assert_array_equal(refs, [0, 1, 2])
+
+
+def test_graph_validation_catches_cycles():
+    G = Graph()
+    a = G.add(ROOT, "r")
+    b = G.add(LEVEL_SCAN, "s", tensor="B", mode=0, var="i")
+    G.connect(a, "ref", b, "ref", st.REF)
+    G.connect(b, "ref", b, "ref", st.REF)   # self-loop
+    with pytest.raises(ValueError):
+        G.validate()
+
+
+def test_token_type_counts():
+    toks = st.nested_to_tokens([[1, None], [], [2]])
+    c = st.token_type_counts(toks)
+    assert c == {"data": 2, "stop": 3, "done": 1, "empty": 1}
