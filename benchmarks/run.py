@@ -12,13 +12,14 @@ import time
 
 
 def main() -> None:
-    from . import (fig11, fig12, fig13, fig14, fig15, moe_dispatch,
-                   table1, table2)
+    from . import (compiled_cache, fig11, fig12, fig13, fig14, fig15,
+                   moe_dispatch, table1, table2)
     benches = {
         "table1": table1.run, "table2": table2.run,
         "fig11": fig11.run, "fig12": fig12.run, "fig13": fig13.run,
         "fig14": fig14.run, "fig15": fig15.run,
         "moe_dispatch": moe_dispatch.run,
+        "compiled_cache": compiled_cache.run,
     }
     names = sys.argv[1:] or list(benches)
     rows = []

@@ -39,3 +39,13 @@ out = execute_expr(EXPR, fmt, sch, {"B": B, "c": c}, DIMS)
 print("jax backend x =", out.to_dense())
 assert np.allclose(out.to_dense(), B @ c)
 print("\nmatches B @ c — OK")
+
+# 4. the compiled engine: jit-cached executable, batched dispatch
+from repro.core.jax_backend import compile_expr as compile_engine
+
+eng = compile_engine(EXPR, fmt, sch, DIMS)
+eng({"B": B, "c": c})                         # first call records + traces
+eng({"B": B * 2, "c": c})                     # cache hit: no re-trace
+outs = eng.execute_batch([{"B": B, "c": c}, {"B": B * 3, "c": c}])
+assert np.allclose(outs[1].to_dense(), 3 * (B @ c))
+print("compiled engine stats:", eng.stats)

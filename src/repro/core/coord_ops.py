@@ -146,27 +146,43 @@ def locate_keys(level_seg, level_crd, parent_ref, probe_crd, valid):
     return found, jnp.where(found, idx, 0).astype(I32)
 
 
-def sorted_segment_reduce(keys, vals, valid, cap: int):
-    """Def 3.7 reducer for n>=1: sum ``vals`` at equal ``keys``.
+def default_segment_sum(vals, seg_ids, num_segments: int):
+    """Plain-jnp keyed segment-sum; the dispatch-table fallback impl."""
+    return jax.ops.segment_sum(vals, seg_ids, num_segments=num_segments)
+
+
+def keyed_union_reduce(keys, vals, valid, cap: int, segment_sum_impl=None):
+    """Def 3.7 reducer for n>=1 / multi-term union: sum ``vals`` at equal
+    ``keys``.
 
     Keys encode (accumulation group, coordinate point). Returns
-    (unique_keys, summed_vals, valid) of length ``cap``. This is the op the
-    ``segment_reduce`` Pallas kernel implements for the TPU hot path.
+    (unique_keys, summed_vals, valid, count) of length ``cap``; ``count`` is
+    the number of distinct live keys, so a caller with a statically chosen
+    ``cap`` can detect overflow (``count > cap`` means truncation). The
+    inner segment-sum is pluggable: ``kernels.ops`` routes it to the Pallas
+    ``segment_reduce`` MXU kernel on TPU.
     """
+    segsum = segment_sum_impl or default_segment_sum
     keys = jnp.where(valid, keys, PAD_KEY)
     order = jnp.argsort(keys)
     sk = keys[order]
     sv = jnp.where(valid[order], vals[order], 0.0)
     first = jnp.concatenate([jnp.ones((1,), bool), sk[1:] != sk[:-1]])
     seg_id = jnp.cumsum(first) - 1
-    sums = jax.ops.segment_sum(sv, seg_id, num_segments=keys.shape[0])
+    sums = segsum(sv, seg_id, keys.shape[0])
     keep = first & (sk != PAD_KEY)
-    (uk, _), count = compact(keep, (sk, sk), cap, fill=PAD_KEY)
+    (uk,), count = compact(keep, (sk,), cap, fill=PAD_KEY)
     uv = sums[: cap] if cap <= keys.shape[0] else jnp.pad(
         sums, (0, cap - keys.shape[0]))
     # sums are indexed by seg_id order == compacted order
     out_valid = jnp.arange(cap) < count
-    return uk, jnp.where(out_valid, uv, 0.0), out_valid
+    return uk, jnp.where(out_valid, uv, 0.0), out_valid, count
+
+
+def sorted_segment_reduce(keys, vals, valid, cap: int):
+    """Back-compat 3-tuple wrapper around ``keyed_union_reduce``."""
+    uk, uv, out_valid, _ = keyed_union_reduce(keys, vals, valid, cap)
+    return uk, uv, out_valid
 
 
 def segment_sum(vals, parent_idx, valid, num_parents: int):

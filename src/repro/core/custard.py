@@ -379,3 +379,67 @@ class Custard:
 def compile_expr(expr: str, fmt: Format, schedule: Schedule,
                  dims: Dict[str, int]) -> g.Graph:
     return Custard(parse(expr), fmt, schedule, dims).compile()
+
+
+# ---------------------------------------------------------------------------
+# canonical form + lowering cache (the compiled-engine front half)
+# ---------------------------------------------------------------------------
+
+def expr_cache_key(assign: Assignment, fmt: Format, schedule: Schedule,
+                   dims: Dict[str, int]) -> str:
+    """Canonical key of (expression, formats, schedule, dims).
+
+    Two invocations with the same key lower to identical SAM graphs, so the
+    key memoizes both the Custard lowering and (together with the capacity
+    bucket) the jitted executable in the JAX backend.
+    """
+    orders: Dict[str, int] = {}
+    for t in assign.terms:
+        for f in t.factors:
+            orders.setdefault(f.tensor, len(f.vars))
+    parts = [
+        "lhs=" + repr(assign.lhs),
+        "terms=" + ";".join(
+            f"{t.sign:+d}:" + "*".join(repr(f) for f in t.factors)
+            for t in assign.terms),
+        "fmt=" + ",".join(f"{t}:{fmt.of(t, o)}"
+                          for t, o in sorted(orders.items())),
+        "order=" + ",".join(schedule.loop_order),
+        "locate=" + ",".join(f"{t}.{v}" for t, v in sorted(schedule.locate)),
+        "skip=" + ",".join(sorted(schedule.skip)),
+        "bv=" + ",".join(sorted(schedule.bitvector)),
+        "split=" + ",".join(f"{k}:{v}"
+                            for k, v in sorted(schedule.split.items())),
+        "par=" + ",".join(f"{k}:{v}"
+                          for k, v in sorted(schedule.parallelize.items())),
+        "empty=" + str(schedule.reduce_empty),
+        "dims=" + ",".join(f"{k}:{v}" for k, v in sorted(dims.items())),
+    ]
+    return "|".join(parts)
+
+
+_TERM_GRAPH_CACHE: Dict[str, List[Tuple[int, g.Graph]]] = {}
+
+
+def lower_single_terms(assign: Assignment, fmt: Format, schedule: Schedule,
+                       dims: Dict[str, int]) -> List[Tuple[int, g.Graph]]:
+    """Lower each product term to its own single-term SAM graph, memoized.
+
+    Multi-term expressions are factored the same way ``execute_expr`` always
+    did (per-term graphs, signs applied outside), but the lowering now runs
+    once per canonical key instead of once per call.
+    """
+    key = expr_cache_key(assign, fmt, schedule, dims)
+    hit = _TERM_GRAPH_CACHE.get(key)
+    if hit is not None:
+        return hit
+    out: List[Tuple[int, g.Graph]] = []
+    for term in assign.terms:
+        sub = Assignment(lhs=assign.lhs, terms=(Term(1, term.factors),))
+        out.append((term.sign, Custard(sub, fmt, schedule, dims).compile()))
+    _TERM_GRAPH_CACHE[key] = out
+    return out
+
+
+def clear_lowering_cache() -> None:
+    _TERM_GRAPH_CACHE.clear()

@@ -20,6 +20,7 @@ optimization (§4):
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import itertools
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -153,6 +154,37 @@ class Graph:
         for n in self.nodes.values():
             if n.kind != ROOT and not self.in_edges(n):
                 raise ValueError(f"block {n} has no inputs")
+
+    def canonical_form(self) -> str:
+        """Deterministic textual serialization of the graph structure.
+
+        Node ids are renumbered in topological order (ties broken by
+        allocation order, which is deterministic for a given lowering), and
+        params are emitted key-sorted, so repeated lowerings of the same
+        input serialize identically. This is the basis of the
+        compiled-engine jit cache key. Note this is NOT a graph-isomorphism
+        canonical form: independently-built graphs that allocate nodes in a
+        different order can serialize differently (cost: a spurious cache
+        miss, never a wrong hit).
+        """
+        order = self.topo_order()
+        renum = {n.id: i for i, n in enumerate(order)}
+        lines = []
+        for n in order:
+            params = ",".join(f"{k}={n.params[k]!r}"
+                              for k in sorted(n.params))
+            lines.append(f"n{renum[n.id]}:{n.kind}({params})")
+        for e in sorted(self.edges,
+                        key=lambda e: (renum[e.src], e.src_port,
+                                       renum[e.dst], e.dst_port)):
+            lines.append(f"e:{renum[e.src]}.{e.src_port}->"
+                         f"{renum[e.dst]}.{e.dst_port}:{e.stream}")
+        return "\n".join(lines)
+
+    def structural_hash(self) -> str:
+        """Short stable digest of ``canonical_form`` (jit cache key part)."""
+        return hashlib.sha256(
+            self.canonical_form().encode()).hexdigest()[:16]
 
     # -- reporting -------------------------------------------------------------
     def primitive_counts(self) -> Dict[str, int]:

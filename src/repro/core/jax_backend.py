@@ -26,15 +26,27 @@ Streams carry a ``parent`` index array instead of stop tokens: element i of
 a level belongs to the fiber of element ``parent[i]`` one level up — the
 array encoding of the hierarchical control tokens of §3.2.
 
-Supported: any *single-term* expression (all of Table 1 except the additive
-rows) under any loop order with locate; multi-term expressions run one term
-at a time via ``execute_expr`` and are combined with a keyed union — the
-same factorization the paper applies to OuterSPACE's two-phase dataflow.
+Two execution modes share the block handlers:
+
+* **Eager** (``execute_graph`` / the legacy ``execute_expr`` fallback):
+  capacities are measured from the concrete data per call, which re-traces
+  every invocation. Kept as the reference path and as the capacity-recording
+  pass of the compiled engine.
+* **Compiled** (``compile_expr`` -> ``CompiledExpr``): the whole expression
+  — every term plus the cross-term combination — lowers ONCE into a single
+  ``jax.jit``-ed callable with static, bucketed capacities. The jit cache is
+  keyed on (term-graph structural hashes, format/dims, input-size bucket,
+  capacity bucket); repeat executions of the same expression hit the cache
+  with zero re-tracing. Multi-term expressions fuse into one keyed
+  union/segment-reduce instead of a per-term Python loop, and
+  ``CompiledExpr.execute_batch`` vmaps the same callable over many
+  same-format operands per dispatch (the ``launch/serve.py`` path). The full
+  compile/cache/batch pipeline is documented in DESIGN.md.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -42,6 +54,7 @@ import numpy as np
 
 from . import coord_ops as co
 from . import graph as g
+from .custard import expr_cache_key, lower_single_terms
 from .einsum import Assignment, Term, parse
 from .fibertree import COMPRESSED, DENSE, FiberTree
 from .schedule import Format, Schedule, build_inputs
@@ -141,17 +154,61 @@ class COOResult:
     strides: List[Tuple[str, int]]       # (var, dim) outer->inner
 
 
+def _val_writer_node(graph_: g.Graph) -> g.Node:
+    for n in graph_.of_kind(g.LEVEL_WRITE):
+        if n.params.get("var") == "vals":
+            return n
+    raise ValueError(f"graph {graph_.name} has no value writer")
+
+
+def coo_to_fibertree(keys, vals, valid, strides, shape, fmt_str,
+                     mode_order) -> FiberTree:
+    """Host-side decode of a keyed COO result into an output FiberTree."""
+    keys = np.asarray(keys)
+    vals = np.asarray(vals)
+    live = np.asarray(valid) & (vals != 0.0)
+    keys, vals = keys[live], vals[live]
+    coords = np.zeros((len(keys), len(strides)), dtype=np.int64)
+    rem = keys
+    for col in range(len(strides) - 1, -1, -1):
+        dim = strides[col][1]
+        coords[:, col] = rem % dim
+        rem = rem // dim
+    ft = FiberTree.from_coords(shape, coords, vals, fmt_str)
+    if mode_order is not None:
+        ft.mode_order = tuple(mode_order)
+    return ft
+
+
 class JaxBackend:
-    """Executes a single-term SAM graph on coordinate arrays."""
+    """Executes a single-term SAM graph on coordinate arrays.
+
+    Eager mode (default): stream capacities are measured from the data per
+    call (and recorded in ``caps_record`` for the compiled engine's
+    capacity-bucketing pass). Static mode (``scan_caps``/``out_cap`` given):
+    every shape is fixed up front so the whole walk jits/vmaps; the actually
+    needed sizes come back as traced scalars in ``required`` so the caller
+    can detect capacity overflow and re-bucket.
+    """
 
     def __init__(self, graph_: g.Graph, tensors: Dict[str, JTensor],
-                 dims: Dict[str, int], result_vars: List[str]):
+                 dims: Dict[str, int], result_vars: List[str], *,
+                 scan_caps: Optional[Dict[int, int]] = None,
+                 out_cap: Optional[int] = None,
+                 segsum: Optional[Callable] = None,
+                 intersect: Optional[Callable] = None):
         self.g = graph_
         self.t = tensors
         self.dims = dims
         self.result_vars = result_vars
         self.env: Dict[Tuple[int, str], Any] = {}
         self.final: Optional[COOResult] = None
+        self.scan_caps = scan_caps
+        self.out_cap = out_cap
+        self.segsum = segsum                       # keyed segment-sum impl
+        self.intersect_impl = intersect or co.intersect_keys
+        self.caps_record: Dict[str, int] = {}      # eager: exact sizes used
+        self.required: Dict[str, jnp.ndarray] = {}  # static: traced needs
 
     # -- helpers -------------------------------------------------------
     def _ins(self, node):
@@ -173,7 +230,13 @@ class JaxBackend:
         r: RefStream = ins["ref"]
         pr = jnp.clip(r.ref, 0, lv.seg.shape[0] - 2)
         lengths = jnp.where(r.valid & (r.ref >= 0), lv.seg[pr + 1] - lv.seg[pr], 0)
-        cap = self._cap(int(jnp.sum(lengths)))
+        if self.scan_caps is None:
+            need = int(jnp.sum(lengths))
+            cap = self._cap(need)
+            self.caps_record[f"s{node.id}"] = need
+        else:
+            cap = self.scan_caps[node.id]
+            self.required[f"s{node.id}"] = jnp.sum(lengths)
         crd, ref, sid, valid = co.scan_level(lv.seg, lv.crd, r.ref, r.valid, cap)
         cs = CanonStream(var=node.params["var"], crd=crd, parent_idx=sid,
                          valid=valid, dim=lv.dim, parent=r.stream)
@@ -190,7 +253,7 @@ class JaxBackend:
         akey = base.key()
         for i in range(1, m):
             bkey = crds[i].key()
-            h, idx = co.intersect_keys(akey, hit, bkey, crds[i].valid)
+            h, idx = self.intersect_impl(akey, hit, bkey, crds[i].valid)
             hit = h
             out_refs.append(refs[i].ref[idx])
             out_refs_valid.append(refs[i].valid[idx])
@@ -291,8 +354,16 @@ class JaxBackend:
             if s.parent is not None:
                 idx = s.parent_idx[idx]
         strides.reverse()                # outer -> inner
-        cap = self._cap(int(jnp.sum(valid)))
-        uk, uv, uvalid = co.sorted_segment_reduce(key, v.vals, valid, cap)
+        if self.out_cap is None:
+            need = int(jnp.sum(valid))
+            cap = self._cap(need)
+            self.caps_record["out"] = need
+        else:
+            cap = self.out_cap
+        uk, uv, uvalid, count = co.keyed_union_reduce(
+            key, v.vals, valid, cap, self.segsum)
+        if self.out_cap is not None:
+            self.required["out"] = count
         return COOResult(uk, uv, uvalid, strides)
 
     def _crd_drop(self, node, ins):
@@ -311,7 +382,7 @@ class JaxBackend:
     def _level_write(self, node, ins):
         return dict(ins)
 
-    def run(self) -> Dict[str, FiberTree]:
+    def run_nodes(self) -> None:
         handlers = {
             g.ROOT: self._root, g.LEVEL_SCAN: self._level_scan,
             g.INTERSECT: self._intersect, g.UNION: self._union_unsupported,
@@ -323,53 +394,389 @@ class JaxBackend:
             outs = handlers[node.kind](node, self._ins(node))
             for port, val in outs.items():
                 self.env[(node.id, port)] = val
-        return self._assemble()
+
+    def run_streams(self):
+        """Execute the graph; return the value-writer stream in final form:
+        a ``COOResult`` over the result coordinates, or a traced scalar."""
+        self.run_nodes()
+        n = _val_writer_node(self.g)
+        v = self.env[(n.id, "val")]
+        if isinstance(v, COOResult):
+            return v
+        if isinstance(v, ValStream):
+            if v.stream is None:     # scalar result
+                return jnp.sum(jnp.where(v.valid, v.vals, 0.0))
+            return self._collapse_to_result(v)
+        raise TypeError(type(v))
+
+    def run(self) -> Dict[str, FiberTree]:
+        v = self.run_streams()
+        n = _val_writer_node(self.g)
+        tname = n.params["tensor"]
+        if not isinstance(v, COOResult):           # scalar result
+            return {tname: FiberTree.from_dense(
+                np.asarray(float(v)), "")}
+        fmt = n.params.get("format", "c" * len(v.strides)) or ""
+        return {tname: coo_to_fibertree(
+            v.keys, v.vals, v.valid, v.strides, n.params.get("shape", ()),
+            fmt, n.params.get("mode_order"))}
 
     def _union_unsupported(self, node, ins):
         raise NotImplementedError(
-            "multi-term graphs: use execute_expr (per-term + keyed union)")
+            "multi-term graphs: compile per term (see CompiledExpr) and "
+            "combine with the fused keyed union")
+
+
+# ---------------------------------------------------------------------------
+# compiled engine
+# ---------------------------------------------------------------------------
+
+def _bucket(n: int) -> int:
+    """Static-capacity bucket: next power of two, floor 8. Bucketing keeps
+    the number of distinct jit signatures logarithmic in the data size."""
+    return 8 if n <= 8 else 1 << (n - 1).bit_length()
+
+
+def _bucket_cap(n: int) -> int:
+    """Bucket an intermediate-stream capacity with 25% headroom so sizes
+    recorded just under a power of two don't regrow on the next call."""
+    return _bucket(int(n * 1.25))
+
+
+def _bucket_batch(b: int) -> int:
+    return 1 if b <= 1 else 1 << (b - 1).bit_length()
+
+
+def _pad_end(a: jnp.ndarray, n: int, fill) -> jnp.ndarray:
+    if a.shape[0] >= n:
+        return a
+    pad = jnp.full((n - a.shape[0],), fill, a.dtype)
+    return jnp.concatenate([a, pad])
+
+
+@dataclasses.dataclass
+class _Plan:
+    """One jitted executable: static capacities + the callable."""
+    caps: Dict[str, int]
+    fn: Callable
+
+
+_COMPILED: Dict[Tuple[str, bool], "CompiledExpr"] = {}
+
+
+class CompiledExpr:
+    """A Custard expression lowered once into jit-cached JAX callables.
+
+    Lifecycle per call:
+
+    1. operands -> concordant fibertrees -> coordinate arrays, padded to
+       power-of-two **input buckets** (the jit signature stays stable while
+       nnz wobbles inside a bucket);
+    2. plan lookup by input signature. A miss runs the eager backend once as
+       a **capacity-recording pass**, buckets every intermediate stream
+       capacity, and jits the full multi-term executable (shared module-wide
+       via the (graph hash, dims, bucket, caps) key);
+    3. the jitted callable runs every term and fuses them with one keyed
+       union/segment-reduce; it also returns the true required sizes, so a
+       **capacity overflow** (data needs more than the bucketed caps) grows
+       the plan and re-runs — results are never silently truncated;
+    4. the COO result is decoded host-side into an output FiberTree.
+
+    ``execute_batch`` vmaps the same core over stacked same-format operands
+    (one dispatch for B expressions), padding the batch to a power of two.
+    """
+
+    def __init__(self, expr, fmt: Format, schedule: Schedule,
+                 dims: Dict[str, int], *, use_kernels: bool = True):
+        self.assign: Assignment = parse(expr) if isinstance(expr, str) else expr
+        self.fmt = fmt
+        self.schedule = schedule
+        self.dims = dict(dims)
+        self.cache_key = expr_cache_key(self.assign, fmt, schedule, self.dims)
+        lowered = lower_single_terms(self.assign, fmt, schedule, self.dims)
+        self.signs = [s for s, _ in lowered]
+        self.graphs = [G for _, G in lowered]
+        self.graph_hashes = tuple(G.structural_hash() for G in self.graphs)
+        self.rvars = [v for v in schedule.loop_order
+                      if v in self.assign.result_vars]
+        self._scalar = not self.rvars
+        writer = _val_writer_node(self.graphs[0])
+        self._out_shape = writer.params.get("shape", ())
+        self._out_fmt = (writer.params.get("format")
+                         or "c" * len(self.rvars))
+        self._mode_order = writer.params.get("mode_order")
+        self._strides = [(v, self.dims[v]) for v in self.rvars]
+        self._segsum = None
+        self._intersect = None
+        if use_kernels:
+            try:
+                from ..kernels import ops as kops
+                self._segsum = kops.sam_primitive("keyed_segment_sum")
+                self._intersect = kops.sam_primitive("sorted_intersect")
+            except ImportError:      # kernels layer unavailable: coord_ops
+                pass
+        self._level_meta: Dict[str, List[Tuple[str, int]]] = {}
+        self._plans: Dict[Tuple, _Plan] = {}
+        self._batch_plans: Dict[Tuple, _Plan] = {}
+        self._jit_cache: Dict[Tuple, Callable] = {}
+        self.stats = {"traces": 0, "plan_hits": 0, "plan_misses": 0,
+                      "overflow_retries": 0, "calls": 0, "batch_calls": 0}
+
+    # -- operand flattening ------------------------------------------------
+    def _raw_flat(self, arrays: Dict[str, np.ndarray]) -> Dict[str, Any]:
+        tensors = build_inputs(self.assign, self.fmt, self.schedule, arrays)
+        raw = {}
+        for name, ft in tensors.items():
+            self._level_meta.setdefault(
+                name, [(lv.format, lv.dim) for lv in ft.levels])
+            jt = JTensor.from_fibertree(ft)
+            raw[name] = {"segs": tuple(lv.seg for lv in jt.levels),
+                         "crds": tuple(lv.crd for lv in jt.levels),
+                         "vals": jt.vals}
+        return raw
+
+    def _pad_flat(self, raw, hints=None):
+        """Pad operand arrays to power-of-two buckets.
+
+        Only compressed-level coordinate counts are bucketed independently;
+        segment lengths (parents+1), dense-level expansions, and the value
+        array length all DERIVE from the parent-level bucket, so the jit
+        signature depends on nothing but per-level nnz buckets (a size
+        sitting on a parents+1 boundary cannot flip the signature).
+        """
+        flat, sig = {}, []
+        for name in sorted(raw):
+            e = raw[name]
+            segs, crds, lsig = [], [], []
+            num_parents = 1
+            for i, (fmt_l, dim) in enumerate(self._level_meta[name]):
+                ns = num_parents + 1
+                if fmt_l == DENSE:
+                    nc = num_parents * dim
+                    segs.append(jnp.arange(ns, dtype=jnp.int32) * dim)
+                    crds.append(jnp.tile(jnp.arange(dim, dtype=jnp.int32),
+                                         num_parents))
+                else:
+                    c = e["crds"][i]
+                    nc = (hints[name][i] if hints
+                          else _bucket(c.shape[0]))
+                    s = e["segs"][i]
+                    segs.append(_pad_end(s, ns, s[-1]))
+                    crds.append(_pad_end(c, nc, 0))
+                lsig.append((ns, nc))
+                num_parents = nc
+            vals = _pad_end(e["vals"], num_parents, 0.0)
+            flat[name] = {"segs": tuple(segs), "crds": tuple(crds),
+                          "vals": vals}
+            sig.append((name, tuple(lsig), vals.shape[0]))
+        return flat, tuple(sig)
+
+    def _tensors_from_flat(self, flat) -> Dict[str, JTensor]:
+        out = {}
+        for name, e in flat.items():
+            out[name] = JTensor(
+                [JLevel(s, c, d)
+                 for s, c, (_, d) in zip(e["segs"], e["crds"],
+                                         self._level_meta[name])],
+                e["vals"])
+        return out
+
+    # -- plan construction -------------------------------------------------
+    def _record_caps(self, flats: Sequence[Dict]) -> Dict[str, int]:
+        """Eager capacity-recording pass over one (or, batched, every)
+        concrete padded operand set; returns bucketed static capacities."""
+        caps: Dict[str, int] = {}
+        fused_need = 0
+        for flat in flats:
+            tensors = self._tensors_from_flat(flat)
+            call_fused = 0
+            for ti, G in enumerate(self.graphs):
+                be = JaxBackend(G, tensors, self.dims, self.rvars)
+                v = be.run_streams()
+                for k, n in be.caps_record.items():
+                    key = f"t{ti}.{k}"
+                    caps[key] = max(caps.get(key, 0), n)
+                if isinstance(v, COOResult):
+                    call_fused += int(jnp.sum(v.valid))
+            fused_need = max(fused_need, call_fused)
+        caps = {k: _bucket_cap(n) for k, n in caps.items()}
+        if len(self.graphs) > 1 and not self._scalar:
+            caps["fused"] = _bucket_cap(fused_need)
+        return caps
+
+    def _build_core(self, caps: Dict[str, int], batch: bool) -> Callable:
+        # Pallas-backed impls are dispatched per single execution; the
+        # vmapped batch path keeps the plain-jnp fallbacks (pallas_call
+        # batching is not guaranteed in interpret mode).
+        segsum = None if batch else self._segsum
+        intersect = None if batch else self._intersect
+        scan_caps = [
+            {n.id: caps[f"t{ti}.s{n.id}"] for n in G.of_kind(g.LEVEL_SCAN)}
+            for ti, G in enumerate(self.graphs)]
+        out_caps = [caps.get(f"t{ti}.out") for ti in range(len(self.graphs))]
+        signs = self.signs
+
+        def core(flat):
+            self.stats["traces"] += 1      # runs only while jax traces
+            tensors = self._tensors_from_flat(flat)
+            required: Dict[str, jnp.ndarray] = {}
+            outs = []
+            for ti, G in enumerate(self.graphs):
+                be = JaxBackend(G, tensors, self.dims, self.rvars,
+                                scan_caps=scan_caps[ti], out_cap=out_caps[ti],
+                                segsum=segsum, intersect=intersect)
+                outs.append(be.run_streams())
+                for k, r in be.required.items():
+                    required[f"t{ti}.{k}"] = r
+            if self._scalar:
+                total = signs[0] * outs[0]
+                for s, v in zip(signs[1:], outs[1:]):
+                    total = total + s * v
+                return {"scalar": total}, required
+            if len(outs) == 1:
+                coo = outs[0]
+                vals = coo.vals if signs[0] == 1 else signs[0] * coo.vals
+                return {"keys": coo.keys, "vals": vals,
+                        "valid": coo.valid}, required
+            # multi-term fusion: ONE keyed union/segment-reduce combines
+            # every term (sums commute; signs fold into the values)
+            keys = jnp.concatenate([c.keys for c in outs])
+            vals = jnp.concatenate(
+                [c.vals if s == 1 else s * c.vals
+                 for s, c in zip(signs, outs)])
+            valid = jnp.concatenate([c.valid for c in outs])
+            uk, uv, uvalid, count = co.keyed_union_reduce(
+                keys, vals, valid, caps["fused"], segsum)
+            required["fused"] = count
+            return {"keys": uk, "vals": uv, "valid": uvalid}, required
+
+        return core
+
+    def _install_plan(self, sig, caps: Dict[str, int], *, batch: bool,
+                      b_pad: Optional[int] = None) -> _Plan:
+        # Per-engine jit cache (engines themselves are deduplicated
+        # process-wide by canonical key via compile_expr): the graph hashes
+        # in the key tie each executable to the exact lowering it runs.
+        jit_key = (self.graph_hashes,
+                   tuple(sorted(self.dims.items())), tuple(self.rvars),
+                   sig, tuple(sorted(caps.items())), batch, b_pad,
+                   self._segsum is not None)
+        fn = self._jit_cache.get(jit_key)
+        if fn is None:
+            core = self._build_core(caps, batch)
+            fn = jax.jit(jax.vmap(core)) if batch else jax.jit(core)
+            self._jit_cache[jit_key] = fn
+        plan = _Plan(caps=caps, fn=fn)
+        if batch:
+            self._batch_plans[(sig, b_pad)] = plan
+        else:
+            self._plans[sig] = plan
+        return plan
+
+    def _run_plan(self, plan: _Plan, sig, flat, *, batch: bool,
+                  b_pad: Optional[int] = None):
+        """Run, detecting capacity overflow; grow buckets and retry. Each
+        retry can reveal larger downstream needs (truncation hid elements),
+        so loop to a fixpoint."""
+        for _ in range(32):
+            out, required = plan.fn(flat)
+            grow = {}
+            for k, r in required.items():
+                need = int(jnp.max(r)) if batch else int(r)
+                if need > plan.caps[k]:
+                    grow[k] = _bucket_cap(need)
+            if not grow:
+                return out
+            self.stats["overflow_retries"] += 1
+            plan = self._install_plan(sig, {**plan.caps, **grow},
+                                      batch=batch, b_pad=b_pad)
+        raise RuntimeError("compiled SAM capacity growth did not converge")
 
     # -- output assembly ---------------------------------------------------
-    def _assemble(self) -> Dict[str, FiberTree]:
-        out: Dict[str, FiberTree] = {}
-        for n in self.g.of_kind(g.LEVEL_WRITE):
-            if n.params.get("var") != "vals":
-                continue
-            v = self.env[(n.id, "val")]
-            tname = n.params["tensor"]
-            shape = n.params.get("shape", ())
-            mo = n.params.get("mode_order")
-            if isinstance(v, COOResult):
-                coo = v
-            elif isinstance(v, ValStream):
-                if v.stream is None:     # scalar result
-                    val = float(jnp.sum(jnp.where(v.valid, v.vals, 0.0)))
-                    out[tname] = FiberTree.from_dense(np.asarray(val), "")
-                    continue
-                coo = self._collapse_to_result(v)
-            else:
-                raise TypeError(type(v))
-            keys = np.asarray(coo.keys)
-            vals = np.asarray(coo.vals)
-            valid = np.asarray(coo.valid) & (vals != 0.0)
-            keys, vals = keys[valid], vals[valid]
-            coords = np.zeros((len(keys), len(coo.strides)), dtype=np.int64)
-            rem = keys
-            for col in range(len(coo.strides) - 1, -1, -1):
-                dim = coo.strides[col][1]
-                coords[:, col] = rem % dim
-                rem = rem // dim
-            fmt = n.params.get("format", "c" * len(coo.strides))
-            ft = FiberTree.from_coords(shape, coords, vals, fmt)
-            if mo is not None:
-                ft.mode_order = tuple(mo)
-            out[tname] = ft
-        return out
+    def _assemble_out(self, out, b: Optional[int] = None) -> FiberTree:
+        if "scalar" in out:
+            v = out["scalar"] if b is None else out["scalar"][b]
+            return FiberTree.from_dense(np.asarray(float(v)), "")
+        sel = (lambda a: a) if b is None else (lambda a: a[b])
+        return coo_to_fibertree(sel(out["keys"]), sel(out["vals"]),
+                                sel(out["valid"]), self._strides,
+                                self._out_shape, self._out_fmt,
+                                self._mode_order)
+
+    # -- public execution --------------------------------------------------
+    def __call__(self, arrays: Dict[str, np.ndarray]) -> FiberTree:
+        self.stats["calls"] += 1
+        flat, sig = self._pad_flat(self._raw_flat(arrays))
+        plan = self._plans.get(sig)
+        if plan is None:
+            self.stats["plan_misses"] += 1
+            caps = self._record_caps([flat])
+            plan = self._install_plan(sig, caps, batch=False)
+        else:
+            self.stats["plan_hits"] += 1
+        out = self._run_plan(plan, sig, flat, batch=False)
+        return self._assemble_out(out)
+
+    def execute_batch(self, arrays_list: Sequence[Dict[str, np.ndarray]]
+                      ) -> List[FiberTree]:
+        """Execute many same-format operand sets in ONE vmapped dispatch."""
+        if not arrays_list:
+            return []
+        self.stats["batch_calls"] += 1
+        raws = [self._raw_flat(a) for a in arrays_list]
+        # common bucket per compressed level: max over the batch members
+        hints = {}
+        for name in raws[0]:
+            hints[name] = [
+                max(_bucket(r[name]["crds"][i].shape[0]) for r in raws)
+                for i in range(len(raws[0][name]["crds"]))]
+        flats_sigs = [self._pad_flat(r, hints) for r in raws]
+        flats = [f for f, _ in flats_sigs]
+        sig = flats_sigs[0][1]
+        b = len(flats)
+        b_pad = _bucket_batch(b)
+        if b_pad > b:      # pad the dispatch with empty operand sets
+            filler = jax.tree_util.tree_map(jnp.zeros_like, flats[0])
+            flats = flats + [filler] * (b_pad - b)
+        stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *flats)
+        key = (sig, b_pad)
+        plan = self._batch_plans.get(key)
+        if plan is None:
+            self.stats["plan_misses"] += 1
+            caps = self._record_caps(flats[:b])
+            plan = self._install_plan(sig, caps, batch=True, b_pad=b_pad)
+        else:
+            self.stats["plan_hits"] += 1
+        out = self._run_plan(plan, key, stacked, batch=True, b_pad=b_pad)
+        return [self._assemble_out(out, b=i) for i in range(b)]
 
 
 # ---------------------------------------------------------------------------
 # public API
 # ---------------------------------------------------------------------------
+
+def compile_expr(expr, fmt: Format, schedule: Schedule,
+                 dims: Dict[str, int], *,
+                 use_kernels: bool = True) -> CompiledExpr:
+    """Compile an expression once into a jit-cached executable engine.
+
+    Repeated calls with the same (expression, formats, schedule, dims)
+    return the SAME engine, so its plans and the underlying jit cache are
+    shared process-wide.
+    """
+    assign = parse(expr) if isinstance(expr, str) else expr
+    key = (expr_cache_key(assign, fmt, schedule, dims), use_kernels)
+    eng = _COMPILED.get(key)
+    if eng is None:
+        eng = CompiledExpr(assign, fmt, schedule, dims,
+                           use_kernels=use_kernels)
+        _COMPILED[key] = eng
+    return eng
+
+
+def clear_compile_cache() -> None:
+    _COMPILED.clear()
+
 
 def execute_graph(graph_: g.Graph, tensors: Dict[str, FiberTree],
                   dims: Dict[str, int], result_vars: List[str]
@@ -379,17 +786,22 @@ def execute_graph(graph_: g.Graph, tensors: Dict[str, FiberTree],
 
 
 def execute_expr(expr: str, fmt: Format, schedule: Schedule,
-                 arrays: Dict[str, np.ndarray], dims: Dict[str, int]
-                 ) -> FiberTree:
-    """Compile + execute an expression; multi-term handled per term."""
-    from .custard import Custard
-
+                 arrays: Dict[str, np.ndarray], dims: Dict[str, int],
+                 compiled: bool = True) -> FiberTree:
+    """Execute an expression via the compiled engine (jit-cached, fused
+    multi-term). Falls back to the eager per-term reference path when the
+    compiled engine does not support the configuration."""
+    if compiled:
+        try:
+            return compile_expr(expr, fmt, schedule, dims)(arrays)
+        except NotImplementedError:
+            pass
     assign = parse(expr)
     rvars = [v for v in schedule.loop_order if v in assign.result_vars]
-    shape = tuple(dims[v] for v in rvars)
     total: Optional[np.ndarray] = None
     for term in assign.terms:
         sub = Assignment(lhs=assign.lhs, terms=(Term(1, term.factors),))
+        from .custard import Custard
         G = Custard(sub, fmt, schedule, dims).compile()
         tensors = build_inputs(sub, fmt, schedule, arrays)
         res = execute_graph(G, tensors, dims, rvars)

@@ -79,6 +79,55 @@ def segment_reduce(vals, seg_ids, *, num_segments: int, t_tile: int = 512,
                            interpret=_auto_interpret(interpret))
 
 
+# ---------------------------------------------------------------------------
+# SAM-primitive dispatch table (compiled-engine hot paths)
+# ---------------------------------------------------------------------------
+# The compiled JAX backend routes its two hot primitives through this table:
+#   keyed_segment_sum — the inner sum of coord_ops.keyed_union_reduce (the
+#       fused Gustavson merge). On TPU it lowers to the Pallas
+#       ``segment_reduce`` one-hot MXU matmul; elsewhere the plain
+#       jax.ops.segment_sum fallback wins.
+#   sorted_intersect  — sorted-key stream intersection. The searchsorted
+#       fallback in coord_ops is already the data-parallel two-finger merge;
+#       a dedicated Pallas kernel can be slotted in here without touching
+#       core/.
+# ``sam_primitive(name)`` picks the implementation for the active backend.
+
+from ..core import coord_ops as _co
+
+# VMEM budget: the Pallas segment_reduce keeps an (S+1, 128) f32 accumulator
+# resident; beyond this segment count the fallback is the better schedule.
+_PALLAS_SEGSUM_MAX_SEGMENTS = 4096
+
+
+def _keyed_segment_sum_pallas(vals, seg_ids, num_segments: int):
+    """1-D keyed segment-sum via the tiled MXU segment_reduce kernel."""
+    if num_segments > _PALLAS_SEGSUM_MAX_SEGMENTS:
+        return _co.default_segment_sum(vals, seg_ids, num_segments)
+    out = segment_reduce(vals[:, None].astype(jnp.float32), seg_ids,
+                         num_segments=num_segments)
+    return out[:, 0].astype(vals.dtype)
+
+
+SAM_PRIMITIVES = {
+    "keyed_segment_sum": {
+        "tpu": _keyed_segment_sum_pallas,
+        "fallback": _co.default_segment_sum,
+    },
+    "sorted_intersect": {
+        "fallback": _co.intersect_keys,
+    },
+}
+
+
+def sam_primitive(name: str, backend: Optional[str] = None):
+    """Resolve a SAM primitive to the best implementation for ``backend``
+    (default: the active JAX backend)."""
+    impls = SAM_PRIMITIVES[name]
+    backend = backend or jax.default_backend()
+    return impls.get(backend, impls["fallback"])
+
+
 def sliding_window_kv_idx(n_qblk: int, n_kvblk: int, window_blocks: int,
                           causal: bool = True) -> np.ndarray:
     """BCSR mask for sliding-window attention: each q block attends to the

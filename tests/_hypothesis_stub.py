@@ -1,0 +1,89 @@
+"""Deterministic fallback for ``hypothesis`` so a clean checkout collects.
+
+The property-test modules import ``given``/``settings``/``strategies`` from
+here when hypothesis is not installed (see requirements.txt for the real
+dependency). The stub draws a fixed number of seeded examples per test, so
+the properties still get exercised — just without shrinking or example
+databases. Only the strategy surface these tests use is implemented.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+from typing import Any, Callable, List
+
+import numpy as np
+
+FALLBACK_EXAMPLES = 10
+
+
+class Strategy:
+    """A strategy is just a sampler: rng -> value."""
+
+    def __init__(self, sample: Callable[[np.random.Generator], Any]):
+        self._sample = sample
+
+    def example(self, rng: np.random.Generator) -> Any:
+        return self._sample(rng)
+
+    def flatmap(self, f: Callable[[Any], "Strategy"]) -> "Strategy":
+        return Strategy(lambda rng: f(self.example(rng)).example(rng))
+
+    def map(self, f: Callable[[Any], Any]) -> "Strategy":
+        return Strategy(lambda rng: f(self.example(rng)))
+
+
+class strategies:
+    """Namespace mirroring ``hypothesis.strategies`` (subset)."""
+
+    @staticmethod
+    def integers(min_value: int = 0, max_value: int = 2**31 - 1) -> Strategy:
+        return Strategy(
+            lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    @staticmethod
+    def lists(elements: Strategy, min_size: int = 0,
+              max_size: int = 8) -> Strategy:
+        def sample(rng):
+            n = int(rng.integers(min_size, max_size + 1))
+            return [elements.example(rng) for _ in range(n)]
+        return Strategy(sample)
+
+    @staticmethod
+    def permutations(seq) -> Strategy:
+        items = list(seq)
+        return Strategy(
+            lambda rng: [items[i] for i in rng.permutation(len(items))])
+
+    @staticmethod
+    def composite(f: Callable) -> Callable[..., Strategy]:
+        @functools.wraps(f)
+        def builder(*args, **kwargs) -> Strategy:
+            return Strategy(
+                lambda rng: f(lambda s: s.example(rng), *args, **kwargs))
+        return builder
+
+
+def settings(max_examples: int = FALLBACK_EXAMPLES, **_ignored):
+    def deco(fn):
+        fn._stub_settings = {"max_examples": max_examples}
+        return fn
+    return deco
+
+
+def given(*strats: Strategy):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            cfg = getattr(wrapper, "_stub_settings", {})
+            n = min(cfg.get("max_examples", FALLBACK_EXAMPLES),
+                    FALLBACK_EXAMPLES)
+            rng = np.random.default_rng(0)
+            for _ in range(n):
+                drawn: List[Any] = [s.example(rng) for s in strats]
+                fn(*args, *drawn, **kwargs)
+        # hide the wrapped signature: the drawn params are not pytest fixtures
+        del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+    return deco
