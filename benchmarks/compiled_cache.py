@@ -72,13 +72,15 @@ def _fresh_values(arrays):
     return out
 
 
-def run(log) -> bool:
+def run(log, smoke: bool = False) -> bool:
     clear_compile_cache()
     log("case,first_us,warm_us,speedup,derived")
     ok = True
-    warm_reps = 5
+    warm_reps = 2 if smoke else 5
+    cases = CASES[:1] if smoke else CASES
+    fused_cases = FUSED_CASES[:1] if smoke else FUSED_CASES
 
-    for name, expr, order, fmts in CASES:
+    for name, expr, order, fmts in cases:
         eng = CompiledExpr(expr, Format(dict(fmts)),
                            Schedule(loop_order=tuple(order)), DIMS)
         arrays = _arrays((expr, fmts))
@@ -95,7 +97,7 @@ def run(log) -> bool:
         log(f"{name},{first * 1e6:.0f},{warm * 1e6:.0f},"
             f"{speedup:.1f},{'pass' if hit else 'FAIL'}")
 
-    for name, expr, order, fmts, oracle in FUSED_CASES:
+    for name, expr, order, fmts, oracle in fused_cases:
         eng = CompiledExpr(expr, Format(dict(fmts)),
                            Schedule(loop_order=tuple(order)), DIMS)
         arrays = _arrays((expr, fmts), density=0.2)

@@ -15,14 +15,15 @@ from .common import run_expr, uniform_sparse
 I, J = 250, 250
 
 
-def run(emit):
+def run(emit, smoke: bool = False):
     ok = True
     prev_ratio = None
-    for K in (1, 10, 100):
-        B = uniform_sparse((I, J), 0.05)
-        C = uniform_sparse((I, K), 1.0)
-        D = uniform_sparse((J, K), 1.0)
-        dims = {"i": I, "j": J, "k": K}
+    i, j = (64, 64) if smoke else (I, J)
+    for K in (1, 10) if smoke else (1, 10, 100):
+        B = uniform_sparse((i, j), 0.05)
+        C = uniform_sparse((i, K), 1.0)
+        D = uniform_sparse((j, K), 1.0)
+        dims = {"i": i, "j": j, "k": K}
 
         fused, _ = run_expr("X(i,j) = B(i,j) * C(i,k) * D(j,k)",
                             {"B": "cc", "C": "dd", "D": "dd"}, "ijk",

@@ -13,10 +13,14 @@ I, J, K = 250, 250, 100
 ORDERS = ["ijk", "ikj", "jik", "jki", "kij", "kji"]
 
 
-def run(emit):
-    B = uniform_sparse((I, K), 0.05)
-    C = uniform_sparse((K, J), 0.05)
-    dims = {"i": I, "j": J, "k": K}
+def run(emit, smoke: bool = False):
+    # smoke: smaller matrices keep all six orders exercised; the inner-vs-
+    # best gap shrinks with size, so the threshold relaxes accordingly
+    i, j, k = (120, 120, 50) if smoke else (I, J, K)
+    threshold = 5.0 if smoke else 10.0
+    B = uniform_sparse((i, k), 0.05)
+    C = uniform_sparse((k, j), 0.05)
+    dims = {"i": i, "j": j, "k": k}
     cycles = {}
     for order in ORDERS:
         res, _ = run_expr("X(i,j) = B(i,k) * C(k,j)",
@@ -28,4 +32,4 @@ def run(emit):
     best = min(cycles[o] for o in ("ikj", "jki", "kij", "kji"))
     ratio = inner / best
     emit(f"fig12/summary,inner_vs_best_ratio,{ratio:.1f}")
-    return ratio >= 10.0   # paper: "at least an order of magnitude"
+    return ratio >= threshold   # paper: "at least an order of magnitude"

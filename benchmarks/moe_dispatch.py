@@ -14,8 +14,8 @@ import jax.numpy as jnp
 from repro.models import moe as moe_mod
 
 
-def run(emit):
-    d, dff, e, k, t = 64, 128, 32, 2, 4096
+def run(emit, smoke: bool = False):
+    d, dff, e, k, t = 64, 128, 32, 2, (1024 if smoke else 4096)
     p = moe_mod.init_moe(jax.random.PRNGKey(0), d, dff, e,
                          dtype=jnp.float32)
     x = jax.random.normal(jax.random.PRNGKey(1), (t, d), jnp.float32)
@@ -27,10 +27,11 @@ def run(emit):
 
     def bench(f):
         f(x).block_until_ready()
+        reps = 2 if smoke else 5
         t0 = time.perf_counter()
-        for _ in range(5):
+        for _ in range(reps):
             f(x).block_until_ready()
-        return (time.perf_counter() - t0) / 5 * 1e6
+        return (time.perf_counter() - t0) / reps * 1e6
 
     us_sam, us_dense = bench(sam), bench(dense)
     emit(f"moe_dispatch,sam_us,{us_sam:.0f}")

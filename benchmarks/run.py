@@ -4,30 +4,43 @@ integration bench. ``PYTHONPATH=src python -m benchmarks.run [names...]``
 Per-row output is CSV; each module also gets a summary row
 ``name,us_per_call,derived`` where derived is the pass/fail of the paper's
 qualitative claim for that table/figure.
+
+``--smoke`` runs every benchmark at its minimum size (CI's bit-rot guard:
+the claims are still checked, just on small inputs). Benchmarks whose
+normal size already IS the minimum meaningful one (exact Table-1/2 counts,
+the fig13/fig15 model sweeps) take no smoke parameter and run as-is.
 """
 from __future__ import annotations
 
+import inspect
 import sys
 import time
 
 
 def main() -> None:
     from . import (compiled_cache, fig11, fig12, fig13, fig14, fig15,
-                   moe_dispatch, table1, table2)
+                   moe_dispatch, split_scaling, table1, table2)
     benches = {
         "table1": table1.run, "table2": table2.run,
         "fig11": fig11.run, "fig12": fig12.run, "fig13": fig13.run,
         "fig14": fig14.run, "fig15": fig15.run,
         "moe_dispatch": moe_dispatch.run,
         "compiled_cache": compiled_cache.run,
+        "split_scaling": split_scaling.run,
     }
-    names = sys.argv[1:] or list(benches)
+    args = sys.argv[1:]
+    smoke = "--smoke" in args
+    names = [a for a in args if a != "--smoke"] or list(benches)
     rows = []
     failed = []
     for name in names:
         t0 = time.perf_counter()
         try:
-            ok = benches[name](lambda s: print(s, flush=True))
+            fn = benches[name]
+            kw = ({"smoke": True}
+                  if smoke and "smoke" in inspect.signature(fn).parameters
+                  else {})
+            ok = fn(lambda s: print(s, flush=True), **kw)
         except Exception:  # noqa: BLE001
             import traceback
             traceback.print_exc()

@@ -1,0 +1,90 @@
+"""§4.4 iteration splitting + parallel lanes: split vs unsplit execution.
+
+For SpMSpM (Gustavson order) the schedule ``split={k: n},
+parallelize={k: n}`` partitions the contraction space into ``n`` chunks and
+duplicates the SAM subgraph into ``n`` lanes joined by a keyed reduce-merge.
+Reported per lane count (CSV: lanes,cycles,model_speedup,engine_warm_us,
+engine_speedup,derived):
+
+* **model_speedup** — simulator cycles of the unsplit schedule over the
+  split schedule. This is the paper's §4.4 claim: the bottleneck block's
+  token stream divides across lanes, so cycles fall near-linearly until
+  the merge stage or the unsplit prefix dominates.
+* **engine_speedup** — measured warm wall-clock of the compiled engine
+  (unsplit over split). The lanes execute as ONE vmapped dispatch (sharded
+  over devices when more than one is present); on a single CPU device this
+  mostly checks that lane overhead stays small, the win comes from the
+  device mesh.
+
+Every split variant must produce bit-identical results to the unsplit
+schedule in BOTH backends; the bench fails otherwise.
+
+    PYTHONPATH=src python -m benchmarks.run split_scaling
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.jax_backend import compile_expr
+from repro.core.schedule import Format, Schedule
+from repro.core.simulator import simulate_expr
+
+from .common import RNG, uniform_sparse
+
+EXPR = "X(i,j) = B(i,k) * C(k,j)"
+FMTS = {"B": "cc", "C": "cc"}
+ORDER = ("i", "k", "j")
+
+
+def _engine_warm_us(eng, arrays, reps):
+    eng(arrays)                      # pay record + trace + compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = eng(arrays)
+    return (time.perf_counter() - t0) / reps * 1e6, out
+
+
+def run(log, smoke: bool = False) -> bool:
+    lane_counts = (1, 2) if smoke else (1, 2, 4)
+    dim = 24 if smoke else 96
+    reps = 2 if smoke else 5
+    dims = {"i": dim, "j": dim, "k": dim}
+    arrays = {"B": uniform_sparse((dim, dim), 0.15, RNG),
+              "C": uniform_sparse((dim, dim), 0.15, RNG)}
+    want = arrays["B"] @ arrays["C"]
+
+    log("split_scaling/header,lanes,cycles,model_speedup,"
+        "engine_warm_us,engine_speedup,derived")
+    base = simulate_expr(EXPR, Format(FMTS), Schedule(loop_order=ORDER),
+                         arrays, dims)
+    base_eng = compile_expr(EXPR, Format(FMTS), Schedule(loop_order=ORDER),
+                            dims)
+    base_us, base_out = _engine_warm_us(base_eng, arrays, reps)
+    ok = bool(np.allclose(base.dense, want)
+              and np.allclose(base_out.to_dense(), want))
+
+    speedups = {}
+    for n in lane_counts:
+        sch = Schedule(loop_order=ORDER, split={"k": n},
+                       parallelize={"k": n})
+        sim = simulate_expr(EXPR, Format(FMTS), sch, arrays, dims)
+        eng = compile_expr(EXPR, Format(FMTS), sch, dims)
+        eng_us, eng_out = _engine_warm_us(eng, arrays, reps)
+        same = bool(np.allclose(sim.dense, want)
+                    and np.allclose(eng_out.to_dense(), want))
+        ok &= same
+        model = base.cycles / sim.cycles
+        engine = base_us / eng_us
+        speedups[n] = model
+        log(f"split_scaling,{n},{sim.cycles},{model:.2f},"
+            f"{eng_us:.0f},{engine:.2f},{'pass' if same else 'FAIL'}")
+
+    # §4.4 claim: parallel lanes cut modeled cycles; n=1 split is ~free
+    top = max(lane_counts)
+    ok &= speedups[top] >= (1.2 if smoke else 1.5)
+    ok &= speedups[1] >= 0.5
+    log(f"split_scaling/summary,cycles_speedup_at_{top}_lanes,"
+        f"{speedups[top]:.2f},threshold,{1.2 if smoke else 1.5}")
+    return ok

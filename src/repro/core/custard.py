@@ -34,7 +34,9 @@ from typing import Dict, List, Optional, Sequence, Tuple
 from . import graph as g
 from . import streams as st
 from .einsum import Access, Assignment, Term, parse
-from .schedule import Format, Schedule
+from .schedule import (Format, Schedule, build_inputs, split_assignment,
+                       split_dims, split_format, split_schedule,
+                       unsplit_result)
 
 Port = Tuple[g.Node, str]
 
@@ -48,11 +50,19 @@ class _TermState:
     val: Optional[Port] = None                   # combined value stream
     # crd streams of result vars as currently cleaned (updated by reduce/drop)
     out_crd: Dict[str, Port] = dataclasses.field(default_factory=dict)
+    # static nesting depth of each result var's crd stream (declared on
+    # reduce/drop nodes so degenerate all-empty streams — routine under
+    # §4.4 lane chunking — cannot lose their structure)
+    crd_depth: Dict[str, int] = dataclasses.field(default_factory=dict)
 
 
 class Custard:
     def __init__(self, assign: Assignment, fmt: Format, schedule: Schedule,
                  dims: Dict[str, int]):
+        if schedule.split:
+            raise ValueError(
+                "Custard lowers split-free schedules; use custard.lower(), "
+                "which applies Schedule.split first")
         self.a = assign
         self.fmt = fmt
         self.s = schedule
@@ -64,6 +74,16 @@ class Custard:
             raise ValueError(f"loop order missing vars {missing}")
         self.result_vars = [v for v in schedule.loop_order
                             if v in assign.result_vars]
+        # §4.4 parallelization: scanners of the parallelized variable are
+        # marked with the lane count; execution supplies the lane id.
+        par = {v: n for v, n in schedule.parallelize.items() if n > 1}
+        if len(par) > 1:
+            raise NotImplementedError(
+                "parallelize supports one variable per schedule")
+        self.par_var, self.par_n = next(iter(par.items()), (None, 1))
+        if self.par_var is not None and self.par_var not in self.pos:
+            raise ValueError(
+                f"parallelize var {self.par_var!r} not in loop order")
 
     # ------------------------------------------------------------------
     def compile(self) -> g.Graph:
@@ -104,8 +124,7 @@ class Custard:
                         g.LEVEL_SCAN, f"{f.tensor}_{v}",
                         tensor=f.tensor,
                         mode=self.s.tensor_path(f.vars).index(v),
-                        var=v, bv=use_bv,
-                        lanes=self._lanes(v))
+                        var=v, bv=use_bv, **self._chunk(v))
                     src, port = ts.cur_ref[i]
                     G.connect(src, port, node, "ref", st.REF)
                     crd_port = (node, "bv" if use_bv else "crd")
@@ -114,8 +133,7 @@ class Custard:
                     inter = G.add(
                         g.INTERSECT, f"{v}_isect",
                         arity=len(scanned), var=v,
-                        skip=(v in self.s.skip), bv=use_bv,
-                        lanes=self._lanes(v))
+                        skip=(v in self.s.skip), bv=use_bv)
                     for k, (i, crd_p, ref_p) in enumerate(scanned):
                         G.connect(crd_p[0], crd_p[1], inter,
                                   f"bv{k}" if use_bv else f"crd{k}",
@@ -132,8 +150,7 @@ class Custard:
                         # lone bitvector stream: recover crd/refs via a
                         # 1-ary intersect (popcount reference recovery)
                         inter = G.add(g.INTERSECT, f"{v}_bvrecover",
-                                      arity=1, var=v, bv=True,
-                                      lanes=self._lanes(v))
+                                      arity=1, var=v, bv=True)
                         G.connect(crd_p[0], crd_p[1], inter, "bv0", st.BV)
                         G.connect(ref_p[0], ref_p[1], inter, "ref0", st.REF)
                         term_crd = (inter, "crd")
@@ -147,7 +164,7 @@ class Custard:
                     loc = G.add(g.LOCATE, f"{f.tensor}_{v}_loc",
                                 tensor=f.tensor,
                                 mode=self.s.tensor_path(f.vars).index(v),
-                                var=v, lanes=self._lanes(v))
+                                var=v)
                     if term_crd is None:
                         raise ValueError(
                             f"locate({f.tensor},{v}) needs a co-iterated "
@@ -165,8 +182,7 @@ class Custard:
             is_result = v in self.a.result_vars
             active = [b for b in per_term_bundle if b[1] is not None]
             if multi and is_result and len(active) > 1:
-                uni = G.add(g.UNION, f"{v}_union", arity=len(active), var=v,
-                            lanes=self._lanes(v))
+                uni = G.add(g.UNION, f"{v}_union", arity=len(active), var=v)
                 for k, (ts, crd_p, refs) in enumerate(active):
                     G.connect(crd_p[0], crd_p[1], uni, f"crd{k}", st.CRD)
                     for j, (i, ref_p) in enumerate(refs):
@@ -192,11 +208,12 @@ class Custard:
                 crd_src = ts.crd[v]
                 if v in self.a.result_vars:
                     ts.out_crd[v] = crd_src
+                    ts.crd_depth[v] = ts.scope.index(v) + 1
                 for i, f in enumerate(ts.term.factors):
                     if v in f.vars:
                         continue
                     rep = G.add(g.REPEAT, f"{f.tensor}_rep_{v}",
-                                tensor=f.tensor, var=v, lanes=self._lanes(v))
+                                tensor=f.tensor, var=v)
                     src, port = ts.cur_ref[i]
                     G.connect(src, port, rep, "ref", st.REF)
                     G.connect(crd_src[0], crd_src[1], rep, "crd", st.CRD)
@@ -206,14 +223,13 @@ class Custard:
         for ts in terms:
             vals: List[Port] = []
             for i, f in enumerate(ts.term.factors):
-                arr = G.add(g.ARRAY, f"{f.tensor}_vals", tensor=f.tensor,
-                            lanes=self._lanes(None))
+                arr = G.add(g.ARRAY, f"{f.tensor}_vals", tensor=f.tensor)
                 src, port = ts.cur_ref[i]
                 G.connect(src, port, arr, "ref", st.REF)
                 vals.append((arr, "val"))
             cur = vals[0]
             for nxt in vals[1:]:
-                alu = G.add(g.ALU, "mul", op="mul", lanes=self._lanes(None))
+                alu = G.add(g.ALU, "mul", op="mul")
                 G.connect(cur[0], cur[1], alu, "a", st.VAL)
                 G.connect(nxt[0], nxt[1], alu, "b", st.VAL)
                 cur = (alu, "val")
@@ -225,6 +241,7 @@ class Custard:
             red_vars = [v for v in reversed(ts.scope)
                         if v not in self.a.result_vars]
             stage_drops: List[str] = []
+            val_depth = len(ts.scope)
             for u in red_vars:
                 below = [w for w in self.result_vars
                          if self.pos[w] > self.pos[u] and w in ts.scope]
@@ -233,13 +250,15 @@ class Custard:
                 if multi and n == 0:
                     empty = "zero"   # alignment across unioned terms
                 red = G.add(g.REDUCE, f"red_{u}", n=n, var=u, empty=empty,
-                            lanes=self._lanes(u))
+                            depth=val_depth)
                 G.connect(ts.val[0], ts.val[1], red, "val", st.VAL)
                 for k, w in enumerate(below):
                     cp = ts.out_crd[w]
                     G.connect(cp[0], cp[1], red, f"crd{k}", st.CRD)
                     ts.out_crd[w] = (red, f"crd{k}")
+                    ts.crd_depth[w] = (val_depth - n - 1) + k + 1
                 ts.val = (red, "val")
+                val_depth -= 1
                 if not multi:
                     above = [w for w in self.result_vars
                              if self.pos[w] < self.pos[u]]
@@ -248,7 +267,7 @@ class Custard:
                         stage_drops.append(w)
                         oc, val = self._drop_chain(
                             {v: ts.out_crd[v] for v in self.result_vars},
-                            ts.val, [w])
+                            ts.val, [w], ts.crd_depth)
                         ts.out_crd.update(oc)
                         ts.val = val
 
@@ -275,7 +294,8 @@ class Custard:
                 for n in G.nodes.values())
             if needs_drop and self.result_vars:
                 out_crd, final_val = self._drop_chain(
-                    out_crd, final_val, [self.result_vars[-1]])
+                    out_crd, final_val, [self.result_vars[-1]],
+                    terms[0].crd_depth)
         else:
             final_val = terms[0].val
             out_crd = dict(terms[0].out_crd)
@@ -303,17 +323,14 @@ class Custard:
         return G
 
     # ------------------------------------------------------------------
-    def _lanes(self, v: Optional[str]) -> int:
-        if not self.s.parallelize:
-            return 1
-        # blocks at or below a parallelized variable get its lane count
-        if v is None:
-            return max(self.s.parallelize.values())
-        lanes = 1
-        for pv, l in self.s.parallelize.items():
-            if self.pos[v] >= self.pos[pv]:
-                lanes = max(lanes, l)
-        return lanes
+    def _chunk(self, v: str) -> Dict[str, int]:
+        """Scanner params for §4.4 lane duplication: the parallelized
+        variable's coordinate space partitions into ``chunk_n`` contiguous
+        chunks; a scanner so marked emits only its lane's chunk when the
+        executor supplies a lane id (and the full space otherwise)."""
+        if v == self.par_var:
+            return {"chunk_n": self.par_n}
+        return {}
 
     def _place_cascade_droppers(self, ts: _TermState,
                                 stage_drops: List[str]) -> None:
@@ -339,12 +356,14 @@ class Custard:
             return
         drops.sort(key=lambda v: -self.pos[v])  # innermost-first
         out_crd, val = self._drop_chain(
-            {v: ts.out_crd[v] for v in self.result_vars}, ts.val, drops)
+            {v: ts.out_crd[v] for v in self.result_vars}, ts.val, drops,
+            ts.crd_depth)
         ts.out_crd.update(out_crd)
         ts.val = val
 
     def _drop_chain(self, out_crd: Dict[str, Port], val: Port,
-                    drops: List[str]) -> Tuple[Dict[str, Port], Port]:
+                    drops: List[str], crd_depth: Dict[str, int]
+                    ) -> Tuple[Dict[str, Port], Port]:
         """Insert droppers for ``drops`` (innermost-first), cascading the
         cleaned streams. Inner stream = next result level's crd stream, or
         the value stream for the innermost result var."""
@@ -354,7 +373,8 @@ class Custard:
             deeper = [w for w in self.result_vars if self.pos[w] > self.pos[v]]
             inner_is_val = not deeper
             node = G.add(g.CRD_DROP, f"drop_{v}", var=v,
-                         inner="vals" if inner_is_val else deeper[0])
+                         inner="vals" if inner_is_val else deeper[0],
+                         outer_depth=crd_depth.get(v))
             cp = out_crd[v]
             G.connect(cp[0], cp[1], node, "outer", st.CRD)
             if inner_is_val:
@@ -378,7 +398,11 @@ class Custard:
 
 def compile_expr(expr: str, fmt: Format, schedule: Schedule,
                  dims: Dict[str, int]) -> g.Graph:
-    return Custard(parse(expr), fmt, schedule, dims).compile()
+    """Lower to the combined SAM graph (split applied internally)."""
+    low = lower(expr, fmt, schedule, dims)
+    if low.graph is None:
+        raise low.graph_error
+    return low.graph
 
 
 # ---------------------------------------------------------------------------
@@ -393,11 +417,12 @@ def expr_cache_key(assign: Assignment, fmt: Format, schedule: Schedule,
     key memoizes both the Custard lowering and (together with the capacity
     bucket) the jitted executable in the JAX backend.
     """
-    orders: Dict[str, int] = {}
+    orders: Dict[str, int] = {assign.lhs.tensor: len(assign.lhs.vars)}
     for t in assign.terms:
         for f in t.factors:
             orders.setdefault(f.tensor, len(f.vars))
     parts = [
+        "fmtdef=" + fmt.default,
         "lhs=" + repr(assign.lhs),
         "terms=" + ";".join(
             f"{t.sign:+d}:" + "*".join(repr(f) for f in t.factors)
@@ -418,28 +443,175 @@ def expr_cache_key(assign: Assignment, fmt: Format, schedule: Schedule,
     return "|".join(parts)
 
 
-_TERM_GRAPH_CACHE: Dict[str, List[Tuple[int, g.Graph]]] = {}
+# ---------------------------------------------------------------------------
+# full lowering: split expansion + parallel lane duplication (§4.1, §4.4)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class TermLowering:
+    """One product term's single-term SAM graph + its §4.4 lane count.
+
+    ``lane_n > 1`` means the graph's scanners of the parallelized variable
+    are ``chunk_n``-marked: executing the SAME graph once per lane id
+    (each lane restricted to its coordinate chunk) partitions the term's
+    iteration space, and summing the lane outputs reconstructs the term.
+    Terms that do not iterate the parallelized variable run as one lane.
+    ``graph`` is None when the term cannot lower stand-alone (it relies on
+    a cross-term union for a coordinate source); ``Lowered.term_error``
+    carries the reason.
+    """
+
+    sign: int
+    graph: Optional[g.Graph]
+    lane_n: int = 1
+
+
+@dataclasses.dataclass
+class Lowered:
+    """A fully lowered expression: split applied, lanes duplicated.
+
+    Holds both coordinate spaces: the ORIGINAL one the caller's arrays and
+    results live in, and the post-split one the SAM graphs iterate.
+    """
+
+    orig_assign: Assignment
+    orig_dims: Dict[str, int]
+    orig_fmt: Format
+    assign: Assignment               # post-split
+    fmt: Format                      # post-split (formats expanded)
+    schedule: Schedule               # post-split (split={}, par renamed)
+    dims: Dict[str, int]             # post-split extents
+    split_of: Dict[str, int]         # original var -> split factor
+    par_var: Optional[str]           # post-split name (e.g. "ko"), or None
+    par_n: int                       # lane count (1 = serial)
+    # combined (multi-term) SAM graph; None when only the per-term
+    # factoring lowers (e.g. a leading negative term)
+    graph: Optional[g.Graph]
+    graph_error: Optional[Exception]
+    terms: List[TermLowering]
+    term_error: Optional[Exception]  # why per-term lowering failed, if it did
+
+    @property
+    def result_vars(self) -> List[str]:
+        return [v for v in self.schedule.loop_order
+                if v in self.assign.result_vars]
+
+    @property
+    def orig_result_vars(self) -> List[str]:
+        return [v for v in self.orig_assign.lhs.vars]
+
+    @property
+    def merge_kind(self) -> str:
+        """Lane-merge topology: parallelizing a result variable yields
+        disjoint lane outputs (``concat``); a contraction variable yields
+        overlapping partial sums (``reduce``). Both are served by one
+        keyed sum-merge over the lane outputs."""
+        if self.par_n <= 1:
+            return "none"
+        return ("concat" if self.par_var in self.assign.result_vars
+                else "reduce")
+
+    def build_inputs(self, arrays) -> Dict[str, "FiberTree"]:
+        return build_inputs(self.assign, self.fmt, self.schedule, arrays,
+                            split_of=self.split_of)
+
+    def unsplit(self, dense):
+        """Map a dense result from post-split axes (lhs order) back to the
+        original coordinate space, trimming split padding."""
+        if not self.split_of:
+            return dense
+        return unsplit_result(dense, self.orig_assign.lhs.vars,
+                              self.split_of, self.orig_dims)
+
+    def require_terms(self) -> List[TermLowering]:
+        if self.term_error is not None:
+            raise self.term_error
+        return self.terms
+
+
+_LOWERED_CACHE: Dict[str, Lowered] = {}
+
+
+def lower(expr, fmt: Format, schedule: Schedule,
+          dims: Dict[str, int]) -> Lowered:
+    """Lower an expression with its FULL schedule, memoized.
+
+    ``Schedule.split`` expands each split variable into split-level
+    scanners: the variable's coordinate space is partitioned into
+    ``factor`` chunks by rewriting ``v -> (vo, vi)`` across the expression,
+    formats, dims and schedule (§4.1). ``Schedule.parallelize`` then
+    duplicates each affected term's subgraph into ``n`` lanes whose
+    par-var scanners are restricted to one coordinate chunk each (§4.4);
+    the lanes re-join through a keyed sum-merge (see ``merge_kind``).
+    """
+    assign = parse(expr) if isinstance(expr, str) else expr
+    key = expr_cache_key(assign, fmt, schedule, dims)
+    hit = _LOWERED_CACHE.get(key)
+    if hit is not None:
+        return hit
+    split_of = dict(schedule.split)
+    # the (vo, vi) renaming must not capture existing names: a genuine
+    # variable "io" next to split={"i": n} would be indistinguishable from
+    # the split-outer level downstream
+    clash = sorted(w for v in split_of for w in (f"{v}o", f"{v}i")
+                   if w in assign.all_vars or w in schedule.loop_order)
+    if clash:
+        raise ValueError(
+            f"split renames collide with existing variable(s) {clash}; "
+            f"rename them before splitting")
+    fmt2 = split_format(assign, fmt, schedule)
+    assign2 = split_assignment(assign, split_of)
+    sch2 = split_schedule(schedule)
+    dims2 = split_dims(dims, split_of)
+    cc = Custard(assign2, fmt2, sch2, dims2)
+    combined: Optional[g.Graph] = None
+    combined_error: Optional[Exception] = None
+    try:
+        combined = cc.compile()
+    except NotImplementedError as e:   # e.g. leading negative term: the
+        combined_error = e             # per-term factoring still lowers
+    terms: List[TermLowering] = []
+    term_error: Optional[Exception] = None
+    for term in assign2.terms:
+        if len(assign2.terms) == 1:
+            # single-term: the combined graph IS the term graph (the sign
+            # is applied outside the graph on every execution path)
+            G = combined
+            if G is None:
+                terms.append(TermLowering(term.sign, None))
+                term_error = combined_error
+                continue
+        else:
+            sub = Assignment(lhs=assign2.lhs, terms=(Term(1, term.factors),))
+            try:
+                G = Custard(sub, fmt2, sch2, dims2).compile()
+            except (NotImplementedError, ValueError) as e:  # needs x-term crd
+                terms.append(TermLowering(term.sign, None))
+                term_error = term_error or NotImplementedError(
+                    f"term {term} cannot lower stand-alone: {e}")
+                continue
+        lane_n = cc.par_n if any(
+            "chunk_n" in n.params for n in G.nodes.values()) else 1
+        terms.append(TermLowering(term.sign, G, lane_n))
+    if cc.par_n > 1 and term_error is not None:
+        raise term_error
+    if combined is None and term_error is not None:
+        raise term_error               # no lowering strategy works at all
+    low = Lowered(orig_assign=assign, orig_dims=dict(dims), orig_fmt=fmt,
+                  assign=assign2, fmt=fmt2, schedule=sch2, dims=dims2,
+                  split_of=split_of, par_var=cc.par_var, par_n=cc.par_n,
+                  graph=combined, graph_error=combined_error, terms=terms,
+                  term_error=term_error)
+    _LOWERED_CACHE[key] = low
+    return low
 
 
 def lower_single_terms(assign: Assignment, fmt: Format, schedule: Schedule,
                        dims: Dict[str, int]) -> List[Tuple[int, g.Graph]]:
-    """Lower each product term to its own single-term SAM graph, memoized.
-
-    Multi-term expressions are factored the same way ``execute_expr`` always
-    did (per-term graphs, signs applied outside), but the lowering now runs
-    once per canonical key instead of once per call.
-    """
-    key = expr_cache_key(assign, fmt, schedule, dims)
-    hit = _TERM_GRAPH_CACHE.get(key)
-    if hit is not None:
-        return hit
-    out: List[Tuple[int, g.Graph]] = []
-    for term in assign.terms:
-        sub = Assignment(lhs=assign.lhs, terms=(Term(1, term.factors),))
-        out.append((term.sign, Custard(sub, fmt, schedule, dims).compile()))
-    _TERM_GRAPH_CACHE[key] = out
-    return out
+    """Back-compat wrapper: (sign, graph) per term, memoized via ``lower``."""
+    low = lower(assign, fmt, schedule, dims)
+    return [(t.sign, t.graph) for t in low.require_terms()]
 
 
 def clear_lowering_cache() -> None:
-    _TERM_GRAPH_CACHE.clear()
+    _LOWERED_CACHE.clear()

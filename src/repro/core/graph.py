@@ -57,13 +57,17 @@ class Node:
     name: str = ""
     # free-form block parameters:
     #  level_scan: tensor, mode(level index), var, format, skip(bool), bv(bool)
+    #              chunk_n (§4.4: the var's coordinate space partitions into
+    #              chunk_n lanes; the executor supplies the lane id)
     #  intersect/union: arity, vars
     #  repeat: tensor, var
     #  array: tensor ("vals" proxy), mode="vals"
     #  alu: op in {mul, add, sub}
-    #  reduce: n (dimension of accumulation memory), var
+    #  reduce: n (dimension of accumulation memory), var,
+    #          depth (static input value-stream depth — declared because
+    #          all-empty lane streams cannot reveal their own depth)
     #  level_write: tensor, var or "vals", format
-    #  crd_drop: outer var, inner ("<var>"|"vals")
+    #  crd_drop: outer var, inner ("<var>"|"vals"), outer_depth (static)
     #  locate: tensor, var, format
     params: Dict[str, Any] = dataclasses.field(default_factory=dict)
 

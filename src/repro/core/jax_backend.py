@@ -40,8 +40,13 @@ Two execution modes share the block handlers:
   with zero re-tracing. Multi-term expressions fuse into one keyed
   union/segment-reduce instead of a per-term Python loop, and
   ``CompiledExpr.execute_batch`` vmaps the same callable over many
-  same-format operands per dispatch (the ``launch/serve.py`` path). The full
-  compile/cache/batch pipeline is documented in DESIGN.md.
+  same-format operands per dispatch (the ``launch/serve.py`` path).
+  Schedules with ``split``/``parallelize`` (§4.1/§4.4) lower through
+  ``custard.lower``: each parallelized term executes as N lanes over a
+  dynamic lane-id axis — ``jax.vmap`` on one device, ``shard_map`` over
+  the device mesh when several are present — and every (term, lane)
+  partial COO merges through the same fused keyed union/segment-reduce.
+  The full compile/cache/batch/shard pipeline is documented in DESIGN.md.
 """
 from __future__ import annotations
 
@@ -54,10 +59,16 @@ import numpy as np
 
 from . import coord_ops as co
 from . import graph as g
-from .custard import expr_cache_key, lower_single_terms
-from .einsum import Assignment, Term, parse
+from .custard import expr_cache_key, lower
+from .einsum import Assignment, parse
 from .fibertree import COMPRESSED, DENSE, FiberTree
-from .schedule import Format, Schedule, build_inputs
+from .schedule import Format, Schedule
+
+try:  # moved to the jax namespace in newer releases
+    from jax import shard_map as _shard_map
+except ImportError:
+    from jax.experimental.shard_map import shard_map as _shard_map
+from jax.sharding import Mesh, PartitionSpec as P
 
 PAD = co.PAD_KEY
 
@@ -161,9 +172,10 @@ def _val_writer_node(graph_: g.Graph) -> g.Node:
     raise ValueError(f"graph {graph_.name} has no value writer")
 
 
-def coo_to_fibertree(keys, vals, valid, strides, shape, fmt_str,
-                     mode_order) -> FiberTree:
-    """Host-side decode of a keyed COO result into an output FiberTree."""
+def decode_live_coo(keys, vals, valid, strides):
+    """Host-side decode of a keyed COO result: drop padding and explicit
+    zeros, then unflatten keys into per-level coordinates (one column per
+    stride, outer->inner)."""
     keys = np.asarray(keys)
     vals = np.asarray(vals)
     live = np.asarray(valid) & (vals != 0.0)
@@ -174,6 +186,13 @@ def coo_to_fibertree(keys, vals, valid, strides, shape, fmt_str,
         dim = strides[col][1]
         coords[:, col] = rem % dim
         rem = rem // dim
+    return coords, vals
+
+
+def coo_to_fibertree(keys, vals, valid, strides, shape, fmt_str,
+                     mode_order) -> FiberTree:
+    """Host-side decode of a keyed COO result into an output FiberTree."""
+    coords, vals = decode_live_coo(keys, vals, valid, strides)
     ft = FiberTree.from_coords(shape, coords, vals, fmt_str)
     if mode_order is not None:
         ft.mode_order = tuple(mode_order)
@@ -196,11 +215,17 @@ class JaxBackend:
                  scan_caps: Optional[Dict[int, int]] = None,
                  out_cap: Optional[int] = None,
                  segsum: Optional[Callable] = None,
-                 intersect: Optional[Callable] = None):
+                 intersect: Optional[Callable] = None,
+                 lane: Optional[Any] = None):
         self.g = graph_
         self.t = tensors
         self.dims = dims
         self.result_vars = result_vars
+        # §4.4 parallel lane: ``chunk_n``-marked scanners restrict to this
+        # lane's coordinate chunk. May be a concrete int (capacity-record
+        # pass) or a traced scalar (the vmapped/shard_mapped lane axis);
+        # None executes the full iteration space.
+        self.lane = lane
         self.env: Dict[Tuple[int, str], Any] = {}
         self.final: Optional[COOResult] = None
         self.scan_caps = scan_caps
@@ -238,9 +263,21 @@ class JaxBackend:
             cap = self.scan_caps[node.id]
             self.required[f"s{node.id}"] = jnp.sum(lengths)
         crd, ref, sid, valid = co.scan_level(lv.seg, lv.crd, r.ref, r.valid, cap)
+        ref_valid = valid
+        chunk_n = node.params.get("chunk_n")
+        if chunk_n and self.lane is not None:
+            # split-level scanning: predicate this lane's REFERENCE stream
+            # to its contiguous coordinate chunk. The crd/key stream stays
+            # fully valid — sorted-key intersection/locate probes rely on
+            # monotone keys, which a mid-stream PAD would break — while the
+            # dead references zero out-of-chunk subtrees and collapse their
+            # downstream fiber expansions, so per-lane sizes truly shrink.
+            csz = -(-lv.dim // chunk_n)
+            lo = jnp.asarray(self.lane, jnp.int32) * csz
+            ref_valid = valid & (crd >= lo) & (crd < lo + csz)
         cs = CanonStream(var=node.params["var"], crd=crd, parent_idx=sid,
                          valid=valid, dim=lv.dim, parent=r.stream)
-        return {"crd": cs, "ref": RefStream(cs, ref, valid)}
+        return {"crd": cs, "ref": RefStream(cs, ref, ref_valid)}
 
     def _intersect(self, node, ins):
         m = node.params.get("arity", 2)
@@ -464,6 +501,34 @@ class _Plan:
 _COMPILED: Dict[Tuple[str, bool], "CompiledExpr"] = {}
 
 
+def lane_mesh_size(par_n: int, bound: Optional[int] = None) -> int:
+    """Largest device count that can host the lane mesh: the biggest
+    divisor of ``par_n`` no larger than the available devices (and the
+    caller's ``bound``, e.g. serve's --devices). 1 means no useful mesh."""
+    limit = min(jax.device_count(), par_n, bound or jax.device_count())
+    return max((d for d in range(1, limit + 1) if par_n % d == 0),
+               default=1)
+
+
+def _resolve_shard_lanes(shard_lanes, par_n: int) -> int:
+    """One resolver for the lane-mesh size (it is part of the engine cache
+    key, so it must be computed identically everywhere). ``shard_lanes``:
+    None auto-shards whenever a >1-device mesh fits; False forces serial
+    vmap; True (or an int device bound) REQUIRES a mesh and raises when
+    none fits. Returns the mesh size (1 = plain vmap)."""
+    if shard_lanes is None or shard_lanes is False:
+        if shard_lanes is False or par_n <= 1:
+            return 1
+        return lane_mesh_size(par_n)
+    bound = None if shard_lanes is True else int(shard_lanes)
+    m = lane_mesh_size(par_n, bound)
+    if m < 2:
+        raise ValueError(
+            f"cannot shard {par_n} lane(s) over {jax.device_count()} "
+            f"device(s)" + (f" with --devices {bound}" if bound else ""))
+    return m
+
+
 class CompiledExpr:
     """A Custard expression lowered once into jit-cached JAX callables.
 
@@ -487,32 +552,47 @@ class CompiledExpr:
     """
 
     def __init__(self, expr, fmt: Format, schedule: Schedule,
-                 dims: Dict[str, int], *, use_kernels: bool = True):
+                 dims: Dict[str, int], *, use_kernels: bool = True,
+                 shard_lanes: Optional[bool] = None):
         self.assign: Assignment = parse(expr) if isinstance(expr, str) else expr
         self.fmt = fmt
         self.schedule = schedule
         self.dims = dict(dims)
         self.cache_key = expr_cache_key(self.assign, fmt, schedule, self.dims)
-        lowered = lower_single_terms(self.assign, fmt, schedule, self.dims)
-        self.signs = [s for s, _ in lowered]
-        self.graphs = [G for _, G in lowered]
+        low = lower(self.assign, fmt, schedule, self.dims)
+        self.low = low
+        terms = low.require_terms()
+        self.signs = [t.sign for t in terms]
+        self.graphs = [t.graph for t in terms]
+        self.lane_ns = [t.lane_n for t in terms]
+        self.par_n = low.par_n
         self.graph_hashes = tuple(G.structural_hash() for G in self.graphs)
-        self.rvars = [v for v in schedule.loop_order
-                      if v in self.assign.result_vars]
+        self.rvars = low.result_vars           # post-split, loop order
         self._scalar = not self.rvars
         writer = _val_writer_node(self.graphs[0])
         self._out_shape = writer.params.get("shape", ())
         self._out_fmt = (writer.params.get("format")
                          or "c" * len(self.rvars))
         self._mode_order = writer.params.get("mode_order")
-        self._strides = [(v, self.dims[v]) for v in self.rvars]
+        self._strides = [(v, low.dims[v]) for v in self.rvars]
+        # results come back in the ORIGINAL coordinate space: split result
+        # levels (vo, vi) are re-merged during output assembly
+        self._out_merge = self._build_out_merge()
+        # sharded lane dispatch: shard_map over a device mesh when one fits
+        # the lane count; vmap on one device. ``shard_lanes``: None = auto,
+        # False = never, True/int = require a mesh (of at most that many
+        # devices) or fail loudly.
+        self._lane_mesh = _resolve_shard_lanes(shard_lanes, self.par_n)
+        self._shard_lanes = self._lane_mesh > 1
         self._segsum = None
         self._intersect = None
+        self._union_reduce = None
         if use_kernels:
             try:
                 from ..kernels import ops as kops
                 self._segsum = kops.sam_primitive("keyed_segment_sum")
                 self._intersect = kops.sam_primitive("sorted_intersect")
+                self._union_reduce = kops.sam_primitive("keyed_union_reduce")
             except ImportError:      # kernels layer unavailable: coord_ops
                 pass
         self._level_meta: Dict[str, List[Tuple[str, int]]] = {}
@@ -520,11 +600,31 @@ class CompiledExpr:
         self._batch_plans: Dict[Tuple, _Plan] = {}
         self._jit_cache: Dict[Tuple, Callable] = {}
         self.stats = {"traces": 0, "plan_hits": 0, "plan_misses": 0,
-                      "overflow_retries": 0, "calls": 0, "batch_calls": 0}
+                      "overflow_retries": 0, "calls": 0, "batch_calls": 0,
+                      "lane_dispatches": 0, "sharded_dispatches": 0}
+
+    def _build_out_merge(self):
+        """Decode plan for split result levels: [(orig var, o-col, i-col or
+        None, inner chunk)] over the post-split stride columns."""
+        split_of = self.low.split_of
+        if not any(v in split_of for v in self.low.orig_result_vars):
+            return None
+        merge, i = [], 0
+        while i < len(self.rvars):
+            v = self.rvars[i]
+            if (v.endswith("o") and v[:-1] in split_of
+                    and i + 1 < len(self.rvars)
+                    and self.rvars[i + 1] == v[:-1] + "i"):
+                merge.append((v[:-1], i, i + 1, self.low.dims[v[:-1] + "i"]))
+                i += 2
+            else:
+                merge.append((v, i, None, None))
+                i += 1
+        return merge
 
     # -- operand flattening ------------------------------------------------
     def _raw_flat(self, arrays: Dict[str, np.ndarray]) -> Dict[str, Any]:
-        tensors = build_inputs(self.assign, self.fmt, self.schedule, arrays)
+        tensors = self.low.build_inputs(arrays)
         raw = {}
         for name, ft in tensors.items():
             self._level_meta.setdefault(
@@ -582,27 +682,52 @@ class CompiledExpr:
         return out
 
     # -- plan construction -------------------------------------------------
+    def _lanes_of(self, ti: int):
+        n = self.lane_ns[ti]
+        return range(n) if n > 1 else [None]
+
+    def _needs_fused(self) -> bool:
+        return (not self._scalar
+                and (len(self.graphs) > 1
+                     or any(n > 1 for n in self.lane_ns)))
+
     def _record_caps(self, flats: Sequence[Dict]) -> Dict[str, int]:
         """Eager capacity-recording pass over one (or, batched, every)
-        concrete padded operand set; returns bucketed static capacities."""
+        concrete padded operand set; returns bucketed static capacities.
+        Parallel lanes run with concrete lane ids; a laned term's caps are
+        the max over its lanes (the vmapped executable is shape-uniform)."""
         caps: Dict[str, int] = {}
         fused_need = 0
         for flat in flats:
             tensors = self._tensors_from_flat(flat)
             call_fused = 0
             for ti, G in enumerate(self.graphs):
-                be = JaxBackend(G, tensors, self.dims, self.rvars)
-                v = be.run_streams()
-                for k, n in be.caps_record.items():
-                    key = f"t{ti}.{k}"
-                    caps[key] = max(caps.get(key, 0), n)
-                if isinstance(v, COOResult):
-                    call_fused += int(jnp.sum(v.valid))
+                for lane in self._lanes_of(ti):
+                    be = JaxBackend(G, tensors, self.low.dims, self.rvars,
+                                    lane=lane)
+                    v = be.run_streams()
+                    for k, n in be.caps_record.items():
+                        key = f"t{ti}.{k}"
+                        caps[key] = max(caps.get(key, 0), n)
+                    if isinstance(v, COOResult):
+                        call_fused += int(jnp.sum(v.valid))
             fused_need = max(fused_need, call_fused)
         caps = {k: _bucket_cap(n) for k, n in caps.items()}
-        if len(self.graphs) > 1 and not self._scalar:
+        if self._needs_fused():
             caps["fused"] = _bucket_cap(fused_need)
         return caps
+
+    def _lane_map(self, fn, shard: bool) -> Callable:
+        """Vectorize ``fn`` over the lane-id axis: one vmapped dispatch on a
+        single device; shard_map over a 1-D ``lanes`` mesh of the largest
+        device subset dividing the lane count (each device vmaps its local
+        lanes)."""
+        vm = jax.vmap(fn)
+        if not shard:
+            return vm
+        mesh = Mesh(np.asarray(jax.devices()[:self._lane_mesh]), ("lanes",))
+        return _shard_map(vm, mesh=mesh, in_specs=P("lanes"),
+                          out_specs=P("lanes"), check_rep=False)
 
     def _build_core(self, caps: Dict[str, int], batch: bool) -> Callable:
         # Pallas-backed impls are dispatched per single execution; the
@@ -610,42 +735,73 @@ class CompiledExpr:
         # batching is not guaranteed in interpret mode).
         segsum = None if batch else self._segsum
         intersect = None if batch else self._intersect
+        union_reduce = ((None if batch else self._union_reduce)
+                        or co.keyed_union_reduce)
         scan_caps = [
             {n.id: caps[f"t{ti}.s{n.id}"] for n in G.of_kind(g.LEVEL_SCAN)}
             for ti, G in enumerate(self.graphs)]
         out_caps = [caps.get(f"t{ti}.out") for ti in range(len(self.graphs))]
         signs = self.signs
+        # the batch path nests inside an outer vmap; keep lanes vmapped there
+        shard = self._shard_lanes and not batch
+
+        def run_term(ti, tensors, lane):
+            be = JaxBackend(self.graphs[ti], tensors, self.low.dims,
+                            self.rvars, scan_caps=scan_caps[ti],
+                            out_cap=out_caps[ti], segsum=segsum,
+                            intersect=intersect, lane=lane)
+            return be.run_streams(), be.required
 
         def core(flat):
             self.stats["traces"] += 1      # runs only while jax traces
             tensors = self._tensors_from_flat(flat)
             required: Dict[str, jnp.ndarray] = {}
-            outs = []
-            for ti, G in enumerate(self.graphs):
-                be = JaxBackend(G, tensors, self.dims, self.rvars,
-                                scan_caps=scan_caps[ti], out_cap=out_caps[ti],
-                                segsum=segsum, intersect=intersect)
-                outs.append(be.run_streams())
-                for k, r in be.required.items():
-                    required[f"t{ti}.{k}"] = r
+            outs = []                      # per (term): COOResult or scalar
+            for ti in range(len(self.graphs)):
+                n = self.lane_ns[ti]
+                if n == 1:
+                    v, req = run_term(ti, tensors, None)
+                    for k, r in req.items():
+                        required[f"t{ti}.{k}"] = r
+                    outs.append(v)
+                    continue
+                # §4.4 sharded dispatch: all lanes of this term execute as
+                # ONE vectorized call over the lane-id axis
+                def one_lane(lane, _ti=ti):
+                    v, req = run_term(_ti, tensors, lane)
+                    if self._scalar:
+                        return v, req
+                    return (v.keys, v.vals, v.valid), req
+                out, req = self._lane_map(one_lane, shard)(
+                    jnp.arange(n, dtype=jnp.int32))
+                for k, r in req.items():
+                    required[f"t{ti}.{k}"] = jnp.max(r)
+                if self._scalar:
+                    outs.append(jnp.sum(out))
+                else:
+                    keys, vals, valid = out          # (n, cap) each
+                    outs.append(COOResult(keys.reshape(-1), vals.reshape(-1),
+                                          valid.reshape(-1),
+                                          list(self._strides)))
             if self._scalar:
                 total = signs[0] * outs[0]
                 for s, v in zip(signs[1:], outs[1:]):
                     total = total + s * v
                 return {"scalar": total}, required
-            if len(outs) == 1:
+            if len(outs) == 1 and self.lane_ns[0] == 1:
                 coo = outs[0]
                 vals = coo.vals if signs[0] == 1 else signs[0] * coo.vals
                 return {"keys": coo.keys, "vals": vals,
                         "valid": coo.valid}, required
-            # multi-term fusion: ONE keyed union/segment-reduce combines
-            # every term (sums commute; signs fold into the values)
+            # lane/term merge stage: ONE keyed union/segment-reduce combines
+            # every (term, lane) partial result (sums commute; signs fold
+            # into the values; disjoint concat-merges come out for free)
             keys = jnp.concatenate([c.keys for c in outs])
             vals = jnp.concatenate(
                 [c.vals if s == 1 else s * c.vals
                  for s, c in zip(signs, outs)])
             valid = jnp.concatenate([c.valid for c in outs])
-            uk, uv, uvalid, count = co.keyed_union_reduce(
+            uk, uv, uvalid, count = union_reduce(
                 keys, vals, valid, caps["fused"], segsum)
             required["fused"] = count
             return {"keys": uk, "vals": uv, "valid": uvalid}, required
@@ -660,7 +816,8 @@ class CompiledExpr:
         jit_key = (self.graph_hashes,
                    tuple(sorted(self.dims.items())), tuple(self.rvars),
                    sig, tuple(sorted(caps.items())), batch, b_pad,
-                   self._segsum is not None)
+                   self._segsum is not None, tuple(self.lane_ns),
+                   self._shard_lanes)
         fn = self._jit_cache.get(jit_key)
         if fn is None:
             core = self._build_core(caps, batch)
@@ -682,7 +839,7 @@ class CompiledExpr:
             out, required = plan.fn(flat)
             grow = {}
             for k, r in required.items():
-                need = int(jnp.max(r)) if batch else int(r)
+                need = int(jnp.max(r))
                 if need > plan.caps[k]:
                     grow[k] = _bucket_cap(need)
             if not grow:
@@ -698,15 +855,47 @@ class CompiledExpr:
             v = out["scalar"] if b is None else out["scalar"][b]
             return FiberTree.from_dense(np.asarray(float(v)), "")
         sel = (lambda a: a) if b is None else (lambda a: a[b])
-        return coo_to_fibertree(sel(out["keys"]), sel(out["vals"]),
-                                sel(out["valid"]), self._strides,
-                                self._out_shape, self._out_fmt,
-                                self._mode_order)
+        if self._out_merge is None:
+            return coo_to_fibertree(sel(out["keys"]), sel(out["vals"]),
+                                    sel(out["valid"]), self._strides,
+                                    self._out_shape, self._out_fmt,
+                                    self._mode_order)
+        return self._assemble_unsplit(sel(out["keys"]), sel(out["vals"]),
+                                      sel(out["valid"]))
+
+    def _assemble_unsplit(self, keys, vals, valid) -> FiberTree:
+        """Decode a split-space COO result back into the ORIGINAL
+        coordinate space: each (vo, vi) level pair merges to vo*chunk+vi.
+        Split padding carries only explicit zeros, which are filtered."""
+        cols, vals = decode_live_coo(keys, vals, valid, self._strides)
+        coords = np.zeros((len(cols), len(self._out_merge)), dtype=np.int64)
+        for k, (v, io, ii, chunk) in enumerate(self._out_merge):
+            coords[:, k] = (cols[:, io] if ii is None
+                            else cols[:, io] * chunk + cols[:, ii])
+        orig_vars = [m[0] for m in self._out_merge]
+        shape = tuple(self.low.orig_dims[v] for v in orig_vars)
+        lhs = self.low.orig_assign.lhs
+        ft = FiberTree.from_coords(
+            shape, coords, vals,
+            self.fmt.of(lhs.tensor, len(orig_vars)) or "c" * len(orig_vars))
+        ft.mode_order = tuple(lhs.vars.index(v) for v in orig_vars)
+        return ft
 
     # -- public execution --------------------------------------------------
-    def __call__(self, arrays: Dict[str, np.ndarray]) -> FiberTree:
+    def _shared_hints(self, raws: Sequence[Dict]) -> Dict[str, List[int]]:
+        """Common bucket per compressed level: max over the operand sets,
+        so every member pads to ONE input signature."""
+        return {name: [
+            max(_bucket(r[name]["crds"][i].shape[0]) for r in raws)
+            for i in range(len(raws[0][name]["crds"]))]
+            for name in raws[0]}
+
+    def _dispatch_single(self, flat, sig) -> FiberTree:
         self.stats["calls"] += 1
-        flat, sig = self._pad_flat(self._raw_flat(arrays))
+        if any(n > 1 for n in self.lane_ns):
+            self.stats["lane_dispatches"] += 1
+            if self._shard_lanes:
+                self.stats["sharded_dispatches"] += 1
         plan = self._plans.get(sig)
         if plan is None:
             self.stats["plan_misses"] += 1
@@ -717,19 +906,38 @@ class CompiledExpr:
         out = self._run_plan(plan, sig, flat, batch=False)
         return self._assemble_out(out)
 
+    def __call__(self, arrays: Dict[str, np.ndarray]) -> FiberTree:
+        flat, sig = self._pad_flat(self._raw_flat(arrays))
+        return self._dispatch_single(flat, sig)
+
+    def execute_many(self, arrays_list: Sequence[Dict[str, np.ndarray]]
+                     ) -> List[FiberTree]:
+        """Dispatch several operand sets as INDIVIDUAL calls sharing one
+        input signature (buckets maxed over the set, like execute_batch's
+        hints). This is the sharded-lane serving path: each call's lanes
+        spread over the device mesh — shard_map cannot nest inside the
+        batch vmap — while the shared signature keeps warm traffic on a
+        single plan instead of re-tracing per request."""
+        if not arrays_list:
+            return []
+        raws = [self._raw_flat(a) for a in arrays_list]
+        hints = self._shared_hints(raws)
+        out = []
+        for raw in raws:
+            flat, sig = self._pad_flat(raw, hints)
+            out.append(self._dispatch_single(flat, sig))
+        return out
+
     def execute_batch(self, arrays_list: Sequence[Dict[str, np.ndarray]]
                       ) -> List[FiberTree]:
         """Execute many same-format operand sets in ONE vmapped dispatch."""
         if not arrays_list:
             return []
         self.stats["batch_calls"] += 1
+        if any(n > 1 for n in self.lane_ns):
+            self.stats["lane_dispatches"] += 1
         raws = [self._raw_flat(a) for a in arrays_list]
-        # common bucket per compressed level: max over the batch members
-        hints = {}
-        for name in raws[0]:
-            hints[name] = [
-                max(_bucket(r[name]["crds"][i].shape[0]) for r in raws)
-                for i in range(len(raws[0][name]["crds"]))]
+        hints = self._shared_hints(raws)
         flats_sigs = [self._pad_flat(r, hints) for r in raws]
         flats = [f for f, _ in flats_sigs]
         sig = flats_sigs[0][1]
@@ -739,15 +947,14 @@ class CompiledExpr:
             filler = jax.tree_util.tree_map(jnp.zeros_like, flats[0])
             flats = flats + [filler] * (b_pad - b)
         stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *flats)
-        key = (sig, b_pad)
-        plan = self._batch_plans.get(key)
+        plan = self._batch_plans.get((sig, b_pad))
         if plan is None:
             self.stats["plan_misses"] += 1
             caps = self._record_caps(flats[:b])
             plan = self._install_plan(sig, caps, batch=True, b_pad=b_pad)
         else:
             self.stats["plan_hits"] += 1
-        out = self._run_plan(plan, key, stacked, batch=True, b_pad=b_pad)
+        out = self._run_plan(plan, sig, stacked, batch=True, b_pad=b_pad)
         return [self._assemble_out(out, b=i) for i in range(b)]
 
 
@@ -757,19 +964,26 @@ class CompiledExpr:
 
 def compile_expr(expr, fmt: Format, schedule: Schedule,
                  dims: Dict[str, int], *,
-                 use_kernels: bool = True) -> CompiledExpr:
+                 use_kernels: bool = True,
+                 shard_lanes: Optional[bool] = None) -> CompiledExpr:
     """Compile an expression once into a jit-cached executable engine.
 
     Repeated calls with the same (expression, formats, schedule, dims)
     return the SAME engine, so its plans and the underlying jit cache are
-    shared process-wide.
+    shared process-wide. The schedule's split/parallelize spec is part of
+    the canonical key: each scheduled variant is its own engine.
     """
     assign = parse(expr) if isinstance(expr, str) else expr
-    key = (expr_cache_key(assign, fmt, schedule, dims), use_kernels)
+    # resolve the lane-mesh size BEFORE keying, so shard_lanes=None and an
+    # explicit equivalent request share one engine (and its plan/jit caches)
+    par_n = max([n for n in schedule.parallelize.values() if n > 1],
+                default=1)
+    mesh = _resolve_shard_lanes(shard_lanes, par_n)
+    key = (expr_cache_key(assign, fmt, schedule, dims), use_kernels, mesh)
     eng = _COMPILED.get(key)
     if eng is None:
         eng = CompiledExpr(assign, fmt, schedule, dims,
-                           use_kernels=use_kernels)
+                           use_kernels=use_kernels, shard_lanes=shard_lanes)
         _COMPILED[key] = eng
     return eng
 
@@ -796,16 +1010,15 @@ def execute_expr(expr: str, fmt: Format, schedule: Schedule,
             return compile_expr(expr, fmt, schedule, dims)(arrays)
         except NotImplementedError:
             pass
-    assign = parse(expr)
-    rvars = [v for v in schedule.loop_order if v in assign.result_vars]
+    low = lower(expr, fmt, schedule, dims)
+    tensors = low.build_inputs(arrays)
+    rvars = low.result_vars
     total: Optional[np.ndarray] = None
-    for term in assign.terms:
-        sub = Assignment(lhs=assign.lhs, terms=(Term(1, term.factors),))
-        from .custard import Custard
-        G = Custard(sub, fmt, schedule, dims).compile()
-        tensors = build_inputs(sub, fmt, schedule, arrays)
-        res = execute_graph(G, tensors, dims, rvars)
-        dense = res[assign.lhs.tensor].to_dense()
-        total = term.sign * dense if total is None else total + term.sign * dense
-    out_fmt = fmt.of(assign.lhs.tensor, len(rvars))
+    for t in low.require_terms():
+        res = execute_graph(t.graph, tensors, low.dims, rvars)
+        dense = res[low.assign.lhs.tensor].to_dense()
+        total = t.sign * dense if total is None else total + t.sign * dense
+    total = low.unsplit(total)
+    out_fmt = fmt.of(low.orig_assign.lhs.tensor,
+                     len(low.orig_assign.lhs.vars))
     return FiberTree.from_dense(np.asarray(total), out_fmt or "")

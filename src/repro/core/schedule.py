@@ -38,6 +38,8 @@ class Schedule:
     skip: FrozenSet[str] = frozenset()                     # vars w/ galloping
     bitvector: FrozenSet[str] = frozenset()                # vars iterated as bv
     split: Dict[str, int] = dataclasses.field(default_factory=dict)
+    # §4.4 lane duplication over one variable's coordinate space (applied
+    # to the split-outer half when the variable is also split)
     parallelize: Dict[str, int] = dataclasses.field(default_factory=dict)
     reduce_empty: Optional[str] = None                     # override zero/remove
 
@@ -45,6 +47,36 @@ class Schedule:
         """The tensor's level order under this schedule (concordant)."""
         pos = {v: i for i, v in enumerate(self.loop_order)}
         return tuple(sorted(access_vars, key=lambda v: pos[v]))
+
+
+def split_schedule(schedule: Schedule) -> Schedule:
+    """Rewrite a schedule's split vars ``v`` into ``(vo, vi)`` (§4.1).
+
+    Every schedule field referring to a split variable is renamed:
+    skip/bitvector apply to both halves, locate moves to the inner level,
+    and ``parallelize`` follows the OUTER level (the §4.4 combination:
+    split a variable, then duplicate the subgraph across its chunks).
+    """
+    if not schedule.split:
+        return schedule
+    order = []
+    for v in schedule.loop_order:
+        if v in schedule.split:
+            order += [f"{v}o", f"{v}i"]
+        else:
+            order.append(v)
+    return dataclasses.replace(
+        schedule, loop_order=tuple(order), split={},
+        bitvector=frozenset(
+            {f"{v}i" if v in schedule.split else v for v in schedule.bitvector}
+            | {f"{v}o" for v in schedule.bitvector if v in schedule.split}),
+        skip=frozenset({f"{v}i" if v in schedule.split else v
+                        for v in schedule.skip}
+                       | {f"{v}o" for v in schedule.skip if v in schedule.split}),
+        locate=frozenset((t, f"{v}i" if v in schedule.split else v)
+                         for t, v in schedule.locate),
+        parallelize={(f"{v}o" if v in schedule.split else v): n
+                     for v, n in schedule.parallelize.items()})
 
 
 def apply_split(assign_text: str, schedule: Schedule) -> Tuple[str, Schedule]:
@@ -57,26 +89,61 @@ def apply_split(assign_text: str, schedule: Schedule) -> Tuple[str, Schedule]:
     if not schedule.split:
         return assign_text, schedule
     text = assign_text
-    order = []
-    for v in schedule.loop_order:
-        if v in schedule.split:
-            order += [f"{v}o", f"{v}i"]
-        else:
-            order.append(v)
     import re
     for v in schedule.split:
         text = re.sub(rf"\b{v}\b(?![A-Za-z_0-9])", f"{v}o,{v}i", text)
-    new = dataclasses.replace(
-        schedule, loop_order=tuple(order), split={},
-        bitvector=frozenset(
-            {f"{v}i" if v in schedule.split else v for v in schedule.bitvector}
-            | {f"{v}o" for v in schedule.bitvector if v in schedule.split}),
-        skip=frozenset({f"{v}i" if v in schedule.split else v
-                        for v in schedule.skip}
-                       | {f"{v}o" for v in schedule.skip if v in schedule.split}),
-        locate=frozenset((t, f"{v}i" if v in schedule.split else v)
-                         for t, v in schedule.locate))
-    return text, new
+    return text, split_schedule(schedule)
+
+
+def split_assignment(assign: Assignment, split: Dict[str, int]) -> Assignment:
+    """Structural counterpart of ``apply_split``: rewrite every access's
+    split vars ``v`` into the adjacent pair ``(vo, vi)``."""
+    from .einsum import Term
+
+    def rew(acc):
+        vs = tuple(w for v in acc.vars
+                   for w in ((f"{v}o", f"{v}i") if v in split else (v,)))
+        return dataclasses.replace(acc, vars=vs)
+
+    return Assignment(
+        lhs=rew(assign.lhs),
+        terms=tuple(Term(t.sign, tuple(rew(f) for f in t.factors))
+                    for t in assign.terms))
+
+
+def split_dims(dims: Dict[str, int], split: Dict[str, int]) -> Dict[str, int]:
+    """Post-split index extents: ``vo`` spans the chunks, ``vi`` one chunk."""
+    out = {}
+    for v, d in dims.items():
+        if v in split:
+            out[f"{v}o"] = split[v]
+            out[f"{v}i"] = -(-d // split[v])
+        else:
+            out[v] = d
+    return out
+
+
+def split_format(assign: Assignment, fmt: Format, schedule: Schedule
+                 ) -> Format:
+    """Expand explicit per-tensor format strings for split levels.
+
+    A split variable's storage level becomes two adjacent levels (``vo``
+    inside ``vi``); its format character is duplicated. Entries whose length
+    already matches the post-split order are left untouched (callers that
+    pre-applied the split keep working)."""
+    if not schedule.split:
+        return fmt
+    out = dict(fmt.formats)
+    accs = [assign.lhs] + [f for t in assign.terms for f in t.factors]
+    for acc in accs:
+        s = out.get(acc.tensor)
+        if s is None or len(s) != len(acc.vars):
+            continue
+        path = schedule.tensor_path(acc.vars)
+        out[acc.tensor] = "".join(
+            c * (2 if v in schedule.split else 1)
+            for v, c in zip(path, s))
+    return Format(out, default=fmt.default)
 
 
 def build_inputs(assign: Assignment, fmt: Format, schedule: Schedule,
@@ -92,15 +159,15 @@ def build_inputs(assign: Assignment, fmt: Format, schedule: Schedule,
                 continue
             arr = np.asarray(arrays[acc.tensor], dtype=np.float64)
             # split vars: adjacent (vo, vi) pairs reshape the original axis
-            # into (factor, dim/factor) chunks
+            # into (factor, dim/factor) chunks; each loop step consumes ONE
+            # output axis (the vi half is its own iteration), so the cursor
+            # always advances by one
             ax = 0
             for v in acc.vars:
                 if (v.endswith("o") and v[:-1] in split_of
                         and ax < arr.ndim):
                     arr = split_dense(arr, ax, split_of[v[:-1]])
-                    ax += 2
-                else:
-                    ax += 1
+                ax += 1
             path = schedule.tensor_path(acc.vars)
             mode_order = tuple(acc.vars.index(v) for v in path)
             out[acc.tensor] = FiberTree.from_dense(
@@ -119,3 +186,23 @@ def split_dense(arr: np.ndarray, axis: int, factor: int) -> np.ndarray:
     new_shape = (arr.shape[:axis] + (factor, (d + pad) // factor)
                  + arr.shape[axis + 1:])
     return arr.reshape(new_shape)
+
+
+def unsplit_result(arr: np.ndarray, lhs_vars: Sequence[str],
+                   split_of: Dict[str, int], dims: Dict[str, int]
+                   ) -> np.ndarray:
+    """Undo ``split_dense`` on a result array: merge each (vo, vi) axis pair
+    back into the original axis and trim the split padding.
+
+    ``arr`` axes follow ``lhs_vars`` (the ORIGINAL lhs order) with split
+    vars occupying two adjacent axes."""
+    arr = np.asarray(arr)
+    ax = 0
+    for v in lhs_vars:
+        if v in split_of:
+            merged = arr.shape[ax] * arr.shape[ax + 1]
+            arr = arr.reshape(arr.shape[:ax] + (merged,)
+                              + arr.shape[ax + 2:])
+            arr = arr[(slice(None),) * ax + (slice(0, dims[v]),)]
+        ax += 1
+    return arr

@@ -136,9 +136,19 @@ def _effectual_crd(x) -> bool:
 # ---------------------------------------------------------------------------
 
 class Simulator:
-    def __init__(self, graph_: g.Graph, tensors: Dict[str, FiberTree]):
+    """Evaluates one SAM graph; ``lane`` selects a §4.4 parallel lane.
+
+    Scanners carrying a ``chunk_n`` param (emitted by Custard for the
+    parallelized variable) restrict their coordinate space to contiguous
+    chunk ``lane`` of ``chunk_n`` when a lane is given; with ``lane=None``
+    chunk marks are inert and the graph computes the full iteration space.
+    """
+
+    def __init__(self, graph_: g.Graph, tensors: Dict[str, FiberTree],
+                 lane: Optional[int] = None):
         self.g = graph_
         self.tensors = tensors
+        self.lane = lane
         self.env: Dict[Tuple[int, str], Any] = {}
         self.work: Dict[int, int] = {}
 
@@ -166,23 +176,37 @@ class Simulator:
         level = self._level(node)
         use_bv = node.params.get("bv", False)
         work = [0]
+        # §4.4 split-level scanning: restrict to this lane's coordinate chunk
+        chunk_n = node.params.get("chunk_n")
+        if chunk_n and self.lane is not None:
+            csz = -(-level.dim // chunk_n)
+            lo, hi = self.lane * csz, min((self.lane + 1) * csz, level.dim)
+        else:
+            lo, hi = 0, level.dim
 
         def scan(ref):
             if ref is None:
                 return []
             if use_bv:
-                # bitvector scanner: one token per packed word (§4.3)
+                # bitvector scanner: one token per packed word (§4.3);
+                # chunked lanes only process their chunk's words
                 crds, refs = level.fiber(int(ref))
+                keep = [(c, r) for c, r in zip(crds, refs) if lo <= c < hi]
                 nwords = -(-level.dim // BV_WIDTH)
-                work[0] += nwords + 1
+                chunk_words = -(-(hi - lo) // BV_WIDTH) if hi > lo else 0
+                work[0] += (chunk_words if (lo, hi) != (0, level.dim)
+                            else nwords) + 1
                 words = [0] * nwords
-                for c in crds:
+                for c, _ in keep:
                     words[int(c) // BV_WIDTH] |= 1 << (int(c) % BV_WIDTH)
-                base = int(refs[0]) if len(refs) else 0
-                return [(w, None) for w in words], (crds, refs, base)
+                base = int(keep[0][1]) if keep else 0
+                return ([(w, None) for w in words],
+                        ([c for c, _ in keep], [r for _, r in keep], base))
             crds, refs = level.fiber(int(ref))
-            work[0] += len(crds) + 2  # + stop + input ref
-            return list(map(int, crds)), list(map(int, refs))
+            keep = [(int(c), int(r)) for c, r in zip(crds, refs)
+                    if lo <= c < hi]
+            work[0] += len(keep) + 2  # + stop + input ref
+            return [c for c, _ in keep], [r for _, r in keep]
 
         if use_bv:
             # emit (bv words, per-fiber ref info) pairs
@@ -390,7 +414,9 @@ class Simulator:
         n = int(node.params.get("n", 0))
         empty_mode = node.params.get("empty", "zero" if n == 0 else "remove")
         vals = ins["val"]
-        dv = st.nested_depth(vals)
+        # the lowering declares the input depth; all-empty streams (routine
+        # under lane chunking) under-report their structural depth
+        dv = node.params.get("depth") or st.nested_depth(vals)
         total = [0]
 
         if n == 0:
@@ -480,7 +506,7 @@ class Simulator:
         outer, inner = ins["outer"], ins["inner"]
         pass_ports = sorted(k for k in ins if k.startswith("pass"))
         passengers = [ins[p] for p in pass_ports]
-        od = st.nested_depth(outer)
+        od = node.params.get("outer_depth") or st.nested_depth(outer)
         total = [0]
         # effectuality depends on the inner wire type (Def 3.9: empty
         # fibers for crd streams, zeros for value streams)
@@ -589,8 +615,7 @@ class Simulator:
         for node in self.g.topo_order():
             ins = self._inputs(node)
             outs, work = handlers[node.kind](node, ins)
-            lanes = max(int(node.params.get("lanes", 1)), 1)
-            self.work[node.id] = -(-work // lanes)
+            self.work[node.id] = work
             for port, val in outs.items():
                 self.env[(node.id, port)] = val
 
@@ -656,5 +681,90 @@ class Simulator:
         return out
 
 
-def simulate(graph_: g.Graph, tensors: Dict[str, FiberTree]) -> SimResult:
-    return Simulator(graph_, tensors).run()
+def simulate(graph_: g.Graph, tensors: Dict[str, FiberTree],
+             lane: Optional[int] = None) -> SimResult:
+    return Simulator(graph_, tensors, lane=lane).run()
+
+
+# ---------------------------------------------------------------------------
+# §4.4 parallel execution: per-lane simulation + merge stage
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class LaneSim:
+    sign: int
+    term: int
+    lane: Optional[int]          # None => unparallelized term
+    result: SimResult
+
+
+@dataclasses.dataclass
+class ExprSimResult:
+    """Simulation of a fully scheduled expression (split + parallel lanes).
+
+    ``dense`` is the merged result in the ORIGINAL coordinate space.
+    ``cycles`` models the §4.4 parallel machine: all lanes run
+    concurrently, so the steady-state term is the max over lanes' per-block
+    work joined with the lane-merge stage's work, plus pipeline fill.
+    """
+
+    dense: Any
+    cycles: int
+    lanes: List[LaneSim]
+    merge_work: int
+
+    @property
+    def lane_cycles(self) -> List[int]:
+        return [ls.result.cycles for ls in self.lanes]
+
+
+def simulate_expr(expr, fmt, schedule, arrays, dims) -> ExprSimResult:
+    """Lower (split + parallelize) and simulate an expression end-to-end.
+
+    Serial schedules run the combined multi-term graph exactly as
+    ``simulate`` always has. Parallel schedules run every (term, lane)
+    subgraph independently — lane ``l`` of a parallelized term sees only
+    chunk ``l`` of the parallelized variable's coordinate space — and a
+    final merge stage sums the signed lane outputs at equal coordinates
+    (the lane-join unioner/reducer of §4.4).
+    """
+    from .custard import lower
+
+    low = lower(expr, fmt, schedule, dims)
+    tensors = low.build_inputs(arrays)
+    out_name = low.assign.lhs.tensor
+
+    if low.par_n <= 1 and low.graph is not None:
+        res = Simulator(low.graph, tensors).run()
+        # a single-term graph carries no sign (signs live outside the graph
+        # on every execution path); multi-term graphs fold signs internally
+        sign = low.terms[0].sign if len(low.terms) == 1 else 1
+        dense = low.unsplit(sign * res.outputs[out_name].to_dense())
+        return ExprSimResult(dense=dense, cycles=res.cycles,
+                             lanes=[LaneSim(sign, 0, None, res)],
+                             merge_work=0)
+
+    # per-(term, lane) execution; also the path for expressions only the
+    # per-term factoring lowers (e.g. a leading negative term)
+    lanes: List[LaneSim] = []
+    for ti, tl in enumerate(low.require_terms()):
+        for lane in (range(tl.lane_n) if tl.lane_n > 1 else [None]):
+            res = Simulator(tl.graph, tensors, lane=lane).run()
+            lanes.append(LaneSim(tl.sign, ti, lane, res))
+
+    # merge stage: signed sum of lane outputs at equal coordinates
+    dense_split = None
+    merge_work = 0
+    for ls in lanes:
+        d = ls.result.outputs[out_name].to_dense()
+        merge_work += ls.result.outputs[out_name].nnz + 1
+        dense_split = (ls.sign * d if dense_split is None
+                       else dense_split + ls.sign * d)
+    dense = low.unsplit(dense_split)
+
+    steady = max((max(ls.result.work.values(), default=1) for ls in lanes),
+                 default=1)
+    fill = max((ls.result.graph.depth() for ls in lanes), default=0) + 1
+    cycles = max(steady, merge_work) + fill
+    return ExprSimResult(dense=dense, cycles=cycles, lanes=lanes,
+                         merge_work=merge_work)

@@ -117,6 +117,13 @@ SAM_PRIMITIVES = {
     "sorted_intersect": {
         "fallback": _co.intersect_keys,
     },
+    # the §4.4 lane/term merge stage: sums every (term, lane) partial COO
+    # at equal result keys. One sort+segment-sum serves both merge kinds
+    # (reduce-merges overlap, concat-merges are disjoint); a fused Pallas
+    # sort-reduce kernel can be slotted in here without touching core/.
+    "keyed_union_reduce": {
+        "fallback": _co.keyed_union_reduce,
+    },
 }
 
 

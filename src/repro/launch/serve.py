@@ -10,11 +10,33 @@ batched sparse-expression serving through the compiled SAM engine.
         --sam "X(i,j) = B(i,k) * C(k,j)" --sam-order ikj \
         --sam-formats B=cc,C=cc --sam-dims i=64,j=64,k=64 \
         --batch 8 --reps 16
+
+    # §4.4 iteration splitting + parallel lanes, sharded over 4 devices
+    PYTHONPATH=src python -m repro.launch.serve \
+        --sam "X(i,j) = B(i,k) * C(k,j)" --sam-order ikj \
+        --sam-formats B=cc,C=cc --split k=4 --devices 4
 """
 from __future__ import annotations
 
 import argparse
+import os
+import sys
 import time
+
+if __name__ == "__main__":
+    # must run before jax initializes: force the host platform device count
+    # so --devices can shard lane dispatch even on a CPU-only machine
+    _dv = None
+    for _i, _a in enumerate(sys.argv[1:], 1):
+        if _a == "--devices" and _i + 1 < len(sys.argv):
+            _dv = sys.argv[_i + 1]
+        elif _a.startswith("--devices="):
+            _dv = _a.split("=", 1)[1]
+    if _dv and _dv.isdigit() and ("--xla_force_host_platform_device_count"
+                                  not in os.environ.get("XLA_FLAGS", "")):
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={_dv} "
+            + os.environ.get("XLA_FLAGS", ""))
 
 import jax
 import jax.numpy as jnp
@@ -22,7 +44,7 @@ import numpy as np
 
 from ..configs import get_config, list_archs
 from ..core.einsum import parse
-from ..core.jax_backend import compile_expr
+from ..core.jax_backend import compile_expr, lane_mesh_size
 from ..core.schedule import Format, Schedule
 from ..models.model import decode_step, forward, init_caches, init_params
 from ..train.train_step import make_prefill_step, make_serve_step
@@ -68,17 +90,53 @@ def _parse_kv(text: str, cast=str):
 
 def serve_sam(expr: str, order: str, formats, dims, *, batch: int = 8,
               reps: int = 8, density: float = 0.1, seed: int = 0,
-              log=print):
+              split=None, devices: int = 0, log=print):
     """Sparse-expression serving: compile ONCE, then dispatch batches of
     same-format operands through the vmapped jit-cached engine.
 
     Every request in a dispatch shares the expression/format/schedule (the
     jit signature); only the operand data differs — the SAM analogue of
-    batched decode. Returns (results of the last dispatch, engine stats).
+    batched decode. ``split={var: n}`` applies §4.4 iteration splitting AND
+    parallel lane duplication over that variable; with multiple devices the
+    lanes shard over the device mesh. Returns (results of the last
+    dispatch, engine stats).
     """
+    if devices and jax.device_count() < devices:
+        raise SystemExit(
+            f"--devices {devices} requested but only {jax.device_count()} "
+            f"jax device(s) present; on CPU set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={devices} (done "
+            f"automatically when running this module as a script)")
+    if devices and not split:
+        raise SystemExit("--devices shards parallel lanes; give --split too "
+                         "(e.g. --split k=4)")
+    split = dict(split or {})
     fmt = Format(dict(formats))
-    sch = Schedule(loop_order=tuple(order))
-    eng = compile_expr(expr, fmt, sch, dims)
+    # §4.4: every requested variable splits; the OUTERMOST split variable
+    # also parallelizes (the lowering supports one parallel var)
+    par = {v: split[v] for v in order if v in split}
+    par_n = next(iter(par.values()), 1)
+    if devices and lane_mesh_size(par_n, devices) < 2:
+        # an explicit --devices must shard or fail loudly (auto-detection
+        # would silently fall back to vmap)
+        raise SystemExit(
+            f"--devices {devices}: no >1-device mesh fits {par_n} lane(s) "
+            f"on {jax.device_count()} present device(s); pick a split "
+            f"factor a device subset divides")
+    sch = Schedule(loop_order=tuple(order), split=split,
+                   parallelize=dict(list(par.items())[:1]))
+    eng = compile_expr(expr, fmt, sch, dims,
+                       shard_lanes=devices if devices else None)
+    # lanes shard over the device mesh only on the single-call path (the
+    # batch path nests lanes inside the outer vmap, which cannot carry a
+    # shard_map); with a mesh present, dispatch requests one by one so
+    # every request's lanes actually spread across the devices
+    shard = eng._shard_lanes
+    if split:
+        log(f"[serve-sam] split={split} parallelize={sch.parallelize}: "
+            f"{eng.par_n}-lane {eng.low.merge_kind}-merge, "
+            + (f"per-request shard_map over {eng._lane_mesh} devices"
+               if shard else "lanes vmapped inside the batched dispatch"))
     assign = parse(expr)
     rng = np.random.default_rng(seed)
 
@@ -98,13 +156,19 @@ def serve_sam(expr: str, order: str, formats, dims, *, batch: int = 8,
                         * rng.integers(1, 9, shape)).astype(float)
         return arrays
 
+    def dispatch():
+        ops = [operand_set() for _ in range(batch)]
+        if shard:
+            return eng.execute_many(ops)
+        return eng.execute_batch(ops)
+
     # dispatch 1 pays the capacity-record + trace cost; the rest hit cache
     t0 = time.perf_counter()
-    results = eng.execute_batch([operand_set() for _ in range(batch)])
+    results = dispatch()
     t_first = time.perf_counter() - t0
     t1 = time.perf_counter()
     for _ in range(max(reps - 1, 0)):
-        results = eng.execute_batch([operand_set() for _ in range(batch)])
+        results = dispatch()
     if reps > 1:
         warm = (time.perf_counter() - t1) / (reps - 1)
         warm_txt = f"warm={warm * 1e3:.1f}ms/dispatch ({batch / warm:.1f} expr/s)"
@@ -134,6 +198,13 @@ def main(argv=None):
                     help="index extents, e.g. i=64,j=64,k=64")
     ap.add_argument("--sam-density", type=float, default=0.1)
     ap.add_argument("--reps", type=int, default=8)
+    ap.add_argument("--split", default="", metavar="VAR=N[,VAR=N]",
+                    help="§4.4 iteration splitting + N parallel lanes, "
+                         "e.g. k=4 (implies parallelize)")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="shard parallel lanes over this many devices "
+                         "(forces the host device count when run as a "
+                         "script on CPU)")
     args = ap.parse_args(argv)
 
     if args.sam:
@@ -143,7 +214,9 @@ def main(argv=None):
         formats = _parse_kv(args.sam_formats)
         results, _ = serve_sam(args.sam, order, formats, dims,
                                batch=args.batch, reps=args.reps,
-                               density=args.sam_density)
+                               density=args.sam_density,
+                               split=_parse_kv(args.split, int),
+                               devices=args.devices)
         return results
 
     cfg = get_config(args.arch, reduced=args.reduced)

@@ -152,6 +152,38 @@ def test_overflow_grows_instead_of_truncating():
     assert eng.stats["overflow_retries"] >= 1
 
 
+def test_forced_tiny_capacity_regrows_and_rehits():
+    """Regression for the capacity-overflow regrow path: a plan installed
+    with hopelessly small capacities must GROW to a correct fixpoint (never
+    truncate), and the grown plan must serve later calls from cache."""
+    dims = {"i": 16, "j": 12, "k": 10}
+    eng = CompiledExpr("X(i,j) = B(i,k) * C(k,j)",
+                       Format({"B": "cc", "C": "cc"}),
+                       Schedule(loop_order=("i", "k", "j")), dims)
+    arrays = {"B": sparse((16, 10), 0.4), "C": sparse((10, 12), 0.4)}
+    flat, sig = eng._pad_flat(eng._raw_flat(arrays))
+    honest = eng._record_caps([flat])
+    assert any(c > 8 for c in honest.values()), "case too small to regrow"
+    # force a plan whose every capacity is the minimum bucket
+    eng._install_plan(sig, {k: 8 for k in honest}, batch=False)
+
+    got = eng(arrays).to_dense()
+    np.testing.assert_allclose(got, arrays["B"] @ arrays["C"])
+    assert eng.stats["overflow_retries"] >= 1       # grew, did not truncate
+    grown = eng._plans[sig].caps
+    assert any(grown[k] > 8 for k in grown)
+
+    # the grown plan is cached: fresh-valued traffic re-hits with ZERO new
+    # traces and zero further regrows
+    traces, retries = eng.stats["traces"], eng.stats["overflow_retries"]
+    arrays2 = fresh_values(arrays)
+    np.testing.assert_allclose(eng(arrays2).to_dense(),
+                               arrays2["B"] @ arrays2["C"])
+    assert eng.stats["traces"] == traces
+    assert eng.stats["overflow_retries"] == retries
+    assert eng.stats["plan_hits"] >= 2
+
+
 def test_larger_inputs_new_bucket_correct():
     eng = CompiledExpr("x(i) = B(i,j) * c(j)", Format({"B": "cc", "c": "c"}),
                        Schedule(loop_order=("i", "j")), DIMS)

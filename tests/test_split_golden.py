@@ -1,0 +1,131 @@
+"""Golden wire-level token streams for split schedules (§4.1 + §4.4).
+
+Every Table 1 expression is lowered with ``split={outer: 2},
+parallelize={outer: 2}`` and simulated per lane. The per-lane output
+WRITER streams — actual wire tokens, coordinates interleaved with
+Stop/Done control — are decoded, mapped back from the split coordinate
+space (vo*chunk + vi), and merged with their term signs. The merged
+stream content must equal the unsplit schedule's golden writer tokens,
+coordinate for coordinate, value for value.
+"""
+import numpy as np
+import pytest
+
+from test_custard_table1 import CASES, DIMS, make_arrays, oracle
+
+from repro.core import streams as st
+from repro.core.custard import lower
+from repro.core.einsum import parse
+from repro.core.schedule import Format, Schedule
+from repro.core.simulator import Simulator, simulate_expr
+
+
+def decode_writer_tokens(res, lhs: str, rvars):
+    """Decode a simulation's writer token streams into {coords: value}.
+
+    Reads the WIRE tokens (``edge_tokens``) of every level writer, parses
+    them back to nested form at the writer's declared depth, and walks the
+    aligned hierarchy. Explicit zeros and union holes are dropped (they
+    never reach a stored output).
+    """
+    out = {}
+    if not rvars:                       # scalar result: a depth-0 stream
+        v = st.tokens_to_nested(res.edge_tokens(f"{lhs}_vals", "val"),
+                                depth=0)
+        if v not in (None, []) and float(v) != 0.0:
+            out[()] = float(v)
+        return out
+    crds = [st.tokens_to_nested(res.edge_tokens(f"{lhs}_{v}", "crd"),
+                                depth=i + 1)
+            for i, v in enumerate(rvars)]
+    vals = st.tokens_to_nested(res.edge_tokens(f"{lhs}_vals", "val"),
+                               depth=len(rvars))
+
+    def walk(cs, v, prefix):
+        if len(cs) == 1:
+            for c, val in zip(cs[0], v):
+                if c is None or val is None or float(val) == 0.0:
+                    continue
+                key = prefix + (int(c),)
+                out[key] = out.get(key, 0.0) + float(val)
+            return
+        for i, c in enumerate(cs[0]):
+            walk([cc[i] for cc in cs[1:]], v[i],
+                 prefix + (int(c) if c is not None else -1,))
+
+    walk(crds, vals, ())
+    return {k: v for k, v in out.items() if v != 0.0}
+
+
+def unsplit_coords(key, rvars_split, split_of, dims_split):
+    """Merge adjacent (vo, vi) coordinate pairs back to vo*chunk + vi."""
+    out, i = [], 0
+    while i < len(rvars_split):
+        v = rvars_split[i]
+        if (v.endswith("o") and v[:-1] in split_of
+                and i + 1 < len(rvars_split)
+                and rvars_split[i + 1] == v[:-1] + "i"):
+            chunk = dims_split[v[:-1] + "i"]
+            out.append(key[i] * chunk + key[i + 1])
+            i += 2
+        else:
+            out.append(key[i])
+            i += 1
+    return tuple(out)
+
+
+@pytest.mark.parametrize("name,expr,order,fmts,expected", CASES,
+                         ids=[c[0] for c in CASES])
+def test_split_lane_streams_merge_to_golden_tokens(name, expr, order, fmts,
+                                                   expected):
+    assign = parse(expr)
+    fmt = Format(dict(fmts))
+    arrays = make_arrays(assign)
+    lhs = assign.lhs.tensor
+    outer = order[0]
+
+    # golden: the unsplit schedule's writer token streams
+    low1 = lower(expr, fmt, Schedule(loop_order=tuple(order)), DIMS)
+    res1 = Simulator(low1.graph, low1.build_inputs(arrays)).run()
+    golden = decode_writer_tokens(res1, lhs, low1.result_vars)
+
+    # sanity: golden streams carry exactly the dense oracle
+    terms = [(t.sign, [(f.tensor, "".join(f.vars)) for f in t.factors])
+             for t in assign.terms]
+    want = oracle(terms, arrays, "".join(assign.result_vars), DIMS)
+    for key, v in golden.items():
+        orig = tuple(key[low1.result_vars.index(w)]
+                     for w in assign.lhs.vars)
+        assert np.isclose(want[orig], v), (name, key)
+
+    # split + parallel lanes: per-lane wire streams
+    sch2 = Schedule(loop_order=tuple(order), split={outer: 2},
+                    parallelize={outer: 2})
+    sim2 = simulate_expr(expr, fmt, sch2, arrays, DIMS)
+    low2 = lower(expr, fmt, sch2, DIMS)
+    rvars2 = low2.result_vars
+
+    merged = {}
+    term_lanes = {}
+    for ls in sim2.lanes:
+        lane_out = decode_writer_tokens(ls.result, lhs, rvars2)
+        if ls.lane is not None:
+            term_lanes.setdefault(ls.term, []).append(set(lane_out))
+        for key, v in lane_out.items():
+            okey = unsplit_coords(key, rvars2, low2.split_of, low2.dims)
+            merged[okey] = merged.get(okey, 0.0) + ls.sign * v
+    merged = {k: v for k, v in merged.items() if not np.isclose(v, 0.0)}
+
+    assert set(merged) == set(golden), (
+        f"{name}: merged lane streams cover different coordinates")
+    for key, v in golden.items():
+        assert np.isclose(merged[key], v), (name, key, merged[key], v)
+
+    # a parallelized RESULT variable partitions each term's wire streams
+    # into disjoint coordinate chunks (the concat-merge topology)
+    if low2.merge_kind == "concat":
+        for sets in term_lanes.values():
+            for a in range(len(sets)):
+                for b in range(a + 1, len(sets)):
+                    assert not (sets[a] & sets[b]), (
+                        f"{name}: concat-merge lanes overlap")
