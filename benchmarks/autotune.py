@@ -1,0 +1,61 @@
+"""Autoscheduler acceptance: fig12-shaped SpM*SpM schedule search.
+
+The autoscheduler (analytic prune + downsampled-simulator ranking over
+loop orders x split factors x lane counts) must land within 1.1x of the
+best exhaustive fig12 order's FULL-SIZE simulated cycles, beat the worst
+order by >=5x, and hit the persistent schedule cache on the second
+resolution of the same shape (no search).
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+
+from .common import run_expr, uniform_sparse
+
+EXPR = "X(i,j) = B(i,k) * C(k,j)"
+ORDERS = ["ijk", "ikj", "jik", "jki", "kij", "kji"]
+
+
+def run(emit, smoke: bool = False):
+    from repro.core.autoschedule import ScheduleCache, resolve_schedule
+    from repro.core.schedule import Format
+    from repro.core.simulator import simulate_expr
+
+    i, j, k = (120, 120, 50) if smoke else (250, 250, 100)
+    B = uniform_sparse((i, k), 0.05)
+    C = uniform_sparse((k, j), 0.05)
+    dims = {"i": i, "j": j, "k": k}
+    fmt = Format({"B": "cc", "C": "cc"})
+    arrays = {"B": B, "C": C}
+
+    # exhaustive baseline: every ijk dataflow order at full size
+    cycles = {}
+    for order in ORDERS:
+        res, _ = run_expr(EXPR, {"B": "cc", "C": "cc"}, order, arrays, dims)
+        cycles[order] = res.cycles
+        emit(f"autotune/exhaustive,{order},{res.cycles}")
+    best, worst = min(cycles.values()), max(cycles.values())
+
+    with tempfile.TemporaryDirectory() as td:
+        cache = ScheduleCache(path=os.path.join(td, "schedules.json"))
+        res1 = resolve_schedule(EXPR, fmt, dims, arrays=arrays, cache=cache,
+                                device_count=1)
+        rep = res1.report
+        emit(f"autotune/search,enumerated,{rep.enumerated}")
+        emit(f"autotune/search,elapsed_ms,{rep.elapsed_s * 1e3:.0f}")
+        sch = res1.schedule
+        auto = simulate_expr(EXPR, fmt, sch, arrays, dims).cycles
+        emit(f"autotune/auto,{''.join(sch.loop_order)},{auto}")
+        vs_best = auto / best
+        vs_worst = worst / auto
+        emit(f"autotune/summary,auto_vs_best_ratio,{vs_best:.3f}")
+        emit(f"autotune/summary,worst_vs_auto_ratio,{vs_worst:.1f}")
+        # second resolution of the same shape: cache hit, no search
+        res2 = resolve_schedule(EXPR, fmt, dims, arrays=arrays, cache=cache,
+                                device_count=1)
+        emit(f"autotune/cache,second_request_hit,{int(res2.cache_hit)}")
+        ok = (vs_best <= 1.1 and vs_worst >= 5.0
+              and res2.cache_hit and res2.report is None
+              and res2.schedule == sch)
+    return ok

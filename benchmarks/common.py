@@ -14,9 +14,11 @@ RNG = np.random.default_rng(20230325)
 
 
 def uniform_sparse(shape, density, rng=None):
-    rng = rng or RNG
-    return ((rng.random(shape) < density)
-            * rng.integers(1, 9, shape)).astype(float)
+    from repro.core.autoschedule import random_operand
+
+    if np.isscalar(shape):
+        shape = (int(shape),)
+    return random_operand(tuple(shape), density, rng or RNG)
 
 
 def runs_vector(dim, nnz, run_len, rng=None, phase=0):

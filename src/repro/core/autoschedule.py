@@ -1,0 +1,588 @@
+"""Autoscheduler: cost-model-driven schedule search + persistent cache.
+
+SAM dataflow graphs span "arbitrary iteration orderings and many
+hardware-specific optimizations" (paper §1) — and the fig12 reproduction
+shows a >=10x cycle gap between loop orders of the SAME expression. This
+module turns that schedule space from something a user guesses into
+something the system searches:
+
+1. **Enumerate** the legal schedule space (``enumerate_space``): loop
+   orders consistent with the expression (permutations of its index
+   variables), iteration-split factors over power-of-two candidates
+   (§4.1), and §4.4 lane counts up to the device count riding on the
+   split variable.
+2. **Prune** with a cheap analytic estimate (``analytic_cost``): expected
+   stream lengths derived from formats + dims + a sparsity hint, combined
+   with the simulator's steady-state law (cycles ≈ max per-block work).
+3. **Rank** the survivors by running the existing cycle-approximate
+   ``Simulator`` as the cost model on *downsampled* operands
+   (``simulator.downsample_operands`` keeps the sample cheap while
+   preserving relative order — fig12's ranking is stable down to ~48³).
+4. **Remember**: ``ScheduleCache`` persists winners on disk keyed by the
+   canonical expression key + dims bucket + sparsity bucket, so serving
+   never re-searches a shape it has seen (see DESIGN.md §5).
+
+Entry points: ``resolve_schedule`` (cache-aware; what
+``custard.lower(..., schedule="auto")``, ``jax_backend.compile_expr`` and
+``serve.py --autotune`` call) and ``search`` (always searches, returns the
+full ranked report).
+
+>>> from repro.core.einsum import parse
+>>> specs = enumerate_space(parse("x(i) = B(i,j) * c(j)"), {"i": 8, "j": 8},
+...                         device_count=1)
+>>> sorted({s.order for s in specs if not s.split})
+[('i', 'j'), ('j', 'i')]
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import os
+import tempfile
+import time
+from itertools import islice, permutations
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from .einsum import Assignment, parse
+from .schedule import Format, Schedule, schedule_from_dict, schedule_to_dict
+from .simulator import downsample_operands, simulate_expr
+
+DEFAULT_SPARSITY = 0.1
+SPLIT_FACTORS = (2, 4, 8)
+MAX_ORDERS = 720          # full permutations up to 6 index variables
+CACHE_VERSION = 1
+
+SparsityHint = Union[None, float, Dict[str, float]]
+
+
+# ---------------------------------------------------------------------------
+# schedule-space enumeration
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CandidateSpec:
+    """One point of the schedule space, in ORIGINAL (unsplit) terms.
+
+    ``order`` is a permutation of every index variable; ``split`` is at
+    most one ``(var, factor)`` §4.1 split; ``lanes > 1`` parallelizes the
+    split variable's outer half into that many §4.4 lanes.
+    """
+
+    order: Tuple[str, ...]
+    split: Tuple[Tuple[str, int], ...] = ()
+    lanes: int = 1
+
+    def schedule(self) -> Schedule:
+        split = dict(self.split)
+        par: Dict[str, int] = {}
+        if self.lanes > 1 and split:
+            par = {next(iter(split)): self.lanes}
+        return Schedule(loop_order=self.order, split=split, parallelize=par)
+
+    def key(self) -> str:
+        """Deterministic total-order tie-breaker (the separator keeps
+        multi-character variable names collision-free)."""
+        sp = ",".join(f"{v}:{f}" for v, f in self.split)
+        return f"{','.join(self.order)}|split={sp}|lanes={self.lanes}"
+
+
+def enumerate_space(assign: Union[str, Assignment], dims: Dict[str, int], *,
+                    device_count: Optional[int] = None,
+                    split_factors: Sequence[int] = SPLIT_FACTORS,
+                    max_orders: int = MAX_ORDERS) -> List[CandidateSpec]:
+    """Enumerate the legal schedule space for an expression.
+
+    Legality invariants (pinned by ``tests/test_autoschedule.py``):
+
+    * every ``order`` is a permutation of ``assign.all_vars`` — no
+      variable is ever dropped;
+    * split factors are powers of two, ``2 <= factor <= dims[var]``, so
+      the factor always divides the zero-padded extent
+      ``factor * ceil(dim/factor)``;
+    * variables whose §4.1 rename ``(vo, vi)`` would collide with an
+      existing variable are never split;
+    * lane counts are powers of two, ``lanes <= device_count`` and
+      ``lanes <= factor`` (a lane per coordinate chunk at most).
+    """
+    assign = parse(assign) if isinstance(assign, str) else assign
+    vars_ = list(assign.all_vars)
+    if not vars_:
+        return [CandidateSpec(order=())]
+    if device_count is None:
+        device_count = _device_count()
+    lane_counts = [n for n in (2, 4, 8, 16, 32, 64, 128)
+                   if n <= device_count]
+    # lanes ride a split factor >= the lane count, so the factor
+    # candidates extend to cover every enumerable lane count — a
+    # 16-device mesh must be able to see a 16-lane schedule
+    factors = sorted(set(split_factors) | set(lane_counts))
+    taken = set(vars_)
+    specs: List[CandidateSpec] = []
+    for order in islice(permutations(vars_), max_orders):
+        specs.append(CandidateSpec(order=order))
+        for v in order:
+            if f"{v}o" in taken or f"{v}i" in taken:
+                continue                      # §4.1 rename would capture
+            for f in factors:
+                if f < 2 or (f & (f - 1)) or f > dims.get(v, 0):
+                    continue                  # power-of-two, fits the dim
+                specs.append(CandidateSpec(order=order, split=((v, f),)))
+                for n in lane_counts:
+                    if n <= f:
+                        specs.append(CandidateSpec(
+                            order=order, split=((v, f),), lanes=n))
+    return specs
+
+
+def _device_count() -> int:
+    try:
+        import jax
+        return jax.device_count()
+    except Exception:                          # noqa: BLE001 - jax optional
+        return 1
+
+
+# ---------------------------------------------------------------------------
+# analytic pruning cost: expected stream lengths from formats + dims + nnz
+# ---------------------------------------------------------------------------
+
+def resolve_densities(assign: Assignment, sparsity: SparsityHint = None,
+                      arrays: Optional[Dict[str, np.ndarray]] = None
+                      ) -> Dict[str, float]:
+    """Per-tensor density: an explicit per-tensor dict entry wins (so
+    pre-measured densities are never re-measured), then measurement from
+    ``arrays``, then a scalar ``sparsity`` hint, then
+    ``DEFAULT_SPARSITY``."""
+    dens: Dict[str, float] = {}
+    for term in assign.terms:
+        for acc in term.factors:
+            t = acc.tensor
+            if t in dens:
+                continue
+            if isinstance(sparsity, dict) and t in sparsity:
+                p = float(sparsity[t])
+            elif arrays is not None and t in arrays:
+                a = np.asarray(arrays[t])
+                p = float(np.count_nonzero(a)) / max(a.size, 1)
+            elif sparsity is not None and not isinstance(sparsity, dict):
+                p = float(sparsity)
+            else:
+                p = DEFAULT_SPARSITY
+            dens[t] = min(max(p, 1e-6), 1.0)
+    return dens
+
+
+def analytic_cost(assign: Assignment, fmt: Format, dims: Dict[str, int],
+                  spec: CandidateSpec, densities: Dict[str, float]) -> float:
+    """Cheap schedule estimate mirroring the simulator's cost law.
+
+    Walks each term's scope outer->inner tracking the expected number of
+    live iterations (stream length): a compressed level of a tensor with
+    density ``p`` and ``m`` compressed levels contributes per-level fill
+    ``p**(1/m)``; intersections multiply fills (uniform-independence) and
+    cost the sum of merged fiber lengths (two-finger pointer advances).
+    The estimate is ``max`` over per-block works (the simulator's
+    steady-state term) plus a small total-work tie-breaker. Parallel
+    lanes divide the works at and below the split variable; the lane
+    merge costs the estimated result nnz.
+    """
+    pos = {v: i for i, v in enumerate(spec.order)}
+    result_vars = set(assign.lhs.vars)
+    fills: Dict[str, float] = {}
+    for term in assign.terms:
+        for acc in term.factors:
+            if acc.tensor in fills:
+                continue
+            s = fmt.of(acc.tensor, len(acc.vars))
+            m = sum(1 for ch in s if ch in "cb")
+            p = densities.get(acc.tensor, DEFAULT_SPARSITY)
+            fills[acc.tensor] = p ** (1.0 / m) if m else 1.0
+
+    par_var = spec.split[0][0] if (spec.lanes > 1 and spec.split) else None
+    stages: List[float] = []
+    result_est = 0.0
+    for term in assign.terms:
+        scope = [v for v in spec.order
+                 if v in term.vars or v in result_vars]
+        count = 1.0
+        laned = par_var is not None and par_var in term.vars
+        for v in scope:
+            flens: List[float] = []
+            fprob = 1.0
+            for f in term.factors:
+                if v not in f.vars:
+                    continue
+                s = fmt.of(f.tensor, len(f.vars))
+                path = sorted(f.vars, key=lambda w: pos[w])
+                ch = s[path.index(v)] if path.index(v) < len(s) else "c"
+                fill = fills[f.tensor] if ch in "cb" else 1.0
+                flens.append(max(dims[v] * fill, 1e-9))
+                fprob *= fill
+            lanes = (spec.lanes
+                     if laned and pos.get(par_var, -1) <= pos[v] else 1)
+            if flens:
+                work = count * sum(flens)      # scan + merge advances
+                matches = dims[v] * fprob      # expected intersection hits
+            else:
+                work = count * dims[v]         # broadcast result var
+                matches = dims[v]
+            stages.append(work / lanes)
+            count *= max(matches, 1e-9)
+        stages.append(count / (spec.lanes if laned else 1))  # values/reduce
+        result_est += count
+    merge = result_est if (spec.lanes > 1 or len(assign.terms) > 1) else 0.0
+    steady = max(stages) if stages else 1.0
+    cost = max(steady, merge) + 1e-3 * sum(stages)
+    if spec.split and spec.lanes == 1:
+        cost *= 1.02    # a split alone adds a level; prefer unsplit on ties
+    return float(cost)
+
+
+# ---------------------------------------------------------------------------
+# search: analytic prune, then the Simulator on downsampled operands
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Candidate:
+    spec: CandidateSpec
+    schedule: Schedule
+    analytic: float
+    cycles: Optional[int] = None    # sampled-simulator cycles (the ranker)
+
+
+@dataclasses.dataclass
+class SearchReport:
+    expr: str
+    candidates: List[Candidate]     # simulated survivors, best first
+    enumerated: int                 # size of the (possibly capped) space
+    simulated: int                  # candidates actually run on the sampler
+    sample_dims: Dict[str, int]
+    elapsed_s: float
+    # True when the loop-order space exceeded max_orders and was capped —
+    # the search covered a lexicographic prefix, not every permutation
+    orders_truncated: bool = False
+
+    @property
+    def best(self) -> Candidate:
+        return self.candidates[0]
+
+
+def _expr_text(assign: Assignment) -> str:
+    terms = []
+    for t in assign.terms:
+        txt = " * ".join(repr(f) for f in t.factors)
+        terms.append(("- " if t.sign < 0 else ("+ " if terms else "")) + txt)
+    return f"{assign.lhs!r} = " + " ".join(terms)
+
+
+def random_operand(shape: Tuple[int, ...], density: float,
+                   rng: np.random.Generator) -> np.ndarray:
+    """The repo's one random sparse-operand generator (shared by the
+    sampler, ``serve_sam``'s request synthesis, and the benchmark
+    helpers, so the cost model's inputs match what serving runs): small
+    positive integers at ``density``, or a scalar for an empty shape."""
+    if not shape:
+        return np.asarray(float(rng.integers(1, 5)))
+    return ((rng.random(shape) < density)
+            * rng.integers(1, 9, shape)).astype(float)
+
+
+def synthetic_operands(assign: Assignment, dims: Dict[str, int],
+                       densities: Dict[str, float], seed: int = 0,
+                       only: Optional[set] = None
+                       ) -> Dict[str, np.ndarray]:
+    """Deterministic synthetic operands matching a sparsity hint — the
+    sampler inputs for tensors the caller provided no concrete array for.
+    ``only`` restricts generation to those tensor names."""
+    rng = np.random.default_rng(seed)
+    out: Dict[str, np.ndarray] = {}
+    for term in assign.terms:
+        for acc in term.factors:
+            if acc.tensor in out or (only is not None
+                                     and acc.tensor not in only):
+                continue
+            shape = tuple(dims[v] for v in acc.vars)
+            out[acc.tensor] = random_operand(
+                shape, densities.get(acc.tensor, DEFAULT_SPARSITY), rng)
+    return out
+
+
+def search(expr: Union[str, Assignment], fmt: Format, dims: Dict[str, int], *,
+           arrays: Optional[Dict[str, np.ndarray]] = None,
+           sparsity: SparsityHint = None, top_k: int = 8, max_dim: int = 48,
+           device_count: Optional[int] = None,
+           split_factors: Sequence[int] = SPLIT_FACTORS,
+           max_orders: int = MAX_ORDERS) -> SearchReport:
+    """Search the schedule space; return candidates ranked best-first.
+
+    Deterministic: the analytic prune sorts on (cost, spec key), the
+    sampler inputs are either the caller's operands downsampled or seeded
+    synthetic data, and the final ranking sorts on (sampled cycles,
+    analytic cost, spec key) — two invocations with equal inputs return
+    identical rankings.
+    """
+    assign = parse(expr) if isinstance(expr, str) else expr
+    t0 = time.perf_counter()
+    densities = resolve_densities(assign, sparsity, arrays)
+    specs = enumerate_space(assign, dims, device_count=device_count,
+                            split_factors=split_factors,
+                            max_orders=max_orders)
+    scored = sorted(
+        (analytic_cost(assign, fmt, dims, s, densities), s.key(), s)
+        for s in specs)
+
+    # sampler inputs: provided operands downsampled; tensors without a
+    # concrete array fall back to synthetic data at the hinted density
+    s_arrays, s_dims = downsample_operands(assign, arrays or {}, dims,
+                                           max_dim)
+    missing = {acc.tensor for term in assign.terms
+               for acc in term.factors} - set(s_arrays)
+    if missing:
+        s_arrays.update(synthetic_operands(assign, s_dims, densities,
+                                           only=missing))
+
+    candidates: List[Candidate] = []
+    simulated = 0
+    for cost, _, spec in scored:
+        if len(candidates) >= top_k:
+            break
+        sch = spec.schedule()
+        simulated += 1
+        try:
+            cycles = simulate_expr(assign, fmt, sch, s_arrays, s_dims).cycles
+        except Exception:              # noqa: BLE001 - schedule can't lower:
+            continue                   # drop it, keep searching the ranking
+        candidates.append(Candidate(spec=spec, schedule=sch,
+                                    analytic=cost, cycles=cycles))
+    if not candidates:
+        raise ValueError(
+            f"no schedule in the enumerated space lowers for {assign}")
+    candidates.sort(key=lambda c: (c.cycles, c.analytic, c.spec.key()))
+    return SearchReport(expr=_expr_text(assign), candidates=candidates,
+                        enumerated=len(specs), simulated=simulated,
+                        sample_dims=s_dims,
+                        elapsed_s=time.perf_counter() - t0,
+                        orders_truncated=(
+                            math.factorial(len(assign.all_vars))
+                            > max_orders))
+
+
+# ---------------------------------------------------------------------------
+# persistent schedule cache (DESIGN.md §5)
+# ---------------------------------------------------------------------------
+
+def default_cache_path() -> str:
+    """$SAM_SCHEDULE_CACHE, else ~/.cache/sam-repro/schedules-v<N>.json.
+
+    The cache version is part of the default FILENAME so tools on
+    different versions never share (and can never clobber) each other's
+    stores — ``store()`` rewrites the whole file, and merging only
+    recognizes same-version entries. An explicit ``$SAM_SCHEDULE_CACHE``
+    override shares one file at the operator's discretion."""
+    env = os.environ.get("SAM_SCHEDULE_CACHE")
+    if env:
+        return env
+    return os.path.join(os.path.expanduser("~"), ".cache", "sam-repro",
+                        f"schedules-v{CACHE_VERSION}.json")
+
+
+def dims_bucket(dims: Dict[str, int]) -> Dict[str, int]:
+    """Power-of-two bucket per extent: shapes inside one bucket share a
+    cache entry (the jit engine buckets capacities the same way)."""
+    return {v: 1 if d <= 1 else 1 << (int(d) - 1).bit_length()
+            for v, d in dims.items()}
+
+
+def sparsity_bucket(p: float) -> float:
+    """Nearest power-of-two density bucket in [2^-20, 1]."""
+    p = min(max(float(p), 2.0 ** -20), 1.0)
+    return 2.0 ** round(math.log2(p))
+
+
+def auto_cache_key(assign: Union[str, Assignment], fmt: Format,
+                   dims: Dict[str, int], densities: Dict[str, float],
+                   device_count: Optional[int] = None) -> str:
+    """Cache key of a search: canonical expression+format key (via
+    ``custard.expr_cache_key`` over a fixed placeholder order, so the
+    schedule itself is NOT part of the key) + dims bucket + per-tensor
+    sparsity bucket + device count + cache version.
+
+    The device count is part of the key because it bounds the enumerated
+    lane counts: a schedule tuned on one device must not be served to a
+    4-device caller (and vice versa)."""
+    from .custard import expr_cache_key   # deferred: custard imports us lazily
+
+    assign = parse(assign) if isinstance(assign, str) else assign
+    if device_count is None:
+        device_count = _device_count()
+    placeholder = Schedule(loop_order=tuple(assign.all_vars))
+    base = expr_cache_key(assign, fmt, placeholder, dims_bucket(dims))
+    dpart = ",".join(f"{t}:{sparsity_bucket(p):g}"
+                     for t, p in sorted(densities.items()))
+    return (f"v{CACHE_VERSION}|{base}|density={dpart}"
+            f"|devices={device_count}")
+
+
+class ScheduleCache:
+    """On-disk JSON store of search winners (format: DESIGN.md §5).
+
+    Reads are lazy and tolerate a missing/corrupt/version-mismatched file
+    (treated as empty); writes re-read, merge, and replace via an atomic
+    rename, so concurrent processes can never observe a torn file. The
+    read-merge-write is NOT locked: two processes storing at once can
+    lose the other's newest entry — acceptable by design, since a lost
+    entry only ever costs that shape a redundant re-search.
+    """
+
+    def __init__(self, path: Optional[os.PathLike] = None):
+        self.path = str(path) if path is not None else default_cache_path()
+
+    # -- io ------------------------------------------------------------
+    def _load(self) -> Dict[str, dict]:
+        try:
+            with open(self.path) as f:
+                data = json.load(f)
+        except (OSError, ValueError):
+            return {}
+        if not isinstance(data, dict) or data.get("version") != CACHE_VERSION:
+            return {}                     # wrong shape/version: empty cache
+        entries = data.get("entries")
+        return entries if isinstance(entries, dict) else {}
+
+    def _write(self, entries: Dict[str, dict]) -> None:
+        os.makedirs(os.path.dirname(self.path) or ".", exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(self.path) or ".",
+                                   suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump({"version": CACHE_VERSION, "entries": entries},
+                          f, indent=1, sort_keys=True)
+            os.replace(tmp, self.path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+
+    # -- api -----------------------------------------------------------
+    def lookup(self, key: str) -> Optional[Schedule]:
+        entry = self._load().get(key)
+        if not isinstance(entry, dict):
+            return None
+        try:
+            return schedule_from_dict(entry["schedule"])
+        except (KeyError, TypeError, ValueError):
+            return None                   # malformed entry == no entry
+
+    def store(self, key: str, schedule: Schedule,
+              meta: Optional[dict] = None) -> None:
+        entries = self._load()
+        entries[key] = {"schedule": schedule_to_dict(schedule),
+                        "meta": dict(meta or {}),
+                        "created": time.time()}
+        self._write(entries)
+        _RESOLVED[(self.path, key)] = (_file_stamp(self.path), schedule)
+
+    def entries(self) -> Dict[str, dict]:
+        return self._load()
+
+    def clear(self) -> None:
+        if os.path.exists(self.path):
+            os.unlink(self.path)
+        for k in [k for k in _RESOLVED if k[0] == self.path]:
+            del _RESOLVED[k]
+
+
+# ---------------------------------------------------------------------------
+# the cache-aware entry point
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class AutoResult:
+    schedule: Schedule
+    cache_hit: bool
+    key: str
+    report: Optional[SearchReport]   # None on a cache hit: no search ran
+
+
+# in-process memo over the on-disk store: repeat resolutions of a hot key
+# (every serving request re-resolving "auto") skip the file read + parse.
+# Entries carry the cache file's (mtime_ns, size) stamp and are only
+# honored while it still matches, so out-of-band edits or an operator's
+# `rm` of the file are picked up at the cost of one stat() per resolve.
+_Stamp = Optional[Tuple[int, int]]
+_RESOLVED: Dict[Tuple[str, str], Tuple[_Stamp, Schedule]] = {}
+
+
+def _file_stamp(path: str) -> _Stamp:
+    try:
+        st = os.stat(path)
+        return (st.st_mtime_ns, st.st_size)
+    except OSError:
+        return None
+
+
+def clear_resolution_memo() -> None:
+    _RESOLVED.clear()
+
+
+def resolve_schedule(expr: Union[str, Assignment], fmt: Format,
+                     dims: Dict[str, int], *,
+                     arrays: Optional[Dict[str, np.ndarray]] = None,
+                     sparsity: SparsityHint = None,
+                     cache: Union[None, bool, ScheduleCache] = None,
+                     device_count: Optional[int] = None,
+                     **search_kw) -> AutoResult:
+    """Resolve ``schedule="auto"``: consult the persistent cache, search on
+    a miss, persist the winner.
+
+    ``cache``: None uses the default on-disk cache (``$SAM_SCHEDULE_CACHE``
+    or ``~/.cache/sam-repro/schedules-v<N>.json``); ``False`` disables
+    persistence (always search); a ``ScheduleCache`` uses that store.
+    """
+    assign = parse(expr) if isinstance(expr, str) else expr
+    densities = resolve_densities(assign, sparsity, arrays)
+    if device_count is None:
+        device_count = _device_count()
+    key = auto_cache_key(assign, fmt, dims, densities, device_count)
+    # a non-default search space (split_factors, max_orders, top_k,
+    # max_dim, ...) explores different candidates, so its winners live
+    # under their own cache entries; the default space keeps the bare key
+    if search_kw:
+        key += "|search=" + ",".join(
+            f"{k}:{v}" for k, v in sorted(search_kw.items()))
+    store: Optional[ScheduleCache]
+    if cache is False:
+        store = None
+    elif cache is None or cache is True:
+        store = ScheduleCache()
+    else:
+        store = cache
+    if store is not None:
+        memo_key = (store.path, key)
+        stamp = _file_stamp(store.path)
+        memo = _RESOLVED.get(memo_key)
+        hit: Optional[Schedule] = None
+        if memo is not None and stamp is not None and memo[0] == stamp:
+            hit = memo[1]
+        elif stamp is not None:
+            hit = store.lookup(key)
+        if hit is not None:
+            _RESOLVED[memo_key] = (stamp, hit)
+            return AutoResult(schedule=hit, cache_hit=True, key=key,
+                              report=None)
+    rep = search(assign, fmt, dims, arrays=arrays, sparsity=densities,
+                 device_count=device_count, **search_kw)
+    best = rep.best
+    if store is not None:
+        store.store(key, best.schedule,
+                    {"expr": rep.expr, "cycles": best.cycles,
+                     "analytic": best.analytic,
+                     "sample_dims": rep.sample_dims,
+                     "enumerated": rep.enumerated})   # also memoizes
+    return AutoResult(schedule=best.schedule, cache_hit=False, key=key,
+                      report=rep)

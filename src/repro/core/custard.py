@@ -396,9 +396,28 @@ class Custard:
         return out_crd, val
 
 
-def compile_expr(expr: str, fmt: Format, schedule: Schedule,
-                 dims: Dict[str, int]) -> g.Graph:
-    """Lower to the combined SAM graph (split applied internally)."""
+def compile_expr(expr: str, fmt: Format, schedule, dims: Dict[str, int]
+                 ) -> g.Graph:
+    """Lower an expression to its combined SAM dataflow graph.
+
+    Args:
+        expr: tensor index notation (or a parsed ``Assignment``), e.g.
+            ``"x(i) = B(i,j) * c(j)"``.
+        fmt: per-tensor level formats (``schedule.Format``).
+        schedule: a ``Schedule`` (its ``split`` is applied internally), or
+            the string ``"auto"`` to search for one (see ``lower``).
+        dims: extent of every index variable.
+
+    Returns:
+        The validated ``graph.Graph`` ready for ``simulator.simulate`` or
+        ``jax_backend.execute_graph``.
+
+    >>> from repro.core.schedule import Format, Schedule
+    >>> G = compile_expr("x(i) = B(i,j) * c(j)", Format({"B": "cc", "c": "c"}),
+    ...                  Schedule(loop_order=("i", "j")), {"i": 4, "j": 3})
+    >>> G.primitive_counts()["intersect"]
+    1
+    """
     low = lower(expr, fmt, schedule, dims)
     if low.graph is None:
         raise low.graph_error
@@ -532,9 +551,24 @@ class Lowered:
 _LOWERED_CACHE: Dict[str, Lowered] = {}
 
 
-def lower(expr, fmt: Format, schedule: Schedule,
-          dims: Dict[str, int]) -> Lowered:
+def lower(expr, fmt: Format, schedule, dims: Dict[str, int]) -> Lowered:
     """Lower an expression with its FULL schedule, memoized.
+
+    Args:
+        expr: tensor index notation text or a parsed ``Assignment``.
+        fmt: per-tensor level formats.
+        schedule: a ``Schedule``, or the string ``"auto"`` to let the
+            autoscheduler pick one — the schedule space (loop orders,
+            split factors, lane counts) is searched with the simulator as
+            cost model and the winner is remembered in the persistent
+            on-disk schedule cache (``autoschedule.resolve_schedule``,
+            DESIGN.md §5), so a shape is only ever searched once.
+        dims: extent of every index variable.
+
+    Returns:
+        A ``Lowered``: the combined multi-term SAM graph (when it exists),
+        the per-term graphs + §4.4 lane counts, and both coordinate
+        spaces (original and post-split).
 
     ``Schedule.split`` expands each split variable into split-level
     scanners: the variable's coordinate space is partitioned into
@@ -543,7 +577,22 @@ def lower(expr, fmt: Format, schedule: Schedule,
     duplicates each affected term's subgraph into ``n`` lanes whose
     par-var scanners are restricted to one coordinate chunk each (§4.4);
     the lanes re-join through a keyed sum-merge (see ``merge_kind``).
+
+    >>> from repro.core.schedule import Format, Schedule
+    >>> low = lower("x(i) = B(i,j) * c(j)", Format({"B": "cc", "c": "c"}),
+    ...             Schedule(loop_order=("i", "j"), split={"j": 2}),
+    ...             {"i": 4, "j": 6})
+    >>> low.schedule.loop_order, low.dims["jo"], low.dims["ji"]
+    (('i', 'jo', 'ji'), 2, 3)
+    >>> low.result_vars
+    ['i']
     """
+    if isinstance(schedule, str):
+        if schedule != "auto":
+            raise ValueError(
+                f"schedule must be a Schedule or 'auto', got {schedule!r}")
+        from .autoschedule import resolve_schedule
+        schedule = resolve_schedule(expr, fmt, dims).schedule
     assign = parse(expr) if isinstance(expr, str) else expr
     key = expr_cache_key(assign, fmt, schedule, dims)
     hit = _LOWERED_CACHE.get(key)

@@ -882,6 +882,34 @@ class CompiledExpr:
         return ft
 
     # -- public execution --------------------------------------------------
+    def execute(self, arrays: Dict[str, np.ndarray]) -> FiberTree:
+        """Execute one operand set through the jit-cached plan.
+
+        Args:
+            arrays: dense numpy array per input tensor name (concordant
+                fibertrees are built internally per the schedule).
+
+        Returns:
+            The result ``FiberTree`` in the ORIGINAL coordinate space
+            (split levels re-merged, padding trimmed).
+
+        The first call with a new input-size signature pays the
+        capacity-record + trace cost; repeats hit the plan cache
+        (``self.stats`` records hits/misses/retraces). Equivalent to
+        calling the engine: ``eng(arrays)``.
+
+        >>> import numpy as np
+        >>> from repro.core.schedule import Format, Schedule
+        >>> eng = compile_expr("x(i) = B(i,j) * c(j)",
+        ...                    Format({"B": "cc", "c": "c"}),
+        ...                    Schedule(loop_order=("i", "j")),
+        ...                    {"i": 2, "j": 3})
+        >>> B = np.array([[1., 0., 2.], [0., 3., 0.]])
+        >>> eng.execute({"B": B, "c": np.ones(3)}).to_dense()
+        array([3., 3.])
+        """
+        return self(arrays)
+
     def _shared_hints(self, raws: Sequence[Dict]) -> Dict[str, List[int]]:
         """Common bucket per compressed level: max over the operand sets,
         so every member pads to ONE input signature."""
@@ -930,7 +958,29 @@ class CompiledExpr:
 
     def execute_batch(self, arrays_list: Sequence[Dict[str, np.ndarray]]
                       ) -> List[FiberTree]:
-        """Execute many same-format operand sets in ONE vmapped dispatch."""
+        """Execute many same-format operand sets in ONE vmapped dispatch.
+
+        Args:
+            arrays_list: operand sets (each as in ``execute``); all must
+                share the expression's tensor names and dims. The batch
+                pads to a power of two with empty operand sets and every
+                member pads to ONE shared input signature.
+
+        Returns:
+            One result ``FiberTree`` per operand set, in order.
+
+        >>> import numpy as np
+        >>> from repro.core.schedule import Format, Schedule
+        >>> eng = compile_expr("x(i) = B(i,j) * c(j)",
+        ...                    Format({"B": "cc", "c": "c"}),
+        ...                    Schedule(loop_order=("i", "j")),
+        ...                    {"i": 2, "j": 3})
+        >>> B = np.array([[1., 0., 2.], [0., 3., 0.]])
+        >>> outs = eng.execute_batch([{"B": B, "c": np.ones(3)},
+        ...                           {"B": 2 * B, "c": np.ones(3)}])
+        >>> [o.to_dense().tolist() for o in outs]
+        [[3.0, 3.0], [6.0, 6.0]]
+        """
         if not arrays_list:
             return []
         self.stats["batch_calls"] += 1
@@ -962,17 +1012,60 @@ class CompiledExpr:
 # public API
 # ---------------------------------------------------------------------------
 
-def compile_expr(expr, fmt: Format, schedule: Schedule,
+def compile_expr(expr, fmt: Format, schedule,
                  dims: Dict[str, int], *,
                  use_kernels: bool = True,
-                 shard_lanes: Optional[bool] = None) -> CompiledExpr:
+                 shard_lanes: Optional[bool] = None,
+                 sparsity=None) -> CompiledExpr:
     """Compile an expression once into a jit-cached executable engine.
 
-    Repeated calls with the same (expression, formats, schedule, dims)
-    return the SAME engine, so its plans and the underlying jit cache are
-    shared process-wide. The schedule's split/parallelize spec is part of
-    the canonical key: each scheduled variant is its own engine.
+    Args:
+        expr: tensor index notation text or a parsed ``Assignment``.
+        fmt: per-tensor level formats.
+        schedule: a ``Schedule``, or ``"auto"`` to resolve one through the
+            autoscheduler + the persistent on-disk schedule cache (keyed
+            by expression + format + dims bucket + sparsity bucket, so a
+            shape is searched at most once per cache; DESIGN.md §5).
+        dims: extent of every index variable.
+        use_kernels: route hot primitives through the ``kernels/``
+            dispatch table (Pallas on TPU) when available.
+        shard_lanes: §4.4 lane placement — None auto-shards over a device
+            mesh when one fits, False forces a single-device vmap,
+            True/int requires a mesh (of at most that many devices).
+        sparsity: density hint for ``schedule="auto"`` (float or
+            per-tensor dict; defaults to ``autoschedule.DEFAULT_SPARSITY``).
+
+    Returns:
+        The process-wide ``CompiledExpr`` engine for this configuration:
+        repeated calls with the same (expression, formats, schedule, dims)
+        return the SAME engine, so its plans and the underlying jit cache
+        are shared. The schedule's split/parallelize spec is part of the
+        canonical key: each scheduled variant is its own engine.
+
+    >>> import numpy as np
+    >>> from repro.core.schedule import Format, Schedule
+    >>> eng = compile_expr("x(i) = B(i,j) * c(j)",
+    ...                    Format({"B": "cc", "c": "c"}),
+    ...                    Schedule(loop_order=("i", "j")), {"i": 2, "j": 3})
+    >>> eng({"B": np.eye(2, 3), "c": np.ones(3)}).to_dense()
+    array([1., 1.])
     """
+    if isinstance(schedule, str):
+        if schedule != "auto":
+            raise ValueError(
+                f"schedule must be a Schedule or 'auto', got {schedule!r}")
+        from .autoschedule import resolve_schedule
+        # the search must rank under the parallelism this engine will
+        # actually run: shard_lanes=False executes serially regardless of
+        # the host's device count, an int bounds the mesh
+        if shard_lanes is False:
+            dev = 1
+        elif shard_lanes is None or shard_lanes is True:
+            dev = None                       # full host device count
+        else:
+            dev = int(shard_lanes)
+        schedule = resolve_schedule(expr, fmt, dims, sparsity=sparsity,
+                                    device_count=dev).schedule
     assign = parse(expr) if isinstance(expr, str) else expr
     # resolve the lane-mesh size BEFORE keying, so shard_lanes=None and an
     # explicit equivalent request share one engine (and its plan/jit caches)

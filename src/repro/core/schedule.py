@@ -24,15 +24,44 @@ from .fibertree import FiberTree
 
 @dataclasses.dataclass
 class Format:
+    """Per-tensor level-format strings: one character per storage mode —
+    ``d`` (dense), ``c`` (compressed), ``b`` (bitvector). Tensors without
+    an explicit entry use ``default`` at every level.
+
+    >>> fmt = Format({"B": "dc"})          # CSR-like: dense rows, compressed cols
+    >>> fmt.of("B", 2)
+    'dc'
+    >>> fmt.of("C", 2)                     # falls back to all-compressed (DCSR)
+    'cc'
+    """
+
     formats: Dict[str, str] = dataclasses.field(default_factory=dict)
     default: str = "c"
 
     def of(self, tensor: str, order: int) -> str:
+        """The format string of ``tensor`` with ``order`` storage modes."""
         return self.formats.get(tensor, self.default * order)
 
 
 @dataclasses.dataclass
 class Schedule:
+    """The dataflow schedule of one lowered expression.
+
+    ``loop_order`` is the index-variable (dataflow) order, outer to inner;
+    the §4 optimizations ride along: ``locate`` (iterate-locate per
+    (tensor, var)), ``skip`` (§4.2 coordinate skipping), ``bitvector``
+    (§4.3), ``split`` (§4.1 iteration splitting, ``{var: factor}``) and
+    ``parallelize`` (§4.4 lane duplication, ``{var: lanes}``, one var).
+    Instead of hand-picking, pass the string ``"auto"`` where a Schedule
+    is expected (``custard.lower``, ``jax_backend.compile_expr``) to let
+    the autoscheduler search the space — see docs/SCHEDULING.md.
+
+    >>> sch = Schedule(loop_order=("i", "k", "j"), split={"k": 4},
+    ...                parallelize={"k": 4})
+    >>> sch.tensor_path(("k", "j"))        # storage order is concordant
+    ('k', 'j')
+    """
+
     loop_order: Sequence[str]
     locate: FrozenSet[Tuple[str, str]] = frozenset()      # (tensor, var)
     skip: FrozenSet[str] = frozenset()                     # vars w/ galloping
@@ -47,6 +76,44 @@ class Schedule:
         """The tensor's level order under this schedule (concordant)."""
         pos = {v: i for i, v in enumerate(self.loop_order)}
         return tuple(sorted(access_vars, key=lambda v: pos[v]))
+
+
+def schedule_to_dict(schedule: Schedule) -> dict:
+    """JSON-serializable form of a ``Schedule`` (the persistent schedule
+    cache's on-disk record; see DESIGN.md §5).
+
+    >>> d = schedule_to_dict(Schedule(loop_order=("i", "k", "j"),
+    ...                               split={"k": 4}, parallelize={"k": 4}))
+    >>> d["loop_order"], d["split"], d["parallelize"]
+    (['i', 'k', 'j'], {'k': 4}, {'k': 4})
+    """
+    return {
+        "loop_order": list(schedule.loop_order),
+        "locate": sorted([t, v] for t, v in schedule.locate),
+        "skip": sorted(schedule.skip),
+        "bitvector": sorted(schedule.bitvector),
+        "split": {k: int(v) for k, v in schedule.split.items()},
+        "parallelize": {k: int(v) for k, v in schedule.parallelize.items()},
+        "reduce_empty": schedule.reduce_empty,
+    }
+
+
+def schedule_from_dict(d: dict) -> Schedule:
+    """Inverse of ``schedule_to_dict``.
+
+    >>> s = Schedule(loop_order=("i", "j"), skip=frozenset({"j"}))
+    >>> schedule_from_dict(schedule_to_dict(s)) == s
+    True
+    """
+    return Schedule(
+        loop_order=tuple(d["loop_order"]),
+        locate=frozenset((t, v) for t, v in d.get("locate", [])),
+        skip=frozenset(d.get("skip", [])),
+        bitvector=frozenset(d.get("bitvector", [])),
+        split={k: int(v) for k, v in d.get("split", {}).items()},
+        parallelize={k: int(v)
+                     for k, v in d.get("parallelize", {}).items()},
+        reduce_empty=d.get("reduce_empty"))
 
 
 def split_schedule(schedule: Schedule) -> Schedule:

@@ -718,6 +718,45 @@ class ExprSimResult:
         return [ls.result.cycles for ls in self.lanes]
 
 
+def downsample_operands(assign, arrays: Dict[str, "np.ndarray"],
+                        dims: Dict[str, int], max_dim: int = 48
+                        ) -> Tuple[Dict[str, "np.ndarray"], Dict[str, int]]:
+    """Autoscheduler sampling hook: shrink every index extent to at most
+    ``max_dim`` and slice the operands to match.
+
+    Cost-model runs on the sample preserve relative schedule ranking
+    (density is approximately preserved by corner slicing) at a tiny
+    fraction of the full simulation cost. Returns ``(arrays, dims)`` in
+    the downsampled coordinate space; deterministic by construction.
+    Tensors absent from ``arrays`` are skipped (the autoscheduler fills
+    them with synthetic operands from the sparsity hint).
+    """
+    sdims = {v: min(int(d), int(max_dim)) for v, d in dims.items()}
+    out: Dict[str, Any] = {}
+    for term in assign.terms:
+        for acc in term.factors:
+            if acc.tensor in out or acc.tensor not in arrays:
+                continue
+            arr = np.asarray(arrays[acc.tensor])
+            if acc.vars:
+                arr = arr[tuple(slice(0, sdims[v]) for v in acc.vars)]
+            out[acc.tensor] = arr
+    return out, sdims
+
+
+def sampled_cycles(expr, fmt, schedule, arrays, dims, *,
+                   max_dim: int = 48) -> int:
+    """One-shot cost probe for a single schedule: downsample + simulate,
+    return the cycle count. (``autoschedule.search`` applies the same
+    downsample-then-simulate combination, but downsamples once across its
+    whole candidate set.)"""
+    from .einsum import parse
+
+    assign = parse(expr) if isinstance(expr, str) else expr
+    s_arrays, s_dims = downsample_operands(assign, arrays, dims, max_dim)
+    return simulate_expr(assign, fmt, schedule, s_arrays, s_dims).cycles
+
+
 def simulate_expr(expr, fmt, schedule, arrays, dims) -> ExprSimResult:
     """Lower (split + parallelize) and simulate an expression end-to-end.
 

@@ -15,6 +15,13 @@ batched sparse-expression serving through the compiled SAM engine.
     PYTHONPATH=src python -m repro.launch.serve \
         --sam "X(i,j) = B(i,k) * C(k,j)" --sam-order ikj \
         --sam-formats B=cc,C=cc --split k=4 --devices 4
+
+    # autoscheduled serving: the first request shape searches the schedule
+    # space and persists the winner; repeats hit the schedule cache
+    PYTHONPATH=src python -m repro.launch.serve \
+        --sam "X(i,j) = B(i,k) * C(k,j)" --autotune \
+        --sam-formats B=cc,C=cc --sam-dims i=250,j=250,k=100 \
+        --sam-density 0.05
 """
 from __future__ import annotations
 
@@ -90,7 +97,8 @@ def _parse_kv(text: str, cast=str):
 
 def serve_sam(expr: str, order: str, formats, dims, *, batch: int = 8,
               reps: int = 8, density: float = 0.1, seed: int = 0,
-              split=None, devices: int = 0, log=print):
+              split=None, devices: int = 0, autotune: bool = False,
+              log=print):
     """Sparse-expression serving: compile ONCE, then dispatch batches of
     same-format operands through the vmapped jit-cached engine.
 
@@ -98,7 +106,12 @@ def serve_sam(expr: str, order: str, formats, dims, *, batch: int = 8,
     jit signature); only the operand data differs — the SAM analogue of
     batched decode. ``split={var: n}`` applies §4.4 iteration splitting AND
     parallel lane duplication over that variable; with multiple devices the
-    lanes shard over the device mesh. Returns (results of the last
+    lanes shard over the device mesh. ``autotune=True`` picks the whole
+    schedule instead: the first request shape searches the schedule space
+    (cost-model ranking, ``core.autoschedule``) and persists the winner in
+    the on-disk schedule cache, so every later request with the same
+    cache key — same expression/format, dims bucket, sparsity bucket —
+    serves compiled with NO search. Returns (results of the last
     dispatch, engine stats).
     """
     if devices and jax.device_count() < devices:
@@ -107,24 +120,55 @@ def serve_sam(expr: str, order: str, formats, dims, *, batch: int = 8,
             f"jax device(s) present; on CPU set XLA_FLAGS="
             f"--xla_force_host_platform_device_count={devices} (done "
             f"automatically when running this module as a script)")
-    if devices and not split:
-        raise SystemExit("--devices shards parallel lanes; give --split too "
-                         "(e.g. --split k=4)")
     split = dict(split or {})
+    if autotune and split:
+        raise SystemExit("--autotune searches the schedule (including "
+                         "splits); drop --split")
     fmt = Format(dict(formats))
-    # §4.4: every requested variable splits; the OUTERMOST split variable
-    # also parallelizes (the lowering supports one parallel var)
-    par = {v: split[v] for v in order if v in split}
-    par_n = next(iter(par.values()), 1)
+    if autotune:
+        from ..core.autoschedule import resolve_schedule
+
+        res = resolve_schedule(expr, fmt, dims, sparsity=density,
+                               device_count=devices or None)
+        sch = res.schedule
+        if res.cache_hit:
+            log(f"[serve-sam] autotune: schedule cache HIT -> "
+                f"order={''.join(sch.loop_order)} split={sch.split} "
+                f"par={sch.parallelize} (no search, compiled dispatch only)")
+        else:
+            rep = res.report
+            top = ", ".join(f"{c.spec.key()}:{c.cycles}cyc"
+                            for c in rep.candidates[:3])
+            log(f"[serve-sam] autotune: searched {rep.enumerated} schedules"
+                + (" (order space capped)" if rep.orders_truncated else "")
+                + f" ({rep.simulated} simulated at {rep.sample_dims}) in "
+                f"{rep.elapsed_s * 1e3:.0f}ms -> "
+                f"order={''.join(sch.loop_order)} split={sch.split} "
+                f"par={sch.parallelize}; top: {top}")
+        split = dict(sch.split)
+    else:
+        # §4.4: every requested variable splits; the OUTERMOST split
+        # variable also parallelizes (the lowering supports one parallel
+        # var)
+        par = {v: split[v] for v in order if v in split}
+        sch = Schedule(loop_order=tuple(order), split=split,
+                       parallelize=dict(list(par.items())[:1]))
+    if devices and not split:
+        raise SystemExit(
+            "--devices shards parallel lanes; "
+            + ("--autotune picked an unsplit schedule for this shape"
+               if autotune else "give --split too (e.g. --split k=4)"))
+    par_n = max(sch.parallelize.values(), default=1)
     if devices and lane_mesh_size(par_n, devices) < 2:
         # an explicit --devices must shard or fail loudly (auto-detection
         # would silently fall back to vmap)
         raise SystemExit(
             f"--devices {devices}: no >1-device mesh fits {par_n} lane(s) "
-            f"on {jax.device_count()} present device(s); pick a split "
-            f"factor a device subset divides")
-    sch = Schedule(loop_order=tuple(order), split=split,
-                   parallelize=dict(list(par.items())[:1]))
+            f"on {jax.device_count()} present device(s); "
+            + ("--autotune picked a schedule without matching parallel "
+               "lanes for this shape; drop --devices"
+               if autotune else
+               "pick a split factor a device subset divides"))
     eng = compile_expr(expr, fmt, sch, dims,
                        shard_lanes=devices if devices else None)
     # lanes shard over the device mesh only on the single-call path (the
@@ -141,19 +185,15 @@ def serve_sam(expr: str, order: str, formats, dims, *, batch: int = 8,
     rng = np.random.default_rng(seed)
 
     def operand_set():
+        from ..core.autoschedule import random_operand
+
         arrays = {}
         for term in assign.terms:
             for acc in term.factors:
                 if acc.tensor in arrays:
                     continue
-                if not acc.vars:
-                    arrays[acc.tensor] = np.asarray(
-                        float(rng.integers(1, 5)))
-                else:
-                    shape = tuple(dims[v] for v in acc.vars)
-                    arrays[acc.tensor] = (
-                        (rng.random(shape) < density)
-                        * rng.integers(1, 9, shape)).astype(float)
+                shape = tuple(dims[v] for v in acc.vars)
+                arrays[acc.tensor] = random_operand(shape, density, rng)
         return arrays
 
     def dispatch():
@@ -205,9 +245,17 @@ def main(argv=None):
                     help="shard parallel lanes over this many devices "
                          "(forces the host device count when run as a "
                          "script on CPU)")
+    ap.add_argument("--autotune", action="store_true",
+                    help="search the schedule space (loop order, split, "
+                         "lanes) with the simulator cost model on the "
+                         "first request per shape; later requests hit the "
+                         "persistent schedule cache and serve compiled")
     args = ap.parse_args(argv)
 
     if args.sam:
+        if args.autotune and args.sam_order:
+            raise SystemExit("--autotune searches the loop order; drop "
+                             "--sam-order (like --split)")
         assign = parse(args.sam)
         order = args.sam_order or "".join(assign.all_vars)
         dims = {**{v: 64 for v in order}, **_parse_kv(args.sam_dims, int)}
@@ -216,7 +264,8 @@ def main(argv=None):
                                batch=args.batch, reps=args.reps,
                                density=args.sam_density,
                                split=_parse_kv(args.split, int),
-                               devices=args.devices)
+                               devices=args.devices,
+                               autotune=args.autotune)
         return results
 
     cfg = get_config(args.arch, reduced=args.reduced)

@@ -1,0 +1,329 @@
+"""Autoscheduler suite: schedule-space legality, cost-ranking determinism
+(under the hypothesis stub too), fig12 acceptance, and the persistent
+schedule cache's hit/invalidation contract."""
+import os
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as hst
+except ImportError:  # clean checkout: deterministic stub keeps tests running
+    from _hypothesis_stub import given, settings, strategies as hst
+
+from repro.core.autoschedule import (ScheduleCache, auto_cache_key,
+                                     enumerate_space, resolve_densities,
+                                     resolve_schedule, search)
+from repro.core.custard import lower
+from repro.core.einsum import parse
+from repro.core.schedule import (Format, Schedule, schedule_from_dict,
+                                 schedule_to_dict)
+from repro.core.simulator import (downsample_operands, sampled_cycles,
+                                  simulate_expr)
+
+EXPR = "X(i,j) = B(i,k) * C(k,j)"
+FMT = Format({"B": "cc", "C": "cc"})
+
+
+def _spmspm(i, j, k, density=0.05, seed=7):
+    rng = np.random.default_rng(seed)
+    B = ((rng.random((i, k)) < density)
+         * rng.integers(1, 9, (i, k))).astype(float)
+    C = ((rng.random((k, j)) < density)
+         * rng.integers(1, 9, (k, j))).astype(float)
+    return {"B": B, "C": C}, {"i": i, "j": j, "k": k}
+
+
+# ---------------------------------------------------------------------------
+# enumeration legality
+# ---------------------------------------------------------------------------
+
+def test_enumeration_legality():
+    assign = parse(EXPR)
+    dims = {"i": 16, "j": 16, "k": 8}
+    specs = enumerate_space(assign, dims, device_count=4)
+    assert specs
+    all_vars = sorted(assign.all_vars)
+    for spec in specs:
+        # no loop order ever drops a variable
+        assert sorted(spec.order) == all_vars
+        for v, f in spec.split:
+            # power-of-two factors that fit the dim
+            assert f >= 2 and (f & (f - 1)) == 0
+            assert f <= dims[v]
+            # the actual splitter agrees: vo spans f chunks whose padded
+            # product covers the original extent
+            from repro.core.schedule import split_dims
+            sd = split_dims({v: dims[v]}, {v: f})
+            assert sd[f"{v}o"] == f
+            assert sd[f"{v}o"] * sd[f"{v}i"] >= dims[v]
+            # §4.1 renames cannot capture existing variables
+            assert f"{v}o" not in all_vars and f"{v}i" not in all_vars
+        # lane counts respect the device count and ride the split var
+        assert spec.lanes <= 4
+        if spec.lanes > 1:
+            assert spec.split and spec.lanes <= spec.split[0][1]
+    # the full factorial of unsplit orders is present
+    assert len({s.order for s in specs if not s.split}) == 6
+    # device_count=1 enumerates no parallel lanes at all
+    assert all(s.lanes == 1
+               for s in enumerate_space(assign, dims, device_count=1))
+
+
+def test_enumeration_excludes_split_rename_clashes():
+    # a variable named "ko" makes splitting "k" illegal (§4.1 rename capture)
+    assign = parse("X(i) = B(i,k) * C(k,ko) * d(ko)")
+    specs = enumerate_space(assign, {"i": 8, "k": 8, "ko": 8},
+                            device_count=1)
+    assert not any(v == "k" for s in specs for v, _ in s.split)
+    # ...but "ko" itself may split (kooo/koi don't clash)
+    assert any(v == "ko" for s in specs for v, _ in s.split)
+
+
+def test_enumeration_split_factors_fit_dims():
+    assign = parse(EXPR)
+    specs = enumerate_space(assign, {"i": 16, "j": 16, "k": 3},
+                            device_count=1)
+    # k=3 admits a factor of 2 but not 4 or 8
+    kf = {f for s in specs for v, f in s.split if v == "k"}
+    assert kf == {2}
+
+
+# ---------------------------------------------------------------------------
+# every ranked candidate computes the right answer
+# ---------------------------------------------------------------------------
+
+def test_candidates_are_executable_and_correct():
+    arrays, dims = _spmspm(24, 24, 12)
+    rep = search(EXPR, FMT, dims, arrays=arrays, device_count=2, top_k=6)
+    want = arrays["B"] @ arrays["C"]
+    for cand in rep.candidates:
+        res = simulate_expr(EXPR, FMT, cand.schedule, arrays, dims)
+        assert np.allclose(res.dense, want), cand.spec.key()
+
+
+# ---------------------------------------------------------------------------
+# determinism of the cost ranking (hypothesis stub compatible)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=5, deadline=None)
+@given(hst.integers(8, 24), hst.integers(8, 24), hst.integers(4, 16),
+       hst.integers(1, 4))
+def test_cost_ranking_is_deterministic(i, j, k, devices):
+    dims = {"i": i, "j": j, "k": k}
+    reps = [search(EXPR, FMT, dims, sparsity=0.25, device_count=devices)
+            for _ in range(2)]
+    keys = [[c.spec.key() for c in r.candidates] for r in reps]
+    assert keys[0] == keys[1]
+    assert [c.cycles for c in reps[0].candidates] == \
+           [c.cycles for c in reps[1].candidates]
+    assert reps[0].best.schedule == reps[1].best.schedule
+
+
+# ---------------------------------------------------------------------------
+# fig12 acceptance: auto lands near the exhaustive best
+# ---------------------------------------------------------------------------
+
+def test_fig12_auto_schedule_quality():
+    arrays, dims = _spmspm(120, 120, 50, seed=20230325)
+    exhaustive = {}
+    for order in ("ijk", "ikj", "jik", "jki", "kij", "kji"):
+        res = simulate_expr(EXPR, FMT, Schedule(loop_order=tuple(order)),
+                            arrays, dims)
+        exhaustive[order] = res.cycles
+    rep = search(EXPR, FMT, dims, arrays=arrays, device_count=1)
+    auto = simulate_expr(EXPR, FMT, rep.best.schedule, arrays, dims).cycles
+    assert auto <= 1.1 * min(exhaustive.values())
+    assert max(exhaustive.values()) >= 5.0 * auto
+
+
+# ---------------------------------------------------------------------------
+# sampling hooks
+# ---------------------------------------------------------------------------
+
+def test_downsample_operands_clamps_dims_and_slices():
+    arrays, dims = _spmspm(64, 32, 16)
+    assign = parse(EXPR)
+    s_arrays, s_dims = downsample_operands(assign, arrays, dims, max_dim=24)
+    assert s_dims == {"i": 24, "j": 24, "k": 16}
+    assert s_arrays["B"].shape == (24, 16)
+    assert s_arrays["C"].shape == (16, 24)
+    np.testing.assert_array_equal(s_arrays["B"], arrays["B"][:24, :16])
+
+
+def test_sampled_cycles_matches_downsampled_sim():
+    arrays, dims = _spmspm(64, 32, 16)
+    sch = Schedule(loop_order=("k", "j", "i"))
+    got = sampled_cycles(EXPR, FMT, sch, arrays, dims, max_dim=24)
+    s_arrays, s_dims = downsample_operands(parse(EXPR), arrays, dims, 24)
+    assert got == simulate_expr(EXPR, FMT, sch, s_arrays, s_dims).cycles
+
+
+# ---------------------------------------------------------------------------
+# persistent schedule cache
+# ---------------------------------------------------------------------------
+
+def test_schedule_dict_roundtrip():
+    sch = Schedule(loop_order=("i", "k", "j"),
+                   locate=frozenset({("B", "j")}), skip=frozenset({"k"}),
+                   bitvector=frozenset({"j"}), split={"k": 4},
+                   parallelize={"k": 2}, reduce_empty="zero")
+    assert schedule_from_dict(schedule_to_dict(sch)) == sch
+    # and through JSON, as the on-disk cache stores it
+    import json
+    assert schedule_from_dict(
+        json.loads(json.dumps(schedule_to_dict(sch)))) == sch
+
+
+def test_cache_second_request_hits_without_search(tmp_path):
+    arrays, dims = _spmspm(32, 32, 16)
+    cache = ScheduleCache(path=tmp_path / "schedules.json")
+    r1 = resolve_schedule(EXPR, FMT, dims, arrays=arrays, cache=cache,
+                          device_count=1)
+    assert not r1.cache_hit and r1.report is not None
+    r2 = resolve_schedule(EXPR, FMT, dims, arrays=arrays, cache=cache,
+                          device_count=1)
+    assert r2.cache_hit and r2.report is None      # no search ran
+    assert r2.schedule == r1.schedule and r2.key == r1.key
+
+
+def test_cache_key_buckets_and_invalidation():
+    assign = parse(EXPR)
+    dens = resolve_densities(assign, 0.05)
+
+    def key(dims, d=dens, fmt=FMT, devices=1):
+        return auto_cache_key(assign, fmt, dims, d, devices)
+
+    base = key({"i": 100, "j": 100, "k": 100})
+    # dims inside one power-of-two bucket share the entry...
+    assert key({"i": 120, "j": 80, "k": 65}) == base
+    # ...outside it, the entry is busted
+    assert key({"i": 200, "j": 100, "k": 100}) != base
+    # sparsity buckets: 5% and 6% share 1/16; 0.5% does not
+    assert key({"i": 100, "j": 100, "k": 100},
+               resolve_densities(assign, 0.06)) == base
+    assert key({"i": 100, "j": 100, "k": 100},
+               resolve_densities(assign, 0.005)) != base
+    # format changes bust the entry
+    assert key({"i": 100, "j": 100, "k": 100},
+               fmt=Format({"B": "dc", "C": "cc"})) != base
+    # the device count bounds the lane space: tuning at 1 device must not
+    # serve a 4-device caller
+    assert key({"i": 100, "j": 100, "k": 100}, devices=4) != base
+    # expression structure busts the entry
+    assert auto_cache_key(parse("X(i,j) = B(i,k) * C(k,j) + D(i,j)"),
+                          FMT, {"i": 100, "j": 100, "k": 100},
+                          dens, 1) != base
+
+
+def test_cache_key_separates_search_spaces(tmp_path):
+    # a winner found under a narrowed search space must not poison (or be
+    # served from) the default space's entry
+    dims = {"i": 16, "j": 16, "k": 8}
+    cache = ScheduleCache(path=tmp_path / "schedules.json")
+    r1 = resolve_schedule(EXPR, FMT, dims, sparsity=0.25, cache=cache,
+                          device_count=1)
+    r2 = resolve_schedule(EXPR, FMT, dims, sparsity=0.25, cache=cache,
+                          device_count=1, max_orders=1)
+    assert r2.key != r1.key and not r2.cache_hit
+    r3 = resolve_schedule(EXPR, FMT, dims, sparsity=0.25, cache=cache,
+                          device_count=1)
+    assert r3.cache_hit and r3.key == r1.key
+    assert r3.schedule == r1.schedule
+
+
+def test_cache_tolerates_corrupt_file(tmp_path):
+    path = tmp_path / "schedules.json"
+    cache = ScheduleCache(path=path)
+    for bad in ("{not json", "[1, 2, 3]", '{"version": 1, "entries": 7}',
+                '{"version": 1, "entries": {"k1": {"no_schedule": 1}}}'):
+        path.write_text(bad)
+        assert cache.lookup("k1") is None      # any bad shape == empty
+    cache.store("k1", Schedule(loop_order=("i",)))
+    assert cache.lookup("k1") == Schedule(loop_order=("i",))
+
+
+def test_search_accepts_partial_arrays_with_hints():
+    # one operand measured, the other hinted: the sampler synthesizes the
+    # missing tensor instead of crashing
+    arrays, dims = _spmspm(24, 24, 12)
+    rep = search(EXPR, FMT, dims, arrays={"B": arrays["B"]},
+                 sparsity={"C": 0.1}, device_count=1)
+    assert rep.candidates
+
+
+def test_search_flags_truncated_order_space():
+    dims = {"i": 8, "j": 8, "k": 8}
+    assert search(EXPR, FMT, dims, sparsity=0.25, device_count=1,
+                  max_orders=2).orders_truncated
+    assert not search(EXPR, FMT, dims, sparsity=0.25,
+                      device_count=1).orders_truncated
+
+
+def test_cache_file_deletion_busts_inprocess_memo(tmp_path):
+    # an operator's `rm` of the cache file (not via clear()) must also
+    # force a real re-search: the memo validates the file's stat stamp
+    arrays, dims = _spmspm(16, 16, 8, density=0.3)
+    cache = ScheduleCache(path=tmp_path / "schedules.json")
+    resolve_schedule(EXPR, FMT, dims, arrays=arrays, cache=cache,
+                     device_count=1)
+    os.unlink(cache.path)
+    r = resolve_schedule(EXPR, FMT, dims, arrays=arrays, cache=cache,
+                         device_count=1)
+    assert not r.cache_hit and r.report is not None
+
+
+def test_cache_clear_purges_inprocess_memo(tmp_path):
+    arrays, dims = _spmspm(16, 16, 8, density=0.3)
+    cache = ScheduleCache(path=tmp_path / "schedules.json")
+    resolve_schedule(EXPR, FMT, dims, arrays=arrays, cache=cache,
+                     device_count=1)
+    cache.clear()
+    # an operator deleting the cache must force a real re-search — the
+    # in-process memo may not keep answering for the cleared store
+    r = resolve_schedule(EXPR, FMT, dims, arrays=arrays, cache=cache,
+                         device_count=1)
+    assert not r.cache_hit and r.report is not None
+
+
+# ---------------------------------------------------------------------------
+# the "auto" wiring through custard and the compiled engine
+# ---------------------------------------------------------------------------
+
+def test_lower_auto_resolves_and_executes(tmp_path, monkeypatch):
+    monkeypatch.setenv("SAM_SCHEDULE_CACHE",
+                       str(tmp_path / "schedules.json"))
+    arrays, dims = _spmspm(12, 12, 8, density=0.3)
+    low = lower(EXPR, FMT, "auto", dims)
+    assert sorted(low.schedule.loop_order) == ["i", "j", "k"]
+    res = simulate_expr(EXPR, FMT, low.schedule, arrays, dims)
+    assert np.allclose(res.dense, arrays["B"] @ arrays["C"])
+
+    from repro.core.jax_backend import compile_expr
+    eng = compile_expr(EXPR, FMT, "auto", dims, sparsity=0.3)
+    out = eng.execute(arrays)
+    assert np.allclose(out.to_dense(), arrays["B"] @ arrays["C"])
+
+
+def test_lower_rejects_unknown_schedule_string():
+    with pytest.raises(ValueError):
+        lower(EXPR, FMT, "fastest", {"i": 4, "j": 4, "k": 4})
+
+
+def test_serve_autotune_smoke(tmp_path, monkeypatch):
+    monkeypatch.setenv("SAM_SCHEDULE_CACHE",
+                       str(tmp_path / "schedules.json"))
+    from repro.launch.serve import serve_sam
+    logs = []
+    _, stats = serve_sam(EXPR, "ijk", {"B": "cc", "C": "cc"},
+                         {"i": 16, "j": 16, "k": 16}, batch=2, reps=2,
+                         density=0.2, autotune=True, log=logs.append)
+    assert any("searched" in ln for ln in logs)
+    assert stats["batch_calls"] == 2
+    # same shape again: the persistent cache answers, no search
+    logs2 = []
+    serve_sam(EXPR, "ijk", {"B": "cc", "C": "cc"},
+              {"i": 16, "j": 16, "k": 16}, batch=2, reps=1,
+              density=0.2, autotune=True, log=logs2.append)
+    assert any("cache HIT" in ln for ln in logs2)
+    assert not any("searched" in ln for ln in logs2)

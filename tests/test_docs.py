@@ -1,0 +1,28 @@
+"""The documentation executes as written: every ```python code block in
+docs/SCHEDULING.md and README.md runs top-to-bottom, so the guide's
+snippets and the quickstart cannot rot. (Docstring examples are guarded
+separately by CI's ``pytest --doctest-modules`` step over the public
+scheduling/compile modules.)"""
+import pathlib
+import re
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def _python_blocks(path: pathlib.Path):
+    text = path.read_text()
+    return re.findall(r"```python\n(.*?)```", text, re.S)
+
+
+@pytest.mark.parametrize("doc", ["docs/SCHEDULING.md", "README.md"])
+def test_markdown_snippets_execute(doc, tmp_path, monkeypatch):
+    monkeypatch.setenv("SAM_SCHEDULE_CACHE",
+                       str(tmp_path / "schedules.json"))
+    blocks = _python_blocks(ROOT / doc)
+    assert blocks, f"{doc} has no python snippets"
+    ns = {}
+    for i, block in enumerate(blocks):
+        code = compile(block, f"{doc}[block {i}]", "exec")
+        exec(code, ns)  # blocks build on each other, as a reader would run them
