@@ -19,7 +19,8 @@ import time
 
 def main() -> None:
     from . import (autotune, compiled_cache, fig11, fig12, fig13, fig14,
-                   fig15, moe_dispatch, split_scaling, table1, table2)
+                   fig15, moe_dispatch, program_fusion, split_scaling,
+                   table1, table2)
     benches = {
         "table1": table1.run, "table2": table2.run,
         "fig11": fig11.run, "fig12": fig12.run, "fig13": fig13.run,
@@ -28,6 +29,7 @@ def main() -> None:
         "compiled_cache": compiled_cache.run,
         "split_scaling": split_scaling.run,
         "autotune": autotune.run,
+        "program_fusion": program_fusion.run,
     }
     args = sys.argv[1:]
     smoke = "--smoke" in args

@@ -40,6 +40,11 @@ I32 = jnp.int32
 I64 = jnp.int64
 PAD_KEY = jnp.iinfo(jnp.int64).max  # sorts after every real key
 
+# keyed_union_reduce switches from sort-merge to a dense scatter-add
+# workspace when the caller-declared key space fits this many slots
+# (a 4 MB f32 accumulator at the limit)
+DENSE_REDUCE_BOUND = 1 << 20
+
 
 def exclusive_cumsum(x):
     return jnp.concatenate([jnp.zeros((1,), x.dtype), jnp.cumsum(x)[:-1]])
@@ -151,7 +156,8 @@ def default_segment_sum(vals, seg_ids, num_segments: int):
     return jax.ops.segment_sum(vals, seg_ids, num_segments=num_segments)
 
 
-def keyed_union_reduce(keys, vals, valid, cap: int, segment_sum_impl=None):
+def keyed_union_reduce(keys, vals, valid, cap: int, segment_sum_impl=None,
+                       key_bound=None):
     """Def 3.7 reducer for n>=1 / multi-term union: sum ``vals`` at equal
     ``keys``.
 
@@ -161,8 +167,28 @@ def keyed_union_reduce(keys, vals, valid, cap: int, segment_sum_impl=None):
     ``cap`` can detect overflow (``count > cap`` means truncation). The
     inner segment-sum is pluggable: ``kernels.ops`` routes it to the Pallas
     ``segment_reduce`` MXU kernel on TPU.
+
+    ``key_bound`` is a static exclusive upper bound on live key values
+    when the caller knows one (the product of the result extents). A
+    bound up to ``DENSE_REDUCE_BOUND`` selects the dense-workspace merge:
+    one scatter-add over a ``key_bound``-slot accumulator replaces the
+    O(n log n) sort — the classic dense-accumulator Gustavson schedule,
+    and the dominant cost of every reduce on sort-weak backends. Larger
+    (or unknown) bounds keep the sort-based merge.
     """
     segsum = segment_sum_impl or default_segment_sum
+    if key_bound is not None and int(key_bound) <= DENSE_REDUCE_BOUND:
+        nseg = max(int(key_bound), 1)
+        k = jnp.where(valid, keys, 0).astype(I32)
+        v0 = jnp.where(valid, vals, jnp.zeros((), vals.dtype))
+        sums = segsum(v0, k, nseg)
+        hits = segsum(valid.astype(v0.dtype), k, nseg)
+        appeared = hits > 0          # a live key with sum 0 stays a slot
+        (uk, uv), count = compact(
+            appeared, (jnp.arange(nseg, dtype=I64), sums), cap, fill=0)
+        out_valid = jnp.arange(cap) < count
+        return (jnp.where(out_valid, uk, PAD_KEY),
+                jnp.where(out_valid, uv, 0.0), out_valid, count)
     keys = jnp.where(valid, keys, PAD_KEY)
     order = jnp.argsort(keys)
     sk = keys[order]
@@ -189,3 +215,51 @@ def segment_sum(vals, parent_idx, valid, num_parents: int):
     """Def 3.7 scalar reducer (n=0): one sum per parent fiber (zero-mode)."""
     v = jnp.where(valid, vals, 0.0)
     return jax.ops.segment_sum(v, parent_idx, num_segments=num_parents)
+
+
+def coo_to_levels(keys, valid, dims_list, caps):
+    """Sorted unique COO keys -> compressed fibertree levels, on device.
+
+    The producer→consumer fusion primitive (DESIGN.md §6): a stage's keyed
+    COO result (sorted ascending, unique, invalid rows keyed ``PAD_KEY``)
+    becomes the ``(seg, crd)`` arrays the next stage's level scanners read,
+    without ever leaving the accelerator. ``dims_list`` is the per-level
+    extent (outer -> inner); ``caps[l]`` is the static capacity of level
+    ``l``'s coordinate array (the parent count of level ``l+1``).
+
+    Returns ``(segs, crds, counts)``: ``segs[l]`` has length
+    ``caps[l-1] + 1`` (1 + 1 for the root level), ``crds[l]`` has length
+    ``caps[l]``, and ``counts[l]`` is the traced number of live entries at
+    level ``l`` so a caller with static caps can detect overflow.
+    """
+    n = len(dims_list)
+    pref = [None] * n
+    cur = jnp.where(valid, keys, PAD_KEY)
+    for l in range(n - 1, -1, -1):
+        pref[l] = cur
+        if l:
+            cur = jnp.where(valid, cur // dims_list[l], PAD_KEY)
+    segs, crds, counts = [], [], []
+    parent_cap = 1
+    # rank of each element's enclosing level-(l-1) fiber (root: fiber 0)
+    parent_rank = jnp.zeros(keys.shape[0], dtype=I64)
+    for l in range(n):
+        first = jnp.concatenate(
+            [jnp.ones((1,), bool), pref[l][1:] != pref[l][:-1]]) & valid
+        cnt = jnp.sum(first.astype(I64))
+        (crd_l, par_l), _ = compact(
+            first, (pref[l] % dims_list[l], parent_rank), caps[l], fill=0)
+        # padding rows must sort AFTER every live parent so the seg
+        # boundaries below count only live entries
+        live = jnp.arange(caps[l]) < cnt
+        par_l = jnp.where(live, par_l, parent_cap)
+        # entries are key-sorted, so parents are non-decreasing:
+        # seg[p] = first entry whose parent >= p
+        seg_l = jnp.searchsorted(par_l, jnp.arange(parent_cap + 1)
+                                 ).astype(I32)
+        segs.append(seg_l)
+        crds.append(jnp.where(live, crd_l, 0).astype(I32))
+        counts.append(cnt)
+        parent_rank = jnp.cumsum(first.astype(I64)) - 1
+        parent_cap = caps[l]
+    return segs, crds, counts

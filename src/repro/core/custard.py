@@ -662,5 +662,39 @@ def lower_single_terms(assign: Assignment, fmt: Format, schedule: Schedule,
     return [(t.sign, t.graph) for t in low.require_terms()]
 
 
+def lower_program(program, fmt: Format, schedules, dims: Dict[str, int], *,
+                  sparsity=None, fuse: bool = True):
+    """Lower a multi-assignment program: per-stage ``Lowered`` objects
+    plus the producer→consumer fusion plan (``program.lower_program``).
+
+    ``schedules`` is ``"auto"``, a dict keyed by stage lhs tensor, or a
+    sequence aligned with the stages; fused stages share scanners — the
+    consumer's scanners of a fused intermediate are spliced wires carrying
+    the producer's writer streams (DESIGN.md §6).
+
+    >>> from repro.core.schedule import Format
+    >>> lp = lower_program(
+    ...     "T(i,j) = B(i,k) * C(k,j); A(i,j) = T(i,k) * E(k,j)",
+    ...     Format({"B": "cc", "C": "cc", "E": "cc", "T": "cc"}),
+    ...     {"T": Schedule(loop_order=("i", "k", "j")),
+    ...      "A": Schedule(loop_order=("i", "k", "j"))},
+    ...     {"i": 4, "j": 4, "k": 4})
+    >>> [d.fused for d in lp.decisions]
+    [True]
+    """
+    from .program import lower_program as _lower_program
+    return _lower_program(program, fmt, schedules, dims,
+                          sparsity=sparsity, fuse=fuse)
+
+
 def clear_lowering_cache() -> None:
+    """Drop every in-process lowering memo.
+
+    Also clears the autoscheduler's in-process resolution memo: a caller
+    clearing lowerings expects ``schedule="auto"`` to re-resolve, and a
+    stale memo entry would otherwise keep serving the old schedule even
+    after the on-disk schedule cache changed underneath it.
+    """
     _LOWERED_CACHE.clear()
+    from .autoschedule import clear_resolution_memo
+    clear_resolution_memo()

@@ -398,7 +398,7 @@ class JaxBackend:
         else:
             cap = self.out_cap
         uk, uv, uvalid, count = co.keyed_union_reduce(
-            key, v.vals, valid, cap, self.segsum)
+            key, v.vals, valid, cap, self.segsum, key_bound=mult)
         if self.out_cap is not None:
             self.required["out"] = count
         return COOResult(uk, uv, uvalid, strides)
@@ -496,6 +496,79 @@ class _Plan:
     """One jitted executable: static capacities + the callable."""
     caps: Dict[str, int]
     fn: Callable
+
+
+def _run_with_growth(plan: _Plan, flat, stats: Dict[str, int],
+                     reinstall: Callable[[Dict[str, int]], _Plan]):
+    """Run a plan, growing bucketed capacities on overflow and retrying.
+
+    Each retry can reveal larger downstream needs (truncation hid
+    elements), so loop to a fixpoint. The required sizes come back in ONE
+    device_get (per-key blocking transfers would serialize a sync per
+    capacity). Shared by the expression engine and the program chain —
+    ``reinstall`` builds the replacement plan for the grown caps.
+    """
+    for _ in range(32):
+        out, required = plan.fn(flat)
+        grow = {}
+        for k, r in jax.device_get(required).items():
+            need = int(np.max(r))
+            if need > plan.caps[k]:
+                grow[k] = _bucket_cap(need)
+        if not grow:
+            return out
+        stats["overflow_retries"] += 1
+        plan = reinstall({**plan.caps, **grow})
+    raise RuntimeError("compiled SAM capacity growth did not converge")
+
+
+def _pad_flat_arrays(raw, level_meta, hints=None):
+    """Pad raw operand arrays to power-of-two buckets (shared by the
+    expression engine and the program chain engine).
+
+    Only compressed-level coordinate counts are bucketed independently;
+    segment lengths (parents+1), dense-level expansions, and the value
+    array length all DERIVE from the parent-level bucket, so the jit
+    signature depends on nothing but per-level nnz buckets (a size
+    sitting on a parents+1 boundary cannot flip the signature).
+    """
+    flat, sig = {}, []
+    for name in sorted(raw):
+        e = raw[name]
+        segs, crds, lsig = [], [], []
+        num_parents = 1
+        for i, (fmt_l, dim) in enumerate(level_meta[name]):
+            ns = num_parents + 1
+            if fmt_l == DENSE:
+                nc = num_parents * dim
+                segs.append(jnp.arange(ns, dtype=jnp.int32) * dim)
+                crds.append(jnp.tile(jnp.arange(dim, dtype=jnp.int32),
+                                     num_parents))
+            else:
+                c = e["crds"][i]
+                nc = (hints[name][i] if hints
+                      else _bucket(c.shape[0]))
+                s = e["segs"][i]
+                segs.append(_pad_end(s, ns, s[-1]))
+                crds.append(_pad_end(c, nc, 0))
+            lsig.append((ns, nc))
+            num_parents = nc
+        vals = _pad_end(e["vals"], num_parents, 0.0)
+        flat[name] = {"segs": tuple(segs), "crds": tuple(crds),
+                      "vals": vals}
+        sig.append((name, tuple(lsig), vals.shape[0]))
+    return flat, tuple(sig)
+
+
+def _tensors_from_flat_arrays(flat, level_meta) -> Dict[str, JTensor]:
+    out = {}
+    for name, e in flat.items():
+        out[name] = JTensor(
+            [JLevel(s, c, d)
+             for s, c, (_, d) in zip(e["segs"], e["crds"],
+                                     level_meta[name])],
+            e["vals"])
+    return out
 
 
 _COMPILED: Dict[Tuple[str, bool], "CompiledExpr"] = {}
@@ -636,50 +709,12 @@ class CompiledExpr:
         return raw
 
     def _pad_flat(self, raw, hints=None):
-        """Pad operand arrays to power-of-two buckets.
-
-        Only compressed-level coordinate counts are bucketed independently;
-        segment lengths (parents+1), dense-level expansions, and the value
-        array length all DERIVE from the parent-level bucket, so the jit
-        signature depends on nothing but per-level nnz buckets (a size
-        sitting on a parents+1 boundary cannot flip the signature).
-        """
-        flat, sig = {}, []
-        for name in sorted(raw):
-            e = raw[name]
-            segs, crds, lsig = [], [], []
-            num_parents = 1
-            for i, (fmt_l, dim) in enumerate(self._level_meta[name]):
-                ns = num_parents + 1
-                if fmt_l == DENSE:
-                    nc = num_parents * dim
-                    segs.append(jnp.arange(ns, dtype=jnp.int32) * dim)
-                    crds.append(jnp.tile(jnp.arange(dim, dtype=jnp.int32),
-                                         num_parents))
-                else:
-                    c = e["crds"][i]
-                    nc = (hints[name][i] if hints
-                          else _bucket(c.shape[0]))
-                    s = e["segs"][i]
-                    segs.append(_pad_end(s, ns, s[-1]))
-                    crds.append(_pad_end(c, nc, 0))
-                lsig.append((ns, nc))
-                num_parents = nc
-            vals = _pad_end(e["vals"], num_parents, 0.0)
-            flat[name] = {"segs": tuple(segs), "crds": tuple(crds),
-                          "vals": vals}
-            sig.append((name, tuple(lsig), vals.shape[0]))
-        return flat, tuple(sig)
+        """Pad operand arrays to power-of-two buckets (see
+        ``_pad_flat_arrays``)."""
+        return _pad_flat_arrays(raw, self._level_meta, hints)
 
     def _tensors_from_flat(self, flat) -> Dict[str, JTensor]:
-        out = {}
-        for name, e in flat.items():
-            out[name] = JTensor(
-                [JLevel(s, c, d)
-                 for s, c, (_, d) in zip(e["segs"], e["crds"],
-                                         self._level_meta[name])],
-                e["vals"])
-        return out
+        return _tensors_from_flat_arrays(flat, self._level_meta)
 
     # -- plan construction -------------------------------------------------
     def _lanes_of(self, ti: int):
@@ -801,8 +836,11 @@ class CompiledExpr:
                 [c.vals if s == 1 else s * c.vals
                  for s, c in zip(signs, outs)])
             valid = jnp.concatenate([c.valid for c in outs])
+            bound = 1
+            for _, d in self._strides:
+                bound *= d
             uk, uv, uvalid, count = union_reduce(
-                keys, vals, valid, caps["fused"], segsum)
+                keys, vals, valid, caps["fused"], segsum, key_bound=bound)
             required["fused"] = count
             return {"keys": uk, "vals": uv, "valid": uvalid}, required
 
@@ -832,22 +870,10 @@ class CompiledExpr:
 
     def _run_plan(self, plan: _Plan, sig, flat, *, batch: bool,
                   b_pad: Optional[int] = None):
-        """Run, detecting capacity overflow; grow buckets and retry. Each
-        retry can reveal larger downstream needs (truncation hid elements),
-        so loop to a fixpoint."""
-        for _ in range(32):
-            out, required = plan.fn(flat)
-            grow = {}
-            for k, r in required.items():
-                need = int(jnp.max(r))
-                if need > plan.caps[k]:
-                    grow[k] = _bucket_cap(need)
-            if not grow:
-                return out
-            self.stats["overflow_retries"] += 1
-            plan = self._install_plan(sig, {**plan.caps, **grow},
-                                      batch=batch, b_pad=b_pad)
-        raise RuntimeError("compiled SAM capacity growth did not converge")
+        return _run_with_growth(
+            plan, flat, self.stats,
+            lambda caps: self._install_plan(sig, caps, batch=batch,
+                                            b_pad=b_pad))
 
     # -- output assembly ---------------------------------------------------
     def _assemble_out(self, out, b: Optional[int] = None) -> FiberTree:
@@ -1115,3 +1141,345 @@ def execute_expr(expr: str, fmt: Format, schedule: Schedule,
     out_fmt = fmt.of(low.orig_assign.lhs.tensor,
                      len(low.orig_assign.lhs.vars))
     return FiberTree.from_dense(np.asarray(total), out_fmt or "")
+
+
+# ---------------------------------------------------------------------------
+# compiled programs: fused producer→consumer cascades (DESIGN.md §6)
+# ---------------------------------------------------------------------------
+
+class _FusedChain:
+    """One fused pipeline compiled into ONE jitted callable.
+
+    The stages (program order; the last one is the chain's sink) execute
+    back to back inside a single trace: each fused intermediate's keyed
+    COO result converts to on-device ``(seg, crd)`` level arrays
+    (``coord_ops.coo_to_levels``) that the next stage's level scanners
+    read directly — the intermediate never round-trips through a host
+    ``FiberTree``. Capacities (scan streams, stage outputs, intermediate
+    levels) are recorded eagerly on first call, bucketed, and grown on
+    overflow exactly like ``CompiledExpr``.
+    """
+
+    def __init__(self, stages, *, segsum=None, intersect=None):
+        from .einsum import Term as _Term
+
+        self.stages = stages
+        self.names = [s.name for s in stages]
+        fused = {t for s in stages for t in s.fused_inputs}
+        self.graphs = [s.lowered.graph for s in stages]
+        self.signs = [s.lowered.terms[0].sign for s in stages]
+        self._segsum = segsum
+        self._intersect = intersect
+        # external accesses per stage (everything not spliced), and the
+        # sub-assignment used to build their concordant fibertrees
+        self._ext: List[Tuple] = []
+        for s in stages:
+            accs, seen = [], set()
+            for t in s.lowered.assign.terms:
+                for f in t.factors:
+                    if f.tensor not in fused and f.tensor not in seen:
+                        accs.append(f)
+                        seen.add(f.tensor)
+            self._ext.append((tuple(accs),
+                              Assignment(lhs=s.lowered.assign.lhs,
+                                         terms=(_Term(1, tuple(accs)),))))
+        self.inputs = tuple(dict.fromkeys(
+            f.tensor for accs, _ in self._ext for f in accs))
+        # fused intermediates' level extents (producer storage order)
+        self._inter_dims = {
+            s.name: [s.lowered.dims[v] for v in s.lowered.result_vars]
+            for s in stages if s.fused_output}
+        final = stages[-1]
+        self._final_rvars = final.lowered.result_vars
+        self._scalar = not self._final_rvars
+        writer = _val_writer_node(self.graphs[-1])
+        self._out_shape = writer.params.get("shape", ())
+        self._out_fmt = (writer.params.get("format")
+                         or "c" * len(self._final_rvars))
+        self._mode_order = writer.params.get("mode_order")
+        self._strides = [(v, final.lowered.dims[v])
+                         for v in self._final_rvars]
+        self._level_meta: Dict[str, List[Tuple[str, int]]] = {}
+        self._plans: Dict[Tuple, _Plan] = {}
+        self._jit_cache: Dict[Tuple, Callable] = {}
+        self.stats = {"traces": 0, "plan_hits": 0, "plan_misses": 0,
+                      "overflow_retries": 0, "calls": 0}
+
+    # -- operand flattening ------------------------------------------------
+    def _raw_flat(self, env: Dict[str, np.ndarray]) -> Dict[str, Any]:
+        from .schedule import build_inputs as _build_inputs
+
+        raw = {}
+        for i, stg in enumerate(self.stages):
+            accs, sub = self._ext[i]
+            fts = _build_inputs(sub, stg.lowered.fmt, stg.lowered.schedule,
+                                {a.tensor: env[a.tensor] for a in accs})
+            for name, ft in fts.items():
+                key = f"s{i}.{name}"
+                self._level_meta.setdefault(
+                    key, [(lv.format, lv.dim) for lv in ft.levels])
+                jt = JTensor.from_fibertree(ft)
+                raw[key] = {"segs": tuple(lv.seg for lv in jt.levels),
+                            "crds": tuple(lv.crd for lv in jt.levels),
+                            "vals": jt.vals}
+        return raw
+
+    def _stage_tensors(self, flat, i: int, inter: Dict[str, JTensor]
+                       ) -> Dict[str, JTensor]:
+        accs, _ = self._ext[i]
+        sub = {f"s{i}.{a.tensor}": flat[f"s{i}.{a.tensor}"] for a in accs}
+        tensors = {k.split(".", 1)[1]: v for k, v in
+                   _tensors_from_flat_arrays(sub, self._level_meta).items()}
+        for t in self.stages[i].fused_inputs:
+            tensors[t] = inter[t]
+        return tensors
+
+    # -- the COO -> levels splice ------------------------------------------
+    def _jt_from_coo(self, coo: COOResult, sign: int, level_caps
+                     ) -> Tuple[JTensor, List]:
+        dims_list = [d for _, d in coo.strides]
+        segs, crds, counts = co.coo_to_levels(coo.keys, coo.valid,
+                                              dims_list, level_caps)
+        cap_in = level_caps[-1]
+        vals = coo.vals if sign == 1 else sign * coo.vals
+        vals = (vals[:cap_in] if vals.shape[0] >= cap_in
+                else jnp.pad(vals, (0, cap_in - vals.shape[0])))
+        levels = [JLevel(seg, crd, d)
+                  for seg, crd, d in zip(segs, crds, dims_list)]
+        return JTensor(levels, vals), counts
+
+    # -- capacity recording ------------------------------------------------
+    def _record_caps(self, flat) -> Dict[str, int]:
+        caps: Dict[str, int] = {}
+        inter: Dict[str, JTensor] = {}
+        for i, stg in enumerate(self.stages):
+            tensors = self._stage_tensors(flat, i, inter)
+            be = JaxBackend(self.graphs[i], tensors, stg.lowered.dims,
+                            stg.lowered.result_vars)
+            v = be.run_streams()
+            for k, n in be.caps_record.items():
+                caps[f"s{i}.{k}"] = _bucket_cap(n)
+            if not stg.fused_output:
+                continue
+            keys = np.asarray(v.keys)[np.asarray(v.valid)]
+            dims_list = [d for _, d in v.strides]
+            cnts: List[int] = []
+            p = keys
+            for l in range(len(dims_list) - 1, -1, -1):
+                cnts.insert(0, len(np.unique(p)))
+                p = p // dims_list[l]
+            level_caps = [_bucket_cap(c) for c in cnts]
+            for l, c in enumerate(cnts):
+                caps[f"s{i}.lv{l}"] = level_caps[l]
+            inter[stg.name], _ = self._jt_from_coo(v, self.signs[i],
+                                                   level_caps)
+        return caps
+
+    # -- the jitted cascade -------------------------------------------------
+    def _build_core(self, caps: Dict[str, int]) -> Callable:
+        scan_caps = [
+            {n.id: caps[f"s{i}.s{n.id}"] for n in G.of_kind(g.LEVEL_SCAN)}
+            for i, G in enumerate(self.graphs)]
+        out_caps = [caps.get(f"s{i}.out") for i in range(len(self.graphs))]
+        level_caps = {
+            s.name: [caps[f"s{i}.lv{l}"]
+                     for l in range(len(self._inter_dims[s.name]))]
+            for i, s in enumerate(self.stages) if s.fused_output}
+
+        def core(flat):
+            self.stats["traces"] += 1      # runs only while jax traces
+            required: Dict[str, jnp.ndarray] = {}
+            inter: Dict[str, JTensor] = {}
+            v = None
+            for i, stg in enumerate(self.stages):
+                tensors = self._stage_tensors(flat, i, inter)
+                be = JaxBackend(self.graphs[i], tensors, stg.lowered.dims,
+                                stg.lowered.result_vars,
+                                scan_caps=scan_caps[i], out_cap=out_caps[i],
+                                segsum=self._segsum,
+                                intersect=self._intersect)
+                v = be.run_streams()
+                for k, r in be.required.items():
+                    required[f"s{i}.{k}"] = r
+                if stg.fused_output:
+                    jt, counts = self._jt_from_coo(
+                        v, self.signs[i], level_caps[stg.name])
+                    for l, c in enumerate(counts):
+                        required[f"s{i}.lv{l}"] = c
+                    inter[stg.name] = jt
+            sign = self.signs[-1]
+            if self._scalar:
+                return {"scalar": sign * v}, required
+            vals = v.vals if sign == 1 else sign * v.vals
+            return {"keys": v.keys, "vals": vals, "valid": v.valid}, required
+
+        return core
+
+    def _install_plan(self, sig, caps: Dict[str, int]) -> _Plan:
+        jit_key = (sig, tuple(sorted(caps.items())),
+                   self._segsum is not None)
+        fn = self._jit_cache.get(jit_key)
+        if fn is None:
+            fn = jax.jit(self._build_core(caps))
+            self._jit_cache[jit_key] = fn
+        plan = _Plan(caps=caps, fn=fn)
+        self._plans[sig] = plan
+        return plan
+
+    def _run_plan(self, plan: _Plan, sig, flat):
+        return _run_with_growth(plan, flat, self.stats,
+                                lambda caps: self._install_plan(sig, caps))
+
+    # -- public --------------------------------------------------------------
+    def execute(self, env: Dict[str, np.ndarray]) -> FiberTree:
+        self.stats["calls"] += 1
+        flat, sig = _pad_flat_arrays(self._raw_flat(env), self._level_meta)
+        plan = self._plans.get(sig)
+        if plan is None:
+            self.stats["plan_misses"] += 1
+            plan = self._install_plan(sig, self._record_caps(flat))
+        else:
+            self.stats["plan_hits"] += 1
+        out = self._run_plan(plan, sig, flat)
+        if "scalar" in out:
+            return FiberTree.from_dense(np.asarray(float(out["scalar"])), "")
+        return coo_to_fibertree(out["keys"], out["vals"], out["valid"],
+                                self._strides, self._out_shape,
+                                self._out_fmt, self._mode_order)
+
+
+class CompiledProgram:
+    """A multi-assignment program compiled into executable units.
+
+    Fused pipelines (``LoweredProgram.components`` with >1 stage) become
+    one ``_FusedChain`` — one jitted callable, intermediates living on
+    device. Every other stage runs through its own process-wide
+    ``CompiledExpr`` (which brings split/parallelize, multi-term and the
+    full plan cache along), with dense materialization between units.
+
+    Calling the program returns one ``FiberTree`` per MATERIALIZED stage
+    output; fused-away intermediates are never built and do not appear.
+    """
+
+    def __init__(self, lp, *, use_kernels: bool = True):
+        self.lp = lp
+        self.cache_key = _program_key(lp)
+        segsum = intersect = None
+        if use_kernels:
+            try:
+                from ..kernels import ops as kops
+                segsum = kops.sam_primitive("keyed_segment_sum")
+                intersect = kops.sam_primitive("sorted_intersect")
+            except ImportError:
+                pass
+        self.units: List[Tuple[str, List[int], Any]] = []
+        for comp in lp.components():
+            if len(comp) == 1:
+                stg = lp.stages[comp[0]]
+                eng = compile_expr(stg.assign, lp.fmt, stg.schedule,
+                                   stg.dims, use_kernels=use_kernels)
+                self.units.append(("expr", comp, eng))
+            else:
+                chain = _FusedChain([lp.stages[i] for i in comp],
+                                    segsum=segsum, intersect=intersect)
+                self.units.append(("chain", comp, chain))
+        self.stats = {
+            "calls": 0,
+            "fused_stages": sum(len(c) for k, c, _ in self.units
+                                if k == "chain"),
+            "fused_intermediates": len(lp.fused_tensors),
+            "materialized_handoffs": len(
+                [d for d in lp.decisions if not d.fused]),
+        }
+
+    @property
+    def decisions(self):
+        return self.lp.decisions
+
+    @property
+    def inputs(self) -> Tuple[str, ...]:
+        return self.lp.program.inputs
+
+    def execute(self, arrays: Dict[str, np.ndarray]) -> Dict[str, FiberTree]:
+        """Run the program; returns ``{lhs tensor: FiberTree}`` for every
+        stage whose result materializes (fused intermediates excluded)."""
+        return self(arrays)
+
+    def __call__(self, arrays: Dict[str, np.ndarray]
+                 ) -> Dict[str, FiberTree]:
+        self.stats["calls"] += 1
+        env = {k: np.asarray(v, dtype=float) for k, v in arrays.items()}
+        results: Dict[str, FiberTree] = {}
+        for kind, comp, unit in self.units:
+            if kind == "expr":
+                stg = self.lp.stages[comp[0]]
+                ft = unit({t: env[t]
+                           for t in stg.lowered.orig_assign.input_tensors})
+                name = stg.name
+            else:
+                ft = unit.execute(env)
+                name = unit.names[-1]
+            results[name] = ft
+            if self.lp.program.consumers(name):
+                env[name] = ft.to_dense()   # materialized handoff
+        return results
+
+
+def _program_key(lp) -> str:
+    from .program import program_cache_key
+    return program_cache_key(lp)
+
+
+_COMPILED_PROGRAMS: Dict[Tuple[str, bool], CompiledProgram] = {}
+
+
+def compile_program(program, fmt: Format, schedules, dims: Dict[str, int],
+                    *, use_kernels: bool = True, sparsity=None,
+                    fuse: bool = True) -> CompiledProgram:
+    """Compile a multi-assignment program once; jit-cached per cascade.
+
+    Args:
+        program: program text (``;``/newline-separated assignments), a
+            ``program.Program``, or a sequence of assignments.
+        fmt: per-tensor formats, intermediates included.
+        schedules: ``"auto"`` (each stage resolved through the
+            autoscheduler + persistent schedule cache), a dict keyed by
+            stage lhs tensor, or a sequence aligned with the stages.
+        dims: extent of every index variable used by any stage.
+        use_kernels: route hot primitives through ``kernels/`` when
+            available.
+        sparsity: density hint for ``schedules="auto"``.
+        fuse: set False to force materialization between all stages (the
+            unfused comparison baseline).
+
+    Returns:
+        The process-wide ``CompiledProgram`` for this configuration —
+        the cache key is the per-stage canonical expression keys PLUS the
+        fusion plan (DESIGN.md §6), so a fused and an unfused build of
+        the same program are distinct engines.
+
+    >>> import numpy as np
+    >>> from repro.core.schedule import Format, Schedule
+    >>> cp = compile_program(
+    ...     "T(i,k) = B(i,j) * C(j,k); x(i) = T(i,k) * d(k)",
+    ...     Format(default="c"),
+    ...     {"T": Schedule(loop_order=("i", "j", "k")),
+    ...      "x": Schedule(loop_order=("i", "k"))},
+    ...     {"i": 2, "j": 2, "k": 2})
+    >>> out = cp({"B": np.eye(2), "C": np.eye(2), "d": np.ones(2)})
+    >>> sorted(out), out["x"].to_dense().tolist()
+    (['x'], [1.0, 1.0])
+    """
+    from .program import lower_program
+    lp = lower_program(program, fmt, schedules, dims, sparsity=sparsity,
+                       fuse=fuse)
+    key = (_program_key(lp), use_kernels)
+    hit = _COMPILED_PROGRAMS.get(key)
+    if hit is None:
+        hit = CompiledProgram(lp, use_kernels=use_kernels)
+        _COMPILED_PROGRAMS[key] = hit
+    return hit
+
+
+def clear_program_cache() -> None:
+    _COMPILED_PROGRAMS.clear()

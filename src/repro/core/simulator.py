@@ -142,13 +142,22 @@ class Simulator:
     parallelized variable) restrict their coordinate space to contiguous
     chunk ``lane`` of ``chunk_n`` when a lane is given; with ``lane=None``
     chunk marks are inert and the graph computes the full iteration space.
+
+    ``inject`` pre-seeds output ports of selected nodes with streams
+    produced elsewhere — the wire-splice mechanism of producer→consumer
+    program fusion (``program.simulate_program``): a consumer's level
+    scanners of a fused intermediate are never evaluated; their output
+    wires carry the producer's writer streams directly. An injected
+    node's work is 1 (it is a wire, not a block).
     """
 
     def __init__(self, graph_: g.Graph, tensors: Dict[str, FiberTree],
-                 lane: Optional[int] = None):
+                 lane: Optional[int] = None,
+                 inject: Optional[Dict[Tuple[int, str], Any]] = None):
         self.g = graph_
         self.tensors = tensors
         self.lane = lane
+        self.inject = dict(inject or {})
         self.env: Dict[Tuple[int, str], Any] = {}
         self.work: Dict[int, int] = {}
 
@@ -612,7 +621,16 @@ class Simulator:
             g.PARALLELIZE: self._eval_parallelize,
             g.SERIALIZE: self._eval_serialize,
         }
+        injected = {nid for nid, _ in self.inject}
         for node in self.g.topo_order():
+            if node.id in injected:
+                # spliced wire (program fusion): outputs come from the
+                # producer stage's streams, the block never runs
+                for (nid, port), val in self.inject.items():
+                    if nid == node.id:
+                        self.env[(nid, port)] = val
+                self.work[node.id] = 1
+                continue
             ins = self._inputs(node)
             outs, work = handlers[node.kind](node, ins)
             self.work[node.id] = work

@@ -22,6 +22,13 @@ batched sparse-expression serving through the compiled SAM engine.
         --sam "X(i,j) = B(i,k) * C(k,j)" --autotune \
         --sam-formats B=cc,C=cc --sam-dims i=250,j=250,k=100 \
         --sam-density 0.05
+
+    # multi-expression PROGRAM serving: ';'-separated assignments compile
+    # as one cascade; fusable producer→consumer stages execute as a single
+    # jitted pipeline (the intermediate never materializes)
+    PYTHONPATH=src python -m repro.launch.serve \
+        --sam "T(i,j) = B(i,j) * C(i,k) * D(j,k); A(i,j) = T(i,k) * E(k,j)" \
+        --sam-dims i=32,j=32,k=32 --sam-density 0.2 --batch 4
 """
 from __future__ import annotations
 
@@ -51,7 +58,8 @@ import numpy as np
 
 from ..configs import get_config, list_archs
 from ..core.einsum import parse
-from ..core.jax_backend import compile_expr, lane_mesh_size
+from ..core.jax_backend import compile_expr, compile_program, lane_mesh_size
+from ..core.program import parse_program
 from ..core.schedule import Format, Schedule
 from ..models.model import decode_step, forward, init_caches, init_params
 from ..train.train_step import make_prefill_step, make_serve_step
@@ -220,6 +228,69 @@ def serve_sam(expr: str, order: str, formats, dims, *, batch: int = 8,
     return results, eng.stats
 
 
+def serve_program(text: str, formats, dims, *, batch: int = 8,
+                  reps: int = 8, density: float = 0.1, seed: int = 0,
+                  autotune: bool = False, log=print):
+    """Multi-expression program serving: compile the cascade ONCE
+    (``jax_backend.compile_program``), then dispatch batches of operand
+    sets through it.
+
+    Fused producer→consumer stages execute as one jitted pipeline with
+    the intermediates living on device; illegal fusions materialize
+    between stages (the decisions are logged). ``autotune=True`` resolves
+    every stage's schedule through the autoscheduler + persistent
+    schedule cache. Returns (results of the last dispatch, program stats).
+    """
+    prog = parse_program(text)
+    fmt = Format(dict(formats))
+    schedules = "auto" if autotune else {
+        a.lhs.tensor: Schedule(loop_order=tuple(a.all_vars))
+        for a in prog.assigns}
+    cp = compile_program(prog, fmt, schedules, dims, sparsity=density)
+    for d in cp.decisions:
+        src, dst = prog.names[d.producer], prog.names[d.consumer]
+        log(f"[serve-program] {d.tensor}: {src} -> {dst} "
+            + ("FUSED (spliced streams, no materialization)" if d.fused
+               else f"materialized ({d.reason})"))
+    if not cp.decisions:
+        log("[serve-program] single-stage program (nothing to fuse)")
+    rng = np.random.default_rng(seed)
+
+    def operand_set():
+        from ..core.autoschedule import random_operand
+
+        free = set(prog.inputs)
+        out = {}
+        for a in prog.assigns:
+            for trm in a.terms:
+                for f in trm.factors:
+                    if f.tensor in free and f.tensor not in out:
+                        out[f.tensor] = random_operand(
+                            tuple(dims[v] for v in f.vars), density, rng)
+        return out
+
+    def dispatch():
+        return [cp(operand_set()) for _ in range(batch)]
+
+    t0 = time.perf_counter()
+    results = dispatch()     # first dispatch pays record + trace
+    t_first = time.perf_counter() - t0
+    t1 = time.perf_counter()
+    for _ in range(max(reps - 1, 0)):
+        results = dispatch()
+    if reps > 1:
+        warm = (time.perf_counter() - t1) / (reps - 1)
+        warm_txt = (f"warm={warm * 1e3:.1f}ms/dispatch "
+                    f"({batch / warm:.1f} programs/s)")
+    else:
+        warm_txt = "warm=n/a (reps<2)"
+    log(f"[serve-program] {len(prog.assigns)} stages, outputs="
+        f"{','.join(prog.outputs)}: batch={batch} reps={reps} "
+        f"first={t_first * 1e3:.1f}ms {warm_txt}")
+    log(f"[serve-program] program stats: {cp.stats}")
+    return results, cp.stats
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=list_archs(), default="qwen3-0.6b")
@@ -229,7 +300,11 @@ def main(argv=None):
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--sam", default=None, metavar="EXPR",
-                    help="serve a sparse expression instead of an LM")
+                    help="serve a sparse expression instead of an LM; "
+                         "';'-separated assignments serve as a PROGRAM "
+                         "with producer→consumer fusion, e.g. "
+                         "\"T(i,j) = B(i,k) * C(k,j); "
+                         "A(i,j) = T(i,k) * E(k,j)\"")
     ap.add_argument("--sam-order", default=None,
                     help="loop order, e.g. ikj (default: lhs+reduction vars)")
     ap.add_argument("--sam-formats", default="",
@@ -251,6 +326,25 @@ def main(argv=None):
                          "first request per shape; later requests hit the "
                          "persistent schedule cache and serve compiled")
     args = ap.parse_args(argv)
+
+    if args.sam and ";" in args.sam:
+        # multi-expression program serving (producer→consumer fusion)
+        if args.sam_order or args.split:
+            raise SystemExit("program serving schedules per stage; drop "
+                             "--sam-order/--split (use --autotune)")
+        if args.devices:
+            raise SystemExit("program serving does not shard lanes yet; "
+                             "drop --devices (stages run serial, fused "
+                             "where legal)")
+        prog = parse_program(args.sam)
+        all_vars = [v for a in prog.assigns for v in a.all_vars]
+        dims = {**{v: 64 for v in all_vars},
+                **_parse_kv(args.sam_dims, int)}
+        results, _ = serve_program(args.sam, _parse_kv(args.sam_formats),
+                                   dims, batch=args.batch, reps=args.reps,
+                                   density=args.sam_density,
+                                   autotune=args.autotune)
+        return results
 
     if args.sam:
         if args.autotune and args.sam_order:

@@ -286,6 +286,22 @@ def test_cache_clear_purges_inprocess_memo(tmp_path):
     assert not r.cache_hit and r.report is not None
 
 
+def test_clear_lowering_cache_also_clears_resolution_memo(tmp_path):
+    """Regression: ``custard.clear_lowering_cache()`` used to leave the
+    autoschedule in-process memo populated, so a stale schedule kept
+    being served after a cache clear."""
+    from repro.core import autoschedule
+    from repro.core.custard import clear_lowering_cache
+
+    arrays, dims = _spmspm(16, 16, 8, density=0.3)
+    cache = ScheduleCache(path=tmp_path / "schedules.json")
+    resolve_schedule(EXPR, FMT, dims, arrays=arrays, cache=cache,
+                     device_count=1)
+    assert autoschedule._RESOLVED          # memo is populated
+    clear_lowering_cache()
+    assert not autoschedule._RESOLVED      # ... and cleared with lowerings
+
+
 # ---------------------------------------------------------------------------
 # the "auto" wiring through custard and the compiled engine
 # ---------------------------------------------------------------------------

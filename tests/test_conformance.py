@@ -192,6 +192,75 @@ def test_parallel_lanes_cut_modeled_cycles():
     assert par.cycles < base.cycles
 
 
+@hst.composite
+def program_case(draw):
+    """A random 2-stage program: T = A·B (contraction), X = f(T, C)."""
+    seed = draw(hst.integers(0, 2 ** 31 - 1))
+    # stage 1: T(i,k) = A(i,j) * B(j,k), a random loop order
+    order1 = tuple(draw(hst.permutations(["i", "j", "k"])))
+    # stage 2 consumes T(i,k): either another contraction or elementwise
+    two = draw(hst.integers(0, 1))
+    if two:
+        expr2, vars2 = "X(i,m) = T(i,k) * C(k,m)", ["i", "k", "m"]
+    else:
+        expr2, vars2 = "X(i,k) = T(i,k) * C(i,k)", ["i", "k"]
+    order2 = tuple(draw(hst.permutations(vars2)))
+    fmts = {n: "".join("dc"[draw(hst.integers(0, 1))] for _ in range(2))
+            for n in "ABC"}
+    fmt_T = "".join("dc"[draw(hst.integers(0, 1))] for _ in range(2))
+    # schedule mode: 0 = plain, 1 = split stage 1, 2 = split+par stage 2
+    mode = draw(hst.integers(0, 2))
+    split_var = (order1 if mode == 1 else order2)[draw(hst.integers(0, 1))]
+    factor = (1, 2)[draw(hst.integers(0, 1))]
+    dims = {v: draw(hst.integers(3, 6)) for v in "ijkm"}
+    return (seed, order1, expr2, order2, fmts, fmt_T, mode, split_var,
+            factor, dims)
+
+
+@settings(max_examples=20, deadline=None)
+@given(program_case())
+def test_random_two_stage_program_conformance(case):
+    """Random 2-stage programs (formats x loop orders x split factors)
+    agree across the stitched/materialized simulator, the compiled
+    program engine, and numpy — whether or not fusion applies."""
+    from repro.core.jax_backend import compile_program
+    from repro.core.program import numpy_reference, simulate_program
+
+    (seed, order1, expr2, order2, fmts, fmt_T, mode, split_var, factor,
+     dims) = case
+    rng = np.random.default_rng(seed)
+    text = f"T(i,k) = A(i,j) * B(j,k); {expr2}"
+    arrays = {n: ((rng.random((dims[v1], dims[v2])) < 0.5)
+                  * rng.integers(1, 5, (dims[v1], dims[v2]))).astype(float)
+              for n, (v1, v2) in
+              {"A": ("i", "j"), "B": ("j", "k"),
+               "C": ("k", "m") if "m" in expr2 else ("i", "k")}.items()}
+    fmt = Format({**fmts, "T": fmt_T})
+    sch = {"T": Schedule(loop_order=order1,
+                         split={split_var: factor} if mode == 1 else {}),
+           "X": Schedule(loop_order=order2,
+                         split={split_var: factor} if mode == 2 else {},
+                         parallelize={split_var: factor}
+                         if mode == 2 else {})}
+    ref = numpy_reference(text, arrays)
+
+    sim = simulate_program(text, fmt, sch, dims, arrays)
+    np.testing.assert_allclose(sim.dense["X"], ref["X"],
+                               err_msg=f"sim: {text} {sch}")
+    np.testing.assert_allclose(sim.dense["T"], ref["T"],
+                               err_msg=f"sim T: {text} {sch}")
+
+    cp = compile_program(text, fmt, sch, dims)
+    out = cp(arrays)
+    np.testing.assert_allclose(out["X"].to_dense(), ref["X"],
+                               err_msg=f"engine: {text} {sch} "
+                                       f"{cp.decisions}")
+    if "T" in out:                      # materialized path also checked
+        np.testing.assert_allclose(out["T"].to_dense(), ref["T"])
+    else:                               # fused away: the decision says so
+        assert cp.decisions[0].fused
+
+
 def test_sharded_dispatch_forced_multi_device():
     """shard_map lane execution on a forced 2-device host (subprocess:
     the XLA device count is fixed before jax initializes)."""

@@ -1,8 +1,8 @@
 """The documentation executes as written: every ```python code block in
-docs/SCHEDULING.md and README.md runs top-to-bottom, so the guide's
-snippets and the quickstart cannot rot. (Docstring examples are guarded
-separately by CI's ``pytest --doctest-modules`` step over the public
-scheduling/compile modules.)"""
+docs/SCHEDULING.md, docs/PROGRAMS.md and README.md runs top-to-bottom,
+so the guides' snippets and the quickstart cannot rot. (Docstring
+examples are guarded separately by CI's ``pytest --doctest-modules``
+step over the public scheduling/compile modules.)"""
 import pathlib
 import re
 
@@ -16,7 +16,8 @@ def _python_blocks(path: pathlib.Path):
     return re.findall(r"```python\n(.*?)```", text, re.S)
 
 
-@pytest.mark.parametrize("doc", ["docs/SCHEDULING.md", "README.md"])
+@pytest.mark.parametrize("doc", ["docs/SCHEDULING.md", "docs/PROGRAMS.md",
+                                 "README.md"])
 def test_markdown_snippets_execute(doc, tmp_path, monkeypatch):
     monkeypatch.setenv("SAM_SCHEDULE_CACHE",
                        str(tmp_path / "schedules.json"))

@@ -1,0 +1,331 @@
+"""Program layer: parsing, the dependency DAG, fusion legality, stitched
+simulation, and the compiled cascade engine."""
+import numpy as np
+import pytest
+
+from repro.core import graph as g
+from repro.core.custard import lower_program as custard_lower_program
+from repro.core.jax_backend import (clear_program_cache, compile_program)
+from repro.core.program import (lower_program, numpy_reference,
+                                parse_program, program_cache_key,
+                                simulate_program)
+from repro.core.schedule import Format, Schedule
+
+SDDMM_SPMM = ("T(i,j) = B(i,j) * C(i,k) * D(j,k); "
+              "A(i,j) = T(i,k) * E(k,j)")
+SDDMM_SPMM_SCH = {"T": Schedule(loop_order=("i", "j", "k")),
+                  "A": Schedule(loop_order=("i", "k", "j"))}
+
+
+def sparse(shape, density=0.3, seed=0):
+    rng = np.random.default_rng(seed)
+    return ((rng.random(shape) < density)
+            * rng.integers(1, 9, shape)).astype(float)
+
+
+def sddmm_spmm_setup(n=12):
+    dims = {"i": n, "j": n, "k": n}
+    arrays = {t: sparse((n, n), seed=i)
+              for i, t in enumerate("BCDE")}
+    return dims, arrays
+
+
+# -- parsing + DAG ----------------------------------------------------------
+
+def test_parse_program_splits_statements_and_comments():
+    p = parse_program("""
+        T(i,k) = B(i,j) * C(j,k)   # comment
+        x(i) = T(i,k) * d(k); y(i) = x(i)
+    """)
+    assert p.names == ["T", "x", "y"]
+    assert p.inputs == ("B", "C", "d")
+    assert p.intermediates == ("T", "x")
+    assert p.outputs == ("y",)
+    assert p.consumers("T") == [1]
+    assert p.dependencies(2) == [1]
+
+
+def test_program_rejects_redefinition_and_use_before_def():
+    with pytest.raises(ValueError, match="defined twice"):
+        parse_program("x(i) = a(i); x(i) = b(i)")
+    with pytest.raises(ValueError, match="before"):
+        parse_program("x(i) = T(i); T(i) = a(i)")
+    with pytest.raises(ValueError, match="own output"):
+        parse_program("x(i) = x(i)")
+    with pytest.raises(ValueError, match="empty"):
+        parse_program("   ")
+
+
+def test_intermediate_shape_mismatch_is_an_error():
+    with pytest.raises(ValueError, match="different extents"):
+        lower_program("T(i,j) = B(i,j); x(i) = T(i,k) * d(k)",
+                      Format(default="c"),
+                      {"T": Schedule(loop_order=("i", "j")),
+                       "x": Schedule(loop_order=("i", "k"))},
+                      {"i": 4, "j": 5, "k": 6})
+    # a missing extent names the variable and stage, not a raw KeyError
+    with pytest.raises(ValueError, match="no extent for index variable"):
+        lower_program("T(i,j) = B(i,j); x(i) = T(i,k) * d(k)",
+                      Format(default="c"),
+                      {"T": Schedule(loop_order=("i", "j")),
+                       "x": Schedule(loop_order=("i", "k"))},
+                      {"i": 4, "k": 4})
+
+
+def test_numpy_reference_evaluates_stages_in_order():
+    arrays = {"B": np.eye(3), "C": 2 * np.eye(3), "d": np.ones(3)}
+    env = numpy_reference("T(i,k) = B(i,j) * C(j,k); x(i) = T(i,k) * d(k)",
+                          arrays)
+    np.testing.assert_allclose(env["T"], 2 * np.eye(3))
+    np.testing.assert_allclose(env["x"], 2 * np.ones(3))
+
+
+# -- fusion legality --------------------------------------------------------
+
+def test_sddmm_spmm_fuses():
+    dims, _ = sddmm_spmm_setup()
+    lp = lower_program(SDDMM_SPMM, Format(default="c"), SDDMM_SPMM_SCH,
+                       dims)
+    assert [d.fused for d in lp.decisions] == [True]
+    assert lp.components() == [[0, 1]]
+    assert lp.stages[0].fused_output and not lp.stages[0].fused_inputs
+    assert lp.stages[1].fused_inputs == ("T",)
+
+
+@pytest.mark.parametrize("schedules,why", [
+    # consumer iterates T discordantly: producer emits (i,j), consumer
+    # scans (k=T's j) first
+    ({"T": Schedule(loop_order=("i", "j", "k")),
+      "A": Schedule(loop_order=("k", "i", "j"))}, "modes"),
+    # split producer
+    ({"T": Schedule(loop_order=("i", "j", "k"), split={"i": 2}),
+      "A": Schedule(loop_order=("i", "k", "j"))}, "split"),
+    # parallelized consumer
+    ({"T": Schedule(loop_order=("i", "j", "k")),
+      "A": Schedule(loop_order=("i", "k", "j"), split={"k": 2},
+                    parallelize={"k": 2})}, "split"),
+])
+def test_illegal_fusion_falls_back_and_stays_correct(schedules, why):
+    dims, arrays = sddmm_spmm_setup()
+    lp = lower_program(SDDMM_SPMM, Format(default="c"), schedules, dims)
+    (d,) = lp.decisions
+    assert not d.fused and why in d.reason
+    ref = numpy_reference(SDDMM_SPMM, arrays)
+    sim = simulate_program(SDDMM_SPMM, Format(default="c"), schedules,
+                           dims, arrays)
+    np.testing.assert_allclose(sim.dense["A"], ref["A"])
+
+
+def test_multi_consumer_intermediate_materializes():
+    text = ("T(i,j) = B(i,k) * C(k,j); X(i,j) = T(i,j) * D(i,j); "
+            "Y(i,j) = T(i,j) * E(i,j)")
+    sch = {n: Schedule(loop_order=("i", "k", "j") if n == "T"
+                       else ("i", "j")) for n in "TXY"}
+    dims = {"i": 6, "j": 6, "k": 6}
+    lp = lower_program(text, Format(default="c"), sch, dims)
+    (d,) = [d for d in lp.decisions if d.tensor == "T"]
+    assert not d.fused and "consumer stages" in d.reason
+    arrays = {t: sparse((6, 6), seed=i) for i, t in enumerate("BCDE")}
+    ref = numpy_reference(text, arrays)
+    sim = simulate_program(text, Format(default="c"), sch, dims, arrays)
+    for t in "TXY":
+        np.testing.assert_allclose(sim.dense[t], ref[t], err_msg=t)
+
+
+def test_dense_intermediate_format_materializes():
+    dims, _ = sddmm_spmm_setup()
+    lp = lower_program(SDDMM_SPMM, Format({"T": "dc"}, default="c"),
+                       SDDMM_SPMM_SCH, dims)
+    (d,) = lp.decisions
+    assert not d.fused and "compressed" in d.reason
+
+
+def test_broken_scan_chain_materializes():
+    # consumer loop order (i, j, k): T(i,k) is repeated over j between
+    # its two scans, so the chain root->T_i->T_k is broken
+    dims, arrays = sddmm_spmm_setup()
+    sch = {"T": Schedule(loop_order=("i", "j", "k")),
+           "A": Schedule(loop_order=("i", "j", "k"))}
+    lp = lower_program(SDDMM_SPMM, Format(default="c"), sch, dims)
+    (d,) = lp.decisions
+    assert not d.fused and "chain" in d.reason
+    ref = numpy_reference(SDDMM_SPMM, arrays)
+    sim = simulate_program(SDDMM_SPMM, Format(default="c"), sch, dims,
+                           arrays)
+    np.testing.assert_allclose(sim.dense["A"], ref["A"])
+
+
+def test_custard_lower_program_wrapper():
+    dims, _ = sddmm_spmm_setup()
+    lp = custard_lower_program(SDDMM_SPMM, Format(default="c"),
+                               SDDMM_SPMM_SCH, dims)
+    assert [d.fused for d in lp.decisions] == [True]
+
+
+# -- stitched simulation ----------------------------------------------------
+
+def test_fused_simulation_matches_oracle_and_cuts_cycles():
+    dims, arrays = sddmm_spmm_setup(16)
+    fmt = Format(default="c")
+    ref = numpy_reference(SDDMM_SPMM, arrays)
+    fused = simulate_program(SDDMM_SPMM, fmt, SDDMM_SPMM_SCH, dims, arrays)
+    unfused = simulate_program(SDDMM_SPMM, fmt, SDDMM_SPMM_SCH, dims,
+                               arrays, fuse=False)
+    np.testing.assert_allclose(fused.dense["A"], ref["A"])
+    np.testing.assert_allclose(fused.dense["T"], ref["T"])
+    np.testing.assert_allclose(unfused.dense["A"], ref["A"])
+    # the stitched pipeline overlaps both stages: strictly fewer cycles
+    assert fused.cycles < unfused.cycles
+    assert len(fused.component_cycles) == 1
+    assert len(unfused.component_cycles) == 2
+    assert sum(unfused.component_cycles) == unfused.cycles
+    # spliced wires cost 1: the consumer's T scanners and the producer's
+    # writers contribute no steady-state work
+    consumer = fused.stage("A")
+    scan_ids = [n.id for n in consumer.sim_result.graph.of_kind(g.LEVEL_SCAN)
+                if n.params["tensor"] == "T"]
+    assert scan_ids and all(consumer.work[i] == 1 for i in scan_ids)
+    producer = fused.stage("T")
+    for n in producer.sim_result.graph.of_kind(g.LEVEL_WRITE):
+        assert producer.work[n.id] == 1
+
+
+def test_three_stage_chain_fuses_transitively():
+    text = ("T(i,k) = B(i,j) * C(j,k); U(i,m) = T(i,k) * D(k,m); "
+            "x(i) = U(i,m) * e(m)")
+    sch = {"T": Schedule(loop_order=("i", "j", "k")),
+           "U": Schedule(loop_order=("i", "k", "m")),
+           "x": Schedule(loop_order=("i", "m"))}
+    dims = {"i": 8, "j": 8, "k": 8, "m": 8}
+    arrays = {"B": sparse((8, 8), seed=1), "C": sparse((8, 8), seed=2),
+              "D": sparse((8, 8), seed=3), "e": sparse((8,), seed=4)}
+    fmt = Format(default="c")
+    lp = lower_program(text, fmt, sch, dims)
+    assert [d.fused for d in lp.decisions] == [True, True]
+    assert lp.components() == [[0, 1, 2]]
+    ref = numpy_reference(text, arrays)
+    sim = simulate_program(text, fmt, sch, dims, arrays)
+    np.testing.assert_allclose(sim.dense["x"], ref["x"])
+    cp = compile_program(text, fmt, sch, dims)
+    out = cp(arrays)
+    assert sorted(out) == ["x"]
+    np.testing.assert_allclose(out["x"].to_dense(), ref["x"])
+
+
+def test_negative_producer_sign_flows_through_splice():
+    text = "T(i,k) = -B(i,j) * C(j,k); x(i) = T(i,k) * d(k)"
+    sch = {"T": Schedule(loop_order=("i", "j", "k")),
+           "x": Schedule(loop_order=("i", "k"))}
+    dims = {"i": 6, "j": 6, "k": 6}
+    arrays = {"B": sparse((6, 6), seed=5), "C": sparse((6, 6), seed=6),
+              "d": sparse((6,), seed=7)}
+    fmt = Format(default="c")
+    lp = lower_program(text, fmt, sch, dims)
+    assert [d.fused for d in lp.decisions] == [True]
+    ref = numpy_reference(text, arrays)
+    sim = simulate_program(text, fmt, sch, dims, arrays)
+    np.testing.assert_allclose(sim.dense["x"], ref["x"])
+    out = compile_program(text, fmt, sch, dims)(arrays)
+    np.testing.assert_allclose(out["x"].to_dense(), ref["x"])
+
+
+# -- compiled cascade -------------------------------------------------------
+
+def test_compiled_program_fused_excludes_intermediate():
+    dims, arrays = sddmm_spmm_setup(16)
+    fmt = Format(default="c")
+    ref = numpy_reference(SDDMM_SPMM, arrays)
+    cp = compile_program(SDDMM_SPMM, fmt, SDDMM_SPMM_SCH, dims)
+    out = cp(arrays)
+    assert sorted(out) == ["A"]        # T never materializes
+    np.testing.assert_allclose(out["A"].to_dense(), ref["A"])
+    cpu = compile_program(SDDMM_SPMM, fmt, SDDMM_SPMM_SCH, dims,
+                          fuse=False)
+    outu = cpu(arrays)
+    assert sorted(outu) == ["A", "T"]  # materialized handoff is returned
+    np.testing.assert_allclose(outu["T"].to_dense(), ref["T"])
+    assert np.array_equal(out["A"].to_dense(), outu["A"].to_dense())
+
+
+def test_compiled_program_plan_cache_and_overflow_growth():
+    dims, arrays = sddmm_spmm_setup(12)
+    fmt = Format(default="c")
+    cp = compile_program(SDDMM_SPMM, fmt, SDDMM_SPMM_SCH, dims)
+    chain = next(u for k, _, u in cp.units if k == "chain")
+    before = dict(chain.stats)
+    cp(arrays)
+    cp(arrays)
+    assert chain.stats["plan_misses"] == before["plan_misses"] + 1
+    assert chain.stats["plan_hits"] >= before["plan_hits"] + 1
+    # denser data under the same dims bucket: results stay exact (grown
+    # or re-planned, never truncated)
+    dense_arrays = {t: sparse((12, 12), density=0.95, seed=i)
+                    for i, t in enumerate("BCDE")}
+    ref = numpy_reference(SDDMM_SPMM, dense_arrays)
+    out = cp(dense_arrays)
+    np.testing.assert_allclose(out["A"].to_dense(), ref["A"])
+
+
+def test_compile_program_is_cached_and_keyed_on_fusion():
+    dims, _ = sddmm_spmm_setup()
+    fmt = Format(default="c")
+    a = compile_program(SDDMM_SPMM, fmt, SDDMM_SPMM_SCH, dims)
+    b = compile_program(SDDMM_SPMM, fmt, SDDMM_SPMM_SCH, dims)
+    c = compile_program(SDDMM_SPMM, fmt, SDDMM_SPMM_SCH, dims, fuse=False)
+    assert a is b and a is not c
+    assert a.cache_key != c.cache_key   # fusion plan is part of the key
+    lp = lower_program(SDDMM_SPMM, fmt, SDDMM_SPMM_SCH, dims)
+    assert "fuse=T:1" in program_cache_key(lp)
+    clear_program_cache()
+    assert compile_program(SDDMM_SPMM, fmt, SDDMM_SPMM_SCH, dims) is not a
+
+
+def test_interleaved_components_execute_in_dependency_order():
+    """A fused chain [0, 2] must not run before the materialized stage 1
+    it also depends on — components execute in sink order."""
+    text = ("T(i,k) = B(i,j) * C(j,k); U(k,m) = D(k,m) * F(k,m); "
+            "A(i,m) = T(i,k) * U(k,m)")
+    sch = {"T": Schedule(loop_order=("i", "j", "k")),
+           "U": Schedule(loop_order=("k", "m")),
+           "A": Schedule(loop_order=("i", "k", "m"))}
+    dims = {"i": 6, "j": 6, "k": 6, "m": 6}
+    arrays = {t: sparse((6, 6), seed=i) for i, t in enumerate("BCDF")}
+    fmt = Format(default="c")
+    lp = lower_program(text, fmt, sch, dims)
+    by_tensor = {d.tensor: d.fused for d in lp.decisions}
+    assert by_tensor == {"T": True, "U": False}
+    assert lp.components() == [[1], [0, 2]]   # sink order, not min order
+    ref = numpy_reference(text, arrays)
+    sim = simulate_program(text, fmt, sch, dims, arrays)
+    np.testing.assert_allclose(sim.dense["A"], ref["A"])
+    out = compile_program(text, fmt, sch, dims)(arrays)
+    assert sorted(out) == ["A", "U"]
+    np.testing.assert_allclose(out["A"].to_dense(), ref["A"])
+
+
+def test_scalar_intermediate_materializes_and_serves():
+    text = "s = b(i) * c(i); x(j) = s * d(j)"
+    sch = {"s": Schedule(loop_order=("i",)),
+           "x": Schedule(loop_order=("j",))}
+    dims = {"i": 5, "j": 4}
+    arrays = {"b": sparse((5,), seed=1), "c": sparse((5,), seed=2),
+              "d": sparse((4,), seed=3)}
+    fmt = Format({"s": ""}, default="c")
+    lp = lower_program(text, fmt, sch, dims)
+    (d,) = lp.decisions
+    assert not d.fused and "scalar" in d.reason
+    ref = numpy_reference(text, arrays)
+    sim = simulate_program(text, fmt, sch, dims, arrays)
+    np.testing.assert_allclose(sim.dense["x"], ref["x"])
+    out = compile_program(text, fmt, sch, dims)(arrays)
+    np.testing.assert_allclose(out["x"].to_dense(), ref["x"])
+
+
+def test_serve_program_smoke(capsys):
+    from repro.launch.serve import serve_program
+
+    results, stats = serve_program(
+        "T(i,k) = B(i,j) * C(j,k); x(i) = T(i,k) * d(k)", {},
+        {"i": 8, "j": 8, "k": 8}, batch=2, reps=2, density=0.4)
+    assert len(results) == 2 and sorted(results[0]) == ["x"]
+    assert stats["fused_intermediates"] == 1
