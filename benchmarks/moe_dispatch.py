@@ -1,5 +1,5 @@
 """SAM-dispatched MoE vs dense one-hot baseline (the paper's dataflow-order
-study replayed inside an LM; DESIGN.md §4).
+study replayed inside an LM; DESIGN.md §8 deviations ledger).
 
 Reports wall time and the analytic work ratio E/k. The SAM (Gustavson
 sort-order) dispatch does O(k*T*D) expert work; the dense baseline does

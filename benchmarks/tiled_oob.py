@@ -1,0 +1,99 @@
+"""Tiled out-of-core execution under a memory budget (the acceptance
+benchmark for the tiling layer; DESIGN.md §7, docs/TILING.md).
+
+The expression ``X(i,j) = B(i,k) * C(k,j)`` with a sparse ``B`` ("cc")
+and a DENSE-formatted ``C`` ("dd") is sized so that one untiled compiled
+call cannot fit the memory budget: the engine's dense-level
+densification materializes ``k*j`` coordinates for ``C`` and the
+``j``-level scan stream expands to ``nnz(B) * j`` elements. The bench
+then checks the whole out-of-core contract:
+
+1. **refused untiled** — ``compile_expr(..., mem_budget=b,
+   auto_tile=False)`` raises ``MemoryBudgetExceeded`` (the estimate
+   exceeds the budget, so an untiled attempt would exhaust device
+   memory);
+2. **completes tiled** — the same call with ``auto_tile=True`` (the
+   default) routes through ``TiledExpr``, streams the coordinate tiles,
+   and the result is **bit-identical** to the numpy oracle
+   (integer-valued operands make every f32 partial sum exact);
+3. **one plan for all tiles** — the shared per-tile engine records
+   exactly one plan miss; every tile after the first hits the
+   compiled-callable cache (and warm repeat calls hit it too).
+
+Reported (CSV: phase,bytes_or_tiles,wall_us,derived).
+
+    PYTHONPATH=src python -m benchmarks.run tiled_oob
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import tiling
+from repro.core.jax_backend import TiledExpr, compile_expr
+from repro.core.schedule import Format, Schedule
+
+from .common import RNG
+
+EXPR = "X(i,j) = B(i,k) * C(k,j)"
+FMT = Format({"B": "cc", "C": "dd"})
+ORDER = ("i", "k", "j")
+
+
+def run(log, smoke: bool = False) -> bool:
+    n = 96 if smoke else 384
+    density = 0.05 if smoke else 0.02
+    dims = {"i": n, "j": n, "k": n}
+    sch = Schedule(loop_order=ORDER)
+    B = ((RNG.random((n, n)) < density)
+         * RNG.integers(1, 9, (n, n))).astype(float)
+    C = RNG.integers(1, 9, (n, n)).astype(float)      # dense, integer-valued
+    want = B @ C                                      # exact (integer sums)
+    densities = {"B": float(np.count_nonzero(B)) / B.size, "C": 1.0}
+
+    untiled_bytes = tiling.estimate_call_bytes(
+        EXPR, FMT, sch, dims, densities=densities)
+    budget = untiled_bytes // 3
+
+    # 1. refused untiled: the budget gate fires before any allocation
+    refused = False
+    try:
+        compile_expr(EXPR, FMT, sch, dims, mem_budget=budget,
+                     sparsity=densities, auto_tile=False)
+    except tiling.MemoryBudgetExceeded as e:
+        refused = e.estimate == untiled_bytes and e.budget == budget
+    log(f"tiled_oob,untiled_estimate,{untiled_bytes},0,"
+        f"{'refused' if refused else 'NOT_REFUSED'}")
+
+    # 2. completes tiled, bit-identical to the numpy oracle
+    eng = compile_expr(EXPR, FMT, sch, dims, mem_budget=budget,
+                       sparsity=densities)
+    tiled = isinstance(eng, TiledExpr) and eng.n_tiles >= 2
+    base_miss = eng.engine.stats["plan_misses"]
+    base_hit = eng.engine.stats["plan_hits"]
+    t0 = time.perf_counter()
+    out = eng({"B": B, "C": C}).to_dense()
+    first_us = (time.perf_counter() - t0) * 1e6
+    identical = bool(np.array_equal(out, want))
+    log(f"tiled_oob,first_call_tiles={eng.n_tiles},{eng.tile_bytes},"
+        f"{first_us:.0f},{'bit-identical' if identical else 'MISMATCH'}")
+
+    # 3. every tile after the first hits the compiled-callable cache
+    misses = eng.engine.stats["plan_misses"] - base_miss
+    hits = eng.engine.stats["plan_hits"] - base_hit
+    cache_ok = misses == 1 and hits == eng.n_tiles - 1
+    t1 = time.perf_counter()
+    out2 = eng({"B": B, "C": C}).to_dense()
+    warm_us = (time.perf_counter() - t1) * 1e6
+    warm_hits = eng.engine.stats["plan_hits"] - base_hit - hits
+    cache_ok &= warm_hits == eng.n_tiles          # warm call: all tiles hit
+    identical &= bool(np.array_equal(out2, want))
+    log(f"tiled_oob,warm_call_hits={hits}+{warm_hits},"
+        f"misses={misses},{warm_us:.0f},"
+        f"{'cache' if cache_ok else 'CACHE_MISSED'}")
+
+    ok = refused and tiled and identical and cache_ok
+    log(f"tiled_oob/summary,budget,{budget},tiles,{eng.n_tiles},"
+        f"tile_bytes,{eng.tile_bytes},derived,{'pass' if ok else 'FAIL'}")
+    return ok

@@ -14,7 +14,8 @@ REDUCED = dataclasses.replace(
 
 register(CFG, REDUCED)
 
-# Beyond-paper variant (DESIGN.md §5): SAM block-sparse sliding-window
+# Beyond-paper variant (DESIGN.md §8 deviations ledger): SAM block-sparse
+# sliding-window
 # attention (the kernels/bsr_attention path; lowered as windowed masking)
 # makes the 500k-token cell sub-quadratic and therefore lowerable. Reported
 # separately — it does not replace the faithful long_500k skip above.

@@ -22,6 +22,12 @@ something the system searches:
    canonical expression key + dims bucket + sparsity bucket, so serving
    never re-searches a shape it has seen (see DESIGN.md §5).
 
+A memory budget (``search(mem_budget=...)``) adds the out-of-core tile
+size to the space as a LEGALITY bound: over-budget candidates grow the
+minimal coordinate tiling that fits (plus one 2x-finer grid),
+unfittable candidates are dropped, and budget-qualified winners persist
+under their own cache entries (DESIGN.md §7, docs/TILING.md).
+
 Entry points: ``resolve_schedule`` (cache-aware; what
 ``custard.lower(..., schedule="auto")``, ``jax_backend.compile_expr`` and
 ``serve.py --autotune`` call) and ``search`` (always searches, returns the
@@ -53,7 +59,11 @@ from .simulator import downsample_operands, simulate_expr
 DEFAULT_SPARSITY = 0.1
 SPLIT_FACTORS = (2, 4, 8)
 MAX_ORDERS = 720          # full permutations up to 6 index variables
-CACHE_VERSION = 1
+# v2: Schedule serialization gained the out-of-core `tile` field, and
+# budget-qualified searches can persist tiled winners (DESIGN.md §7) —
+# the version rides the default cache FILENAME, so v1 stores are simply
+# never read (or clobbered) by v2 tools
+CACHE_VERSION = 2
 
 SparsityHint = Union[None, float, Dict[str, float]]
 
@@ -68,25 +78,31 @@ class CandidateSpec:
 
     ``order`` is a permutation of every index variable; ``split`` is at
     most one ``(var, factor)`` §4.1 split; ``lanes > 1`` parallelizes the
-    split variable's outer half into that many §4.4 lanes.
+    split variable's outer half into that many §4.4 lanes. ``tile``
+    carries the out-of-core coordinate partition a memory budget forced
+    (``search(mem_budget=...)``; empty without a budget).
     """
 
     order: Tuple[str, ...]
     split: Tuple[Tuple[str, int], ...] = ()
     lanes: int = 1
+    tile: Tuple[Tuple[str, int], ...] = ()
 
     def schedule(self) -> Schedule:
         split = dict(self.split)
         par: Dict[str, int] = {}
         if self.lanes > 1 and split:
             par = {next(iter(split)): self.lanes}
-        return Schedule(loop_order=self.order, split=split, parallelize=par)
+        return Schedule(loop_order=self.order, split=split, parallelize=par,
+                        tile=dict(self.tile))
 
     def key(self) -> str:
         """Deterministic total-order tie-breaker (the separator keeps
         multi-character variable names collision-free)."""
         sp = ",".join(f"{v}:{f}" for v, f in self.split)
-        return f"{','.join(self.order)}|split={sp}|lanes={self.lanes}"
+        ti = ",".join(f"{v}:{n}" for v, n in self.tile)
+        return (f"{','.join(self.order)}|split={sp}|lanes={self.lanes}"
+                + (f"|tile={ti}" if ti else ""))
 
 
 def enumerate_space(assign: Union[str, Assignment], dims: Dict[str, int], *,
@@ -187,8 +203,17 @@ def analytic_cost(assign: Assignment, fmt: Format, dims: Dict[str, int],
     The estimate is ``max`` over per-block works (the simulator's
     steady-state term) plus a small total-work tie-breaker. Parallel
     lanes divide the works at and below the split variable; the lane
-    merge costs the estimated result nnz.
+    merge costs the estimated result nnz. A tiled spec costs one tile's
+    estimate times the tile-grid volume (tiles stream sequentially) with
+    a small overhead factor, so untiled schedules win whenever they fit
+    the budget.
     """
+    if spec.tile:
+        from .tiling import n_tiles, tile_extents
+        ext = tile_extents(dims, dict(spec.tile))
+        per = analytic_cost(assign, fmt, ext,
+                            dataclasses.replace(spec, tile=()), densities)
+        return float(per * n_tiles(dict(spec.tile)) * 1.05)
     pos = {v: i for i, v in enumerate(spec.order)}
     result_vars = set(assign.lhs.vars)
     fills: Dict[str, float] = {}
@@ -270,6 +295,28 @@ class SearchReport:
         return self.candidates[0]
 
 
+def _sampled_candidate_cycles(assign, fmt, spec: CandidateSpec,
+                              sch: Schedule, s_arrays, s_dims) -> int:
+    """Cost one candidate on the downsampled sample. Tiled specs clamp
+    their tile grid to at most 8 cells on the sample (the sample extents
+    are tiny) and scale the simulated cycles back up by the true/sampled
+    grid-volume ratio — per-tile steady states add, so cycles grow
+    linearly in the tile count."""
+    if not spec.tile:
+        return simulate_expr(assign, fmt, sch, s_arrays, s_dims).cycles
+    from .tiling import n_tiles
+    s_tile: Dict[str, int] = {}
+    vol = 1
+    for v, n in sorted(spec.tile):
+        m = min(int(n), int(s_dims.get(v, 1)), max(1, 8 // vol))
+        if m > 1:
+            s_tile[v] = m
+            vol *= m
+    sch_s = dataclasses.replace(sch, tile=s_tile)
+    cycles = simulate_expr(assign, fmt, sch_s, s_arrays, s_dims).cycles
+    return int(cycles * n_tiles(dict(spec.tile)) / max(n_tiles(s_tile), 1))
+
+
 def _expr_text(assign: Assignment) -> str:
     terms = []
     for t in assign.terms:
@@ -315,7 +362,8 @@ def search(expr: Union[str, Assignment], fmt: Format, dims: Dict[str, int], *,
            sparsity: SparsityHint = None, top_k: int = 8, max_dim: int = 48,
            device_count: Optional[int] = None,
            split_factors: Sequence[int] = SPLIT_FACTORS,
-           max_orders: int = MAX_ORDERS) -> SearchReport:
+           max_orders: int = MAX_ORDERS,
+           mem_budget: Optional[int] = None) -> SearchReport:
     """Search the schedule space; return candidates ranked best-first.
 
     Deterministic: the analytic prune sorts on (cost, spec key), the
@@ -323,6 +371,14 @@ def search(expr: Union[str, Assignment], fmt: Format, dims: Dict[str, int], *,
     synthetic data, and the final ranking sorts on (sampled cycles,
     analytic cost, spec key) — two invocations with equal inputs return
     identical rankings.
+
+    ``mem_budget`` (bytes) bounds schedule legality by estimated peak
+    device allocation (``tiling.estimate_call_bytes``): every candidate
+    whose untiled estimate exceeds the budget grows the minimal
+    coordinate tiling that fits (``tiling.plan_tiles``) plus one
+    2x-finer grid as a tile-size alternative; candidates that cannot fit
+    even fully tiled are dropped. Without a budget the space is exactly
+    the historical one.
     """
     assign = parse(expr) if isinstance(expr, str) else expr
     t0 = time.perf_counter()
@@ -333,6 +389,42 @@ def search(expr: Union[str, Assignment], fmt: Format, dims: Dict[str, int], *,
     scored = sorted(
         (analytic_cost(assign, fmt, dims, s, densities), s.key(), s)
         for s in specs)
+
+    if mem_budget is not None:
+        from . import tiling
+        budget = tiling.parse_budget(mem_budget)
+        expanded = []
+        tightest: Optional[tiling.MemoryBudgetExceeded] = None
+        for _, _, spec in scored:
+            try:
+                plan = tiling.plan_tiles(assign, fmt, spec.schedule(), dims,
+                                         budget, densities=densities)
+            except tiling.MemoryBudgetExceeded as e:
+                if tightest is None or e.estimate < tightest.estimate:
+                    tightest = e       # cannot fit even fully tiled
+                continue
+            variants = [plan]
+            if plan:                   # tile-size search: minimal + finer
+                finer = {}
+                for v, n in plan.items():
+                    f = min(2 * n, dims[v])
+                    chunk = -(-dims[v] // f)
+                    finer[v] = -(-dims[v] // chunk)   # effective grid only
+                if finer != plan:
+                    variants.append(finer)
+            for t in variants:
+                sp = dataclasses.replace(spec,
+                                         tile=tuple(sorted(t.items())))
+                expanded.append((analytic_cost(assign, fmt, dims, sp,
+                                               densities), sp.key(), sp))
+        if not expanded and tightest is not None:
+            raise tiling.MemoryBudgetExceeded(
+                f"no schedule in the enumerated space fits mem_budget="
+                f"{tiling.format_bytes(budget)}, even fully tiled "
+                f"(tightest candidate still needs "
+                f"~{tiling.format_bytes(tightest.estimate)})",
+                estimate=tightest.estimate, budget=budget)
+        scored = sorted(expanded)
 
     # sampler inputs: provided operands downsampled; tensors without a
     # concrete array fall back to synthetic data at the hinted density
@@ -352,7 +444,8 @@ def search(expr: Union[str, Assignment], fmt: Format, dims: Dict[str, int], *,
         sch = spec.schedule()
         simulated += 1
         try:
-            cycles = simulate_expr(assign, fmt, sch, s_arrays, s_dims).cycles
+            cycles = _sampled_candidate_cycles(assign, fmt, spec, sch,
+                                               s_arrays, s_dims)
         except Exception:              # noqa: BLE001 - schedule can't lower:
             continue                   # drop it, keep searching the ranking
         candidates.append(Candidate(spec=spec, schedule=sch,
@@ -548,6 +641,10 @@ def resolve_schedule(expr: Union[str, Assignment], fmt: Format,
     densities = resolve_densities(assign, sparsity, arrays)
     if device_count is None:
         device_count = _device_count()
+    if search_kw.get("mem_budget") is not None:
+        # normalize "64MB"-style budgets so the cache key is stable
+        from .tiling import parse_budget
+        search_kw["mem_budget"] = parse_budget(search_kw["mem_budget"])
     key = auto_cache_key(assign, fmt, dims, densities, device_count)
     # a non-default search space (split_factors, max_orders, top_k,
     # max_dim, ...) explores different candidates, so its winners live

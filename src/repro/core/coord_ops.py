@@ -205,6 +205,35 @@ def keyed_union_reduce(keys, vals, valid, cap: int, segment_sum_impl=None,
     return uk, jnp.where(out_valid, uv, 0.0), out_valid, count
 
 
+def accumulate_coo(acc_keys, acc_vals, keys, vals, key_bound=None,
+                   segment_sum_impl=None):
+    """Merge a new keyed COO partial into a running accumulator.
+
+    The out-of-core tile driver's merge step (``jax_backend.TiledExpr``,
+    DESIGN.md §7): after each tile executes, its live ``(keys, vals)``
+    partial — shifted into the GLOBAL coordinate space — folds into the
+    running result with ONE ``keyed_union_reduce``. Contraction-tiled
+    partials overlap (a reduce-merge); result-tiled partials are disjoint
+    (a concat-merge comes out of the same primitive for free). Peak
+    memory of the merge is the running result plus one tile's partial —
+    never all tiles at once.
+
+    Inputs/outputs are host (numpy) arrays of live entries only; returns
+    ``(keys, vals)`` sorted by key, unique.
+    """
+    k = jnp.concatenate([jnp.asarray(acc_keys, I64), jnp.asarray(keys, I64)])
+    v = jnp.concatenate([jnp.asarray(acc_vals, jnp.float32),
+                         jnp.asarray(vals, jnp.float32)])
+    if k.shape[0] == 0:
+        return (np.zeros(0, np.int64), np.zeros(0, np.float32))
+    cap = max(8, 1 << (int(k.shape[0]) - 1).bit_length())
+    uk, uv, _, count = keyed_union_reduce(
+        k, v, jnp.ones(k.shape, bool), cap, segment_sum_impl,
+        key_bound=key_bound)
+    n = int(count)
+    return np.asarray(uk[:n]), np.asarray(uv[:n])
+
+
 def sorted_segment_reduce(keys, vals, valid, cap: int):
     """Back-compat 3-tuple wrapper around ``keyed_union_reduce``."""
     uk, uv, out_valid, _ = keyed_union_reduce(keys, vals, valid, cap)

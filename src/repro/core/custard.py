@@ -457,6 +457,8 @@ def expr_cache_key(assign: Assignment, fmt: Format, schedule: Schedule,
         "par=" + ",".join(f"{k}:{v}"
                           for k, v in sorted(schedule.parallelize.items())),
         "empty=" + str(schedule.reduce_empty),
+        "tile=" + ",".join(f"{k}:{v}"
+                           for k, v in sorted(schedule.tile.items())),
         "dims=" + ",".join(f"{k}:{v}" for k, v in sorted(dims.items())),
     ]
     return "|".join(parts)
@@ -593,6 +595,13 @@ def lower(expr, fmt: Format, schedule, dims: Dict[str, int]) -> Lowered:
                 f"schedule must be a Schedule or 'auto', got {schedule!r}")
         from .autoschedule import resolve_schedule
         schedule = resolve_schedule(expr, fmt, dims).schedule
+    if schedule.tile:
+        raise ValueError(
+            "Custard lowers one tile at a time: a tiled schedule "
+            f"(tile={schedule.tile}) executes through the out-of-core "
+            "driver — jax_backend.compile_expr routes it to TiledExpr, "
+            "simulator.simulate_expr models the tile stream (docs/"
+            "TILING.md); strip `tile` to lower a single tile's graph")
     assign = parse(expr) if isinstance(expr, str) else expr
     key = expr_cache_key(assign, fmt, schedule, dims)
     hit = _LOWERED_CACHE.get(key)

@@ -47,6 +47,15 @@ Two execution modes share the block handlers:
   the device mesh when several are present — and every (term, lane)
   partial COO merges through the same fused keyed union/segment-reduce.
   The full compile/cache/batch/shard pipeline is documented in DESIGN.md.
+
+A third mode rides on top of the compiled engine: **tiled out-of-core
+execution** (``TiledExpr``; DESIGN.md §7, docs/TILING.md). A schedule
+carrying ``tile={var: n}`` — written by hand or forced by
+``compile_expr(..., mem_budget=...)`` when the untiled allocation
+estimate exceeds the budget — streams coordinate-space tiles
+sequentially through ONE shared per-tile ``CompiledExpr`` (every tile
+after the first hits the plan cache) and folds each tile's partial COO
+into the running result with ``coord_ops.accumulate_coo``.
 """
 from __future__ import annotations
 
@@ -889,16 +898,35 @@ class CompiledExpr:
         return self._assemble_unsplit(sel(out["keys"]), sel(out["vals"]),
                                       sel(out["valid"]))
 
-    def _assemble_unsplit(self, keys, vals, valid) -> FiberTree:
-        """Decode a split-space COO result back into the ORIGINAL
-        coordinate space: each (vo, vi) level pair merges to vo*chunk+vi.
-        Split padding carries only explicit zeros, which are filtered."""
-        cols, vals = decode_live_coo(keys, vals, valid, self._strides)
+    @property
+    def orig_result_order(self) -> List[str]:
+        """The ORIGINAL result variables in storage (loop) order — the
+        column order of ``execute_coo`` coordinates."""
+        if self._out_merge is not None:
+            return [m[0] for m in self._out_merge]
+        return list(self.rvars)
+
+    def _live_coords(self, out) -> Tuple[np.ndarray, np.ndarray]:
+        """(coords, vals) of the live result in the ORIGINAL coordinate
+        space; one coordinate column per ``orig_result_order`` var (split
+        result levels re-merged, padding/zeros dropped)."""
+        cols, vals = decode_live_coo(out["keys"], out["vals"], out["valid"],
+                                     self._strides)
+        if self._out_merge is None:
+            return cols, vals
         coords = np.zeros((len(cols), len(self._out_merge)), dtype=np.int64)
         for k, (v, io, ii, chunk) in enumerate(self._out_merge):
             coords[:, k] = (cols[:, io] if ii is None
                             else cols[:, io] * chunk + cols[:, ii])
-        orig_vars = [m[0] for m in self._out_merge]
+        return coords, vals
+
+    def _assemble_unsplit(self, keys, vals, valid) -> FiberTree:
+        """Decode a split-space COO result back into the ORIGINAL
+        coordinate space: each (vo, vi) level pair merges to vo*chunk+vi.
+        Split padding carries only explicit zeros, which are filtered."""
+        coords, vals = self._live_coords(
+            {"keys": keys, "vals": vals, "valid": valid})
+        orig_vars = self.orig_result_order
         shape = tuple(self.low.orig_dims[v] for v in orig_vars)
         lhs = self.low.orig_assign.lhs
         ft = FiberTree.from_coords(
@@ -944,7 +972,8 @@ class CompiledExpr:
             for i in range(len(raws[0][name]["crds"]))]
             for name in raws[0]}
 
-    def _dispatch_single(self, flat, sig) -> FiberTree:
+    def _dispatch_out(self, flat, sig):
+        """One plan-cached execution; returns the raw keyed-COO ``out``."""
         self.stats["calls"] += 1
         if any(n > 1 for n in self.lane_ns):
             self.stats["lane_dispatches"] += 1
@@ -957,12 +986,33 @@ class CompiledExpr:
             plan = self._install_plan(sig, caps, batch=False)
         else:
             self.stats["plan_hits"] += 1
-        out = self._run_plan(plan, sig, flat, batch=False)
-        return self._assemble_out(out)
+        return self._run_plan(plan, sig, flat, batch=False)
+
+    def _dispatch_single(self, flat, sig) -> FiberTree:
+        return self._assemble_out(self._dispatch_out(flat, sig))
 
     def __call__(self, arrays: Dict[str, np.ndarray]) -> FiberTree:
         flat, sig = self._pad_flat(self._raw_flat(arrays))
         return self._dispatch_single(flat, sig)
+
+    def execute_coo(self, arrays: Dict[str, np.ndarray], *, hints=None
+                    ) -> Tuple[Optional[np.ndarray], Any]:
+        """Execute one operand set, returning the live result as a COO.
+
+        Returns ``(coords, vals)``: ``coords`` is ``(nnz, k)`` int64 in
+        the ORIGINAL coordinate space with one column per
+        ``orig_result_order`` variable; scalar expressions return
+        ``(None, float)``. This is the tile driver's per-tile entry
+        (``TiledExpr``) — the partial never round-trips through a
+        ``FiberTree``. ``hints`` overrides the per-level input buckets
+        (``_shared_hints`` form) so callers dispatching many related
+        operand sets — the tile stream — share ONE input signature and
+        therefore one plan."""
+        flat, sig = self._pad_flat(self._raw_flat(arrays), hints)
+        out = self._dispatch_out(flat, sig)
+        if "scalar" in out:
+            return None, float(out["scalar"])
+        return self._live_coords(out)
 
     def execute_many(self, arrays_list: Sequence[Dict[str, np.ndarray]]
                      ) -> List[FiberTree]:
@@ -1035,6 +1085,191 @@ class CompiledExpr:
 
 
 # ---------------------------------------------------------------------------
+# tiled out-of-core execution (DESIGN.md §7, docs/TILING.md)
+# ---------------------------------------------------------------------------
+
+class TiledExpr:
+    """Out-of-core driver: stream coordinate-space tiles through ONE
+    jit-cached per-tile engine, accumulating the partial COOs.
+
+    An expression whose untiled device allocation exceeds the memory
+    budget executes as a grid of coordinate tiles (``Schedule.tile``,
+    ``{var: n_tiles}``): every tiled variable's coordinate space
+    partitions into ``n`` contiguous chunks, and each grid cell runs the
+    SAME expression over zero-padded operand slices with the tiled
+    extents shrunk to one chunk (``tiling.slice_operands``). Because
+    every tile shares the expression, formats, schedule, and (padded)
+    extents, all tiles resolve to ONE process-wide ``CompiledExpr`` —
+    the first tile pays the capacity-record + trace cost and every
+    later tile hits the plan cache. Tile partials merge through
+    ``coord_ops.accumulate_coo`` (one ``keyed_union_reduce`` per tile):
+    contraction-tiled partials overlap (reduce-merge), result-tiled
+    partials are disjoint (concat-merge) — the same primitive serves
+    both. Peak device allocation is one tile's working set plus the
+    running result COO, never the untiled expression.
+
+    Built by ``compile_expr`` whenever the schedule carries ``tile`` or
+    a ``mem_budget`` forces one; quacks like ``CompiledExpr`` for the
+    serving paths (``__call__``/``execute``/``execute_batch``/
+    ``execute_many``/``stats``).
+    """
+
+    def __init__(self, expr, fmt: Format, schedule: Schedule,
+                 dims: Dict[str, int], *, use_kernels: bool = True,
+                 shard_lanes: Optional[bool] = None,
+                 mem_budget: Optional[int] = None,
+                 densities: Optional[Dict[str, float]] = None):
+        from . import tiling
+
+        self.assign: Assignment = (parse(expr) if isinstance(expr, str)
+                                   else expr)
+        self.fmt = fmt
+        self.schedule = schedule
+        self.dims = dict(dims)
+        tile = tiling.normalize_tile(schedule)
+        tiling.check_tile(self.assign, tile, schedule=schedule)
+        for v, n in tile.items():
+            if n > dims[v]:
+                raise ValueError(f"tile {v}:{n} exceeds its extent "
+                                 f"{dims[v]}")
+        self.tile_of = tile
+        self.n_tiles = tiling.n_tiles(tile)
+        self.inner_dims = tiling.tile_extents(self.dims, tile)
+        inner = dataclasses.replace(schedule, tile={})
+        self.mem_budget = (None if mem_budget is None
+                           else tiling.parse_budget(mem_budget))
+        self.tile_bytes = tiling.estimate_call_bytes(
+            self.assign, fmt, inner, self.inner_dims, densities=densities)
+        if self.mem_budget is not None and self.tile_bytes > self.mem_budget:
+            raise tiling.MemoryBudgetExceeded(
+                f"one tile of tile={tile} still needs "
+                f"~{tiling.format_bytes(self.tile_bytes)} > budget "
+                f"{tiling.format_bytes(self.mem_budget)}; tile finer",
+                estimate=self.tile_bytes, budget=self.mem_budget)
+        # ONE engine for every tile: identical expression/format/schedule/
+        # extents => identical canonical key => the process-wide cached
+        # CompiledExpr, whose plan cache all tiles share
+        self.engine = compile_expr(self.assign, fmt, inner, self.inner_dims,
+                                   use_kernels=use_kernels,
+                                   shard_lanes=shard_lanes)
+        self.rvars = self.engine.orig_result_order   # orig vars, loop order
+        self._scalar = not self.rvars
+        self._out_strides = [(v, self.dims[v]) for v in self.rvars]
+        bound = 1
+        for _, d in self._out_strides:
+            bound *= d
+        self._key_bound = bound if bound <= co.DENSE_REDUCE_BOUND else None
+        # running max input-bucket per (tensor, level) across tiles, so
+        # EVERY tile pads to one shared signature and hits one plan
+        self._hints: Dict[str, List[int]] = {}
+        self.stats = {"calls": 0, "tile_calls": 0, "tiles": self.n_tiles,
+                      "batch_calls": 0}
+
+    # engine facets the serving paths read ------------------------------
+    @property
+    def low(self):
+        return self.engine.low
+
+    @property
+    def par_n(self) -> int:
+        return self.engine.par_n
+
+    @property
+    def _shard_lanes(self) -> bool:
+        return self.engine._shard_lanes
+
+    @property
+    def _lane_mesh(self) -> int:
+        return self.engine._lane_mesh
+
+    # -- execution -------------------------------------------------------
+    def _global_keys(self, coords: np.ndarray,
+                     tids: Dict[str, int]) -> np.ndarray:
+        """Shift a tile's result coordinates by its offsets and flatten
+        into int64 keys over the FULL result extents."""
+        keys = np.zeros(len(coords), dtype=np.int64)
+        for col, (v, dim) in enumerate(self._out_strides):
+            c = coords[:, col]
+            if v in self.tile_of:
+                c = c + tids[v] * self.inner_dims[v]
+            keys = keys * dim + c
+        return keys
+
+    def _measure_hints(self, arrays: Dict[str, np.ndarray]) -> None:
+        """Grow the shared per-level input buckets to cover every tile of
+        this operand set. Host-side only (fibertrees, no device arrays):
+        the measuring pass costs one extra walk over the operands but
+        keeps all tiles on ONE input signature — the first tile pays the
+        trace, the rest hit the plan cache. Deliberately NOT the
+        ``execute_many`` shape (build every raw flat once, derive shared
+        hints, dispatch) — that would hold every tile's padded device
+        arrays simultaneously, which is exactly the allocation the
+        memory budget exists to forbid; here at most one tile is on the
+        device at a time, and the hints persist across calls."""
+        from . import tiling
+
+        for tids in tiling.tile_grid(self.tile_of):
+            sliced = tiling.slice_operands(self.assign, arrays, self.dims,
+                                           self.tile_of, tids)
+            for name, ft in self.engine.low.build_inputs(sliced).items():
+                cur = self._hints.setdefault(name, [0] * len(ft.levels))
+                for i, lv in enumerate(ft.levels):
+                    if lv.format == COMPRESSED:
+                        cur[i] = max(cur[i], _bucket(len(lv.crd)))
+
+    def __call__(self, arrays: Dict[str, np.ndarray]) -> FiberTree:
+        """Execute one operand set tile by tile; returns the result
+        ``FiberTree`` in the ORIGINAL coordinate space, exactly as the
+        untiled ``CompiledExpr`` would."""
+        from . import tiling
+
+        self.stats["calls"] += 1
+        self._measure_hints(arrays)
+        total = 0.0
+        acc_k = np.zeros(0, np.int64)
+        acc_v = np.zeros(0, np.float32)
+        for tids in tiling.tile_grid(self.tile_of):
+            sliced = tiling.slice_operands(self.assign, arrays, self.dims,
+                                           self.tile_of, tids)
+            coords, vals = self.engine.execute_coo(sliced,
+                                                   hints=self._hints)
+            self.stats["tile_calls"] += 1
+            if coords is None:                       # scalar partial
+                total += vals
+                continue
+            acc_k, acc_v = co.accumulate_coo(
+                acc_k, acc_v, self._global_keys(coords, tids), vals,
+                key_bound=self._key_bound)
+        if self._scalar:
+            return FiberTree.from_dense(np.asarray(float(total)), "")
+        # coo_to_fibertree also drops zeros (cancelled partial sums)
+        lhs = self.assign.lhs
+        return coo_to_fibertree(
+            acc_k, acc_v, np.ones(len(acc_k), bool), self._out_strides,
+            tuple(self.dims[v] for v in self.rvars),
+            self.fmt.of(lhs.tensor, len(self.rvars))
+            or "c" * len(self.rvars),
+            tuple(lhs.vars.index(v) for v in self.rvars))
+
+    def execute(self, arrays: Dict[str, np.ndarray]) -> FiberTree:
+        """Alias of ``__call__`` (API parity with ``CompiledExpr``)."""
+        return self(arrays)
+
+    def execute_batch(self, arrays_list: Sequence[Dict[str, np.ndarray]]
+                      ) -> List[FiberTree]:
+        """Requests execute one after another — under a memory budget the
+        tile stream IS the batching axis (each tile still reuses the
+        shared per-tile plan, so warm requests never re-trace)."""
+        self.stats["batch_calls"] += 1
+        return [self(a) for a in arrays_list]
+
+    execute_many = execute_batch
+
+
+_TILED: Dict[Tuple, TiledExpr] = {}
+
+
+# ---------------------------------------------------------------------------
 # public API
 # ---------------------------------------------------------------------------
 
@@ -1042,7 +1277,9 @@ def compile_expr(expr, fmt: Format, schedule,
                  dims: Dict[str, int], *,
                  use_kernels: bool = True,
                  shard_lanes: Optional[bool] = None,
-                 sparsity=None) -> CompiledExpr:
+                 sparsity=None,
+                 mem_budget=None,
+                 auto_tile: bool = True):
     """Compile an expression once into a jit-cached executable engine.
 
     Args:
@@ -1058,14 +1295,26 @@ def compile_expr(expr, fmt: Format, schedule,
         shard_lanes: §4.4 lane placement — None auto-shards over a device
             mesh when one fits, False forces a single-device vmap,
             True/int requires a mesh (of at most that many devices).
-        sparsity: density hint for ``schedule="auto"`` (float or
-            per-tensor dict; defaults to ``autoschedule.DEFAULT_SPARSITY``).
+        sparsity: density hint for ``schedule="auto"`` and the memory
+            estimator (float or per-tensor dict; defaults to
+            ``autoschedule.DEFAULT_SPARSITY``).
+        mem_budget: peak-device-allocation budget in bytes (int or a
+            string like ``"64MB"``). A schedule whose untiled estimate
+            exceeds it is routed through the out-of-core ``TiledExpr``
+            driver (``auto_tile=True``, the default) or refused with
+            ``tiling.MemoryBudgetExceeded`` (``auto_tile=False``);
+            ``schedule="auto"`` additionally bounds the schedule search
+            with the budget (DESIGN.md §7, docs/TILING.md).
+        auto_tile: set False to refuse over-budget expressions instead
+            of tiling them.
 
     Returns:
-        The process-wide ``CompiledExpr`` engine for this configuration:
-        repeated calls with the same (expression, formats, schedule, dims)
-        return the SAME engine, so its plans and the underlying jit cache
-        are shared. The schedule's split/parallelize spec is part of the
+        The process-wide engine for this configuration — a
+        ``CompiledExpr``, or a ``TiledExpr`` when the schedule carries
+        ``tile`` (explicitly or via the budget). Repeated calls with the
+        same (expression, formats, schedule, dims) return the SAME
+        engine, so its plans and the underlying jit cache are shared.
+        The schedule's split/parallelize/tile spec is part of the
         canonical key: each scheduled variant is its own engine.
 
     >>> import numpy as np
@@ -1075,7 +1324,20 @@ def compile_expr(expr, fmt: Format, schedule,
     ...                    Schedule(loop_order=("i", "j")), {"i": 2, "j": 3})
     >>> eng({"B": np.eye(2, 3), "c": np.ones(3)}).to_dense()
     array([1., 1.])
+
+    A tiled schedule streams out-of-core with identical results:
+
+    >>> tiled = compile_expr("x(i) = B(i,j) * c(j)",
+    ...                      Format({"B": "cc", "c": "c"}),
+    ...                      Schedule(loop_order=("i", "j"),
+    ...                               tile={"j": 3}), {"i": 2, "j": 3})
+    >>> tiled.n_tiles, tiled({"B": np.eye(2, 3), "c": np.ones(3)}).to_dense()
+    (3, array([1., 1.]))
     """
+    from . import tiling
+
+    if mem_budget is not None:
+        mem_budget = tiling.parse_budget(mem_budget)
     if isinstance(schedule, str):
         if schedule != "auto":
             raise ValueError(
@@ -1090,14 +1352,53 @@ def compile_expr(expr, fmt: Format, schedule,
             dev = None                       # full host device count
         else:
             dev = int(shard_lanes)
+        # auto_tile=False means "refuse rather than tile": keep the
+        # budget OUT of the search (a budgeted search returns tiled
+        # schedules) so the refusal gate below sees an untiled winner
+        kw = ({} if mem_budget is None or not auto_tile
+              else {"mem_budget": mem_budget})
         schedule = resolve_schedule(expr, fmt, dims, sparsity=sparsity,
-                                    device_count=dev).schedule
+                                    device_count=dev, **kw).schedule
     assign = parse(expr) if isinstance(expr, str) else expr
     # resolve the lane-mesh size BEFORE keying, so shard_lanes=None and an
     # explicit equivalent request share one engine (and its plan/jit caches)
     par_n = max([n for n in schedule.parallelize.values() if n > 1],
                 default=1)
     mesh = _resolve_shard_lanes(shard_lanes, par_n)
+
+    # -- memory-budget gate + tiled routing (DESIGN.md §7) ----------------
+    if mem_budget is not None or schedule.tile:
+        densities = None
+        if sparsity is not None:
+            from .autoschedule import resolve_densities
+            densities = resolve_densities(assign, sparsity)
+        if mem_budget is not None and not schedule.tile:
+            if not auto_tile:
+                # refuse over-budget untiled requests loudly
+                tiling.require_budget(assign, fmt, schedule, dims,
+                                      mem_budget, densities=densities)
+            else:
+                plan = tiling.resolve_plan(assign, fmt, schedule, dims,
+                                           mem_budget, densities=densities)
+                if plan.tile:
+                    schedule = dataclasses.replace(schedule,
+                                                   tile=dict(plan.tile))
+        if schedule.tile:
+            # densities steer the per-tile budget check (and the logged
+            # estimates), so they partition the tiled-engine cache
+            tkey = (expr_cache_key(assign, fmt, schedule, dims),
+                    use_kernels, mesh, mem_budget,
+                    tuple(sorted(densities.items())) if densities
+                    else None)
+            teng = _TILED.get(tkey)
+            if teng is None:
+                teng = TiledExpr(assign, fmt, schedule, dims,
+                                 use_kernels=use_kernels,
+                                 shard_lanes=shard_lanes,
+                                 mem_budget=mem_budget, densities=densities)
+                _TILED[tkey] = teng
+            return teng
+
     key = (expr_cache_key(assign, fmt, schedule, dims), use_kernels, mesh)
     eng = _COMPILED.get(key)
     if eng is None:
@@ -1109,6 +1410,7 @@ def compile_expr(expr, fmt: Format, schedule,
 
 def clear_compile_cache() -> None:
     _COMPILED.clear()
+    _TILED.clear()
 
 
 def execute_graph(graph_: g.Graph, tensors: Dict[str, FiberTree],
@@ -1129,6 +1431,11 @@ def execute_expr(expr: str, fmt: Format, schedule: Schedule,
             return compile_expr(expr, fmt, schedule, dims)(arrays)
         except NotImplementedError:
             pass
+    # the eager reference path has no static capacities to bound, so a
+    # tile spec is moot here: strip it rather than hand Custard a tiled
+    # schedule (which it rejects) — results are identical either way
+    if schedule.tile:
+        schedule = dataclasses.replace(schedule, tile={})
     low = lower(expr, fmt, schedule, dims)
     tensors = low.build_inputs(arrays)
     rvars = low.result_vars
@@ -1361,9 +1668,11 @@ class CompiledProgram:
     output; fused-away intermediates are never built and do not appear.
     """
 
-    def __init__(self, lp, *, use_kernels: bool = True):
+    def __init__(self, lp, *, use_kernels: bool = True, mem_budget=None,
+                 sparsity=None):
         self.lp = lp
         self.cache_key = _program_key(lp)
+        self.mem_budget = mem_budget
         segsum = intersect = None
         if use_kernels:
             try:
@@ -1375,9 +1684,14 @@ class CompiledProgram:
         self.units: List[Tuple[str, List[int], Any]] = []
         for comp in lp.components():
             if len(comp) == 1:
+                # a memory budget routes over-sized stages through the
+                # tiled driver; fused chains keep their own working sets
+                # (tiling a stage forbids fusing it — see docs/TILING.md)
                 stg = lp.stages[comp[0]]
                 eng = compile_expr(stg.assign, lp.fmt, stg.schedule,
-                                   stg.dims, use_kernels=use_kernels)
+                                   stg.dims, use_kernels=use_kernels,
+                                   mem_budget=mem_budget,
+                                   sparsity=sparsity)
                 self.units.append(("expr", comp, eng))
             else:
                 chain = _FusedChain([lp.stages[i] for i in comp],
@@ -1430,12 +1744,12 @@ def _program_key(lp) -> str:
     return program_cache_key(lp)
 
 
-_COMPILED_PROGRAMS: Dict[Tuple[str, bool], CompiledProgram] = {}
+_COMPILED_PROGRAMS: Dict[Tuple, CompiledProgram] = {}
 
 
 def compile_program(program, fmt: Format, schedules, dims: Dict[str, int],
                     *, use_kernels: bool = True, sparsity=None,
-                    fuse: bool = True) -> CompiledProgram:
+                    fuse: bool = True, mem_budget=None) -> CompiledProgram:
     """Compile a multi-assignment program once; jit-cached per cascade.
 
     Args:
@@ -1451,6 +1765,11 @@ def compile_program(program, fmt: Format, schedules, dims: Dict[str, int],
         sparsity: density hint for ``schedules="auto"``.
         fuse: set False to force materialization between all stages (the
             unfused comparison baseline).
+        mem_budget: peak-device-allocation budget in bytes (int or
+            ``"64MB"``-style string); unfused stages whose untiled
+            estimate exceeds it execute through the tiled driver
+            (docs/TILING.md). Fused chains are not tiled — pass
+            ``fuse=False`` with a budget for a fully tiled program.
 
     Returns:
         The process-wide ``CompiledProgram`` for this configuration —
@@ -1471,12 +1790,26 @@ def compile_program(program, fmt: Format, schedules, dims: Dict[str, int],
     (['x'], [1.0, 1.0])
     """
     from .program import lower_program
+    from . import tiling
+    if mem_budget is not None:
+        mem_budget = tiling.parse_budget(mem_budget)
     lp = lower_program(program, fmt, schedules, dims, sparsity=sparsity,
                        fuse=fuse)
-    key = (_program_key(lp), use_kernels)
+    # with a budget, the sparsity hint steers the per-stage tiling
+    # decision, so it joins the key (without one it only feeds "auto"
+    # resolution, which is already reflected in the program key);
+    # canonicalized so dict order / numpy scalars can't split the cache
+    if mem_budget is None or sparsity is None:
+        skey = None
+    elif isinstance(sparsity, dict):
+        skey = tuple(sorted((k, float(v)) for k, v in sparsity.items()))
+    else:
+        skey = float(sparsity)
+    key = (_program_key(lp), use_kernels, mem_budget, skey)
     hit = _COMPILED_PROGRAMS.get(key)
     if hit is None:
-        hit = CompiledProgram(lp, use_kernels=use_kernels)
+        hit = CompiledProgram(lp, use_kernels=use_kernels,
+                              mem_budget=mem_budget, sparsity=sparsity)
         _COMPILED_PROGRAMS[key] = hit
     return hit
 

@@ -171,6 +171,11 @@ def numpy_reference(program: Union[str, Program],
     """Dense numpy oracle: evaluate every stage with ``np.einsum``.
 
     Returns the environment of ALL tensors (inputs + every stage result).
+
+    >>> out = numpy_reference("T(i,k) = B(i,j) * C(j,k)",
+    ...                       {"B": np.eye(2), "C": 2 * np.eye(2)})
+    >>> out["T"].tolist()
+    [[2.0, 0.0], [0.0, 2.0]]
     """
     program = parse_program(program)
     env = {k: np.asarray(v, dtype=float) for k, v in arrays.items()}
@@ -585,6 +590,16 @@ def simulate_program(program, fmt: Format, schedules, dims: Dict[str, int],
     Fused consumers run with the producer's writer streams spliced over
     their intermediate scanners; everything else runs ``simulate_expr``
     on materialized operands.
+
+    >>> res = simulate_program(
+    ...     "T(i,k) = B(i,j) * C(j,k); x(i) = T(i,k) * d(k)",
+    ...     Format(default="c"),
+    ...     {"T": Schedule(loop_order=("i", "j", "k")),
+    ...      "x": Schedule(loop_order=("i", "k"))},
+    ...     {"i": 2, "j": 2, "k": 2},
+    ...     {"B": np.eye(2), "C": np.eye(2), "d": np.ones(2)})
+    >>> res.dense["x"].tolist(), [d.fused for d in res.decisions]
+    ([1.0, 1.0], [True])
     """
     from .simulator import Simulator, simulate_expr
 

@@ -52,9 +52,13 @@ class Schedule:
     (tensor, var)), ``skip`` (§4.2 coordinate skipping), ``bitvector``
     (§4.3), ``split`` (§4.1 iteration splitting, ``{var: factor}``) and
     ``parallelize`` (§4.4 lane duplication, ``{var: lanes}``, one var).
-    Instead of hand-picking, pass the string ``"auto"`` where a Schedule
-    is expected (``custard.lower``, ``jax_backend.compile_expr``) to let
-    the autoscheduler search the space — see docs/SCHEDULING.md.
+    ``tile`` (``{var: n_tiles}``) is the out-of-core knob: the variable's
+    coordinate space partitions into ``n`` tiles that stream SEQUENTIALLY
+    through one compiled per-tile engine, bounding peak device allocation
+    (docs/TILING.md; DESIGN.md §7). Instead of hand-picking, pass the
+    string ``"auto"`` where a Schedule is expected (``custard.lower``,
+    ``jax_backend.compile_expr``) to let the autoscheduler search the
+    space — see docs/SCHEDULING.md.
 
     >>> sch = Schedule(loop_order=("i", "k", "j"), split={"k": 4},
     ...                parallelize={"k": 4})
@@ -71,6 +75,10 @@ class Schedule:
     # to the split-outer half when the variable is also split)
     parallelize: Dict[str, int] = dataclasses.field(default_factory=dict)
     reduce_empty: Optional[str] = None                     # override zero/remove
+    # out-of-core tiling: {var: n_tiles}; tiles execute sequentially
+    # through the tiled driver (jax_backend.TiledExpr), never inside one
+    # lowered graph — custard.lower rejects schedules that still carry it
+    tile: Dict[str, int] = dataclasses.field(default_factory=dict)
 
     def tensor_path(self, access_vars: Sequence[str]) -> Tuple[str, ...]:
         """The tensor's level order under this schedule (concordant)."""
@@ -83,9 +91,10 @@ def schedule_to_dict(schedule: Schedule) -> dict:
     cache's on-disk record; see DESIGN.md §5).
 
     >>> d = schedule_to_dict(Schedule(loop_order=("i", "k", "j"),
-    ...                               split={"k": 4}, parallelize={"k": 4}))
-    >>> d["loop_order"], d["split"], d["parallelize"]
-    (['i', 'k', 'j'], {'k': 4}, {'k': 4})
+    ...                               split={"k": 4}, parallelize={"k": 4},
+    ...                               tile={"j": 2}))
+    >>> d["loop_order"], d["split"], d["parallelize"], d["tile"]
+    (['i', 'k', 'j'], {'k': 4}, {'k': 4}, {'j': 2})
     """
     return {
         "loop_order": list(schedule.loop_order),
@@ -95,13 +104,15 @@ def schedule_to_dict(schedule: Schedule) -> dict:
         "split": {k: int(v) for k, v in schedule.split.items()},
         "parallelize": {k: int(v) for k, v in schedule.parallelize.items()},
         "reduce_empty": schedule.reduce_empty,
+        "tile": {k: int(v) for k, v in schedule.tile.items()},
     }
 
 
 def schedule_from_dict(d: dict) -> Schedule:
     """Inverse of ``schedule_to_dict``.
 
-    >>> s = Schedule(loop_order=("i", "j"), skip=frozenset({"j"}))
+    >>> s = Schedule(loop_order=("i", "j"), skip=frozenset({"j"}),
+    ...              tile={"i": 4})
     >>> schedule_from_dict(schedule_to_dict(s)) == s
     True
     """
@@ -113,7 +124,8 @@ def schedule_from_dict(d: dict) -> Schedule:
         split={k: int(v) for k, v in d.get("split", {}).items()},
         parallelize={k: int(v)
                      for k, v in d.get("parallelize", {}).items()},
-        reduce_empty=d.get("reduce_empty"))
+        reduce_empty=d.get("reduce_empty"),
+        tile={k: int(v) for k, v in d.get("tile", {}).items()})
 
 
 def split_schedule(schedule: Schedule) -> Schedule:

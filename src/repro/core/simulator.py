@@ -718,18 +718,27 @@ class LaneSim:
 
 @dataclasses.dataclass
 class ExprSimResult:
-    """Simulation of a fully scheduled expression (split + parallel lanes).
+    """Simulation of a fully scheduled expression (split + parallel lanes
+    + out-of-core tiles).
 
     ``dense`` is the merged result in the ORIGINAL coordinate space.
     ``cycles`` models the §4.4 parallel machine: all lanes run
     concurrently, so the steady-state term is the max over lanes' per-block
     work joined with the lane-merge stage's work, plus pipeline fill.
+    Tiled schedules (``Schedule.tile``) stream their tiles back-to-back
+    through one pipeline: per-tile steady-state terms ADD, the pipeline
+    fills once, and the tile-merge stage runs concurrently downstream —
+    ``cycles = max(sum of per-tile steady states, merge work) + fill`` —
+    so modeled numbers stay comparable with the measured tiled engine
+    (``jax_backend.TiledExpr``). ``tiles`` is the tile-grid volume (1 =
+    untiled).
     """
 
     dense: Any
     cycles: int
     lanes: List[LaneSim]
     merge_work: int
+    tiles: int = 1
 
     @property
     def lane_cycles(self) -> List[int]:
@@ -748,6 +757,15 @@ def downsample_operands(assign, arrays: Dict[str, "np.ndarray"],
     the downsampled coordinate space; deterministic by construction.
     Tensors absent from ``arrays`` are skipped (the autoscheduler fills
     them with synthetic operands from the sparsity hint).
+
+    >>> import numpy as np
+    >>> from repro.core.einsum import parse
+    >>> arrs, sdims = downsample_operands(
+    ...     parse("x(i) = B(i,j) * c(j)"),
+    ...     {"B": np.ones((100, 100)), "c": np.ones(100)},
+    ...     {"i": 100, "j": 100}, max_dim=8)
+    >>> arrs["B"].shape, sdims
+    ((8, 8), {'i': 8, 'j': 8})
     """
     sdims = {v: min(int(d), int(max_dim)) for v, d in dims.items()}
     out: Dict[str, Any] = {}
@@ -767,7 +785,17 @@ def sampled_cycles(expr, fmt, schedule, arrays, dims, *,
     """One-shot cost probe for a single schedule: downsample + simulate,
     return the cycle count. (``autoschedule.search`` applies the same
     downsample-then-simulate combination, but downsamples once across its
-    whole candidate set.)"""
+    whole candidate set.)
+
+    >>> import numpy as np
+    >>> from repro.core.schedule import Format, Schedule
+    >>> B = np.eye(64)
+    >>> sampled_cycles("x(i) = B(i,j) * c(j)", Format({"B": "cc"}),
+    ...                Schedule(loop_order=("i", "j")),
+    ...                {"B": B, "c": np.ones(64)}, {"i": 64, "j": 64},
+    ...                max_dim=8) > 0
+    True
+    """
     from .einsum import parse
 
     assign = parse(expr) if isinstance(expr, str) else expr
@@ -776,16 +804,38 @@ def sampled_cycles(expr, fmt, schedule, arrays, dims, *,
 
 
 def simulate_expr(expr, fmt, schedule, arrays, dims) -> ExprSimResult:
-    """Lower (split + parallelize) and simulate an expression end-to-end.
+    """Lower (split + parallelize + tile) and simulate an expression
+    end-to-end.
 
     Serial schedules run the combined multi-term graph exactly as
     ``simulate`` always has. Parallel schedules run every (term, lane)
     subgraph independently — lane ``l`` of a parallelized term sees only
     chunk ``l`` of the parallelized variable's coordinate space — and a
     final merge stage sums the signed lane outputs at equal coordinates
-    (the lane-join unioner/reducer of §4.4).
+    (the lane-join unioner/reducer of §4.4). Tiled schedules
+    (``Schedule.tile``, the out-of-core knob) simulate every coordinate
+    tile through the tile-free inner schedule and combine them under the
+    streaming cycle law described on ``ExprSimResult``.
+
+    >>> import numpy as np
+    >>> from repro.core.schedule import Format, Schedule
+    >>> B = np.array([[1., 0., 2.], [0., 3., 0.]])
+    >>> res = simulate_expr("x(i) = B(i,j) * c(j)", Format({"B": "cc"}),
+    ...                     Schedule(loop_order=("i", "j")),
+    ...                     {"B": B, "c": np.ones(3)}, {"i": 2, "j": 3})
+    >>> res.dense.tolist(), res.tiles
+    ([3.0, 3.0], 1)
+    >>> tiled = simulate_expr("x(i) = B(i,j) * c(j)", Format({"B": "cc"}),
+    ...                       Schedule(loop_order=("i", "j"),
+    ...                                tile={"j": 3}),
+    ...                       {"B": B, "c": np.ones(3)}, {"i": 2, "j": 3})
+    >>> tiled.dense.tolist(), tiled.tiles
+    ([3.0, 3.0], 3)
     """
     from .custard import lower
+
+    if getattr(schedule, "tile", None):
+        return _simulate_tiled(expr, fmt, schedule, arrays, dims)
 
     low = lower(expr, fmt, schedule, dims)
     tensors = low.build_inputs(arrays)
@@ -825,3 +875,64 @@ def simulate_expr(expr, fmt, schedule, arrays, dims) -> ExprSimResult:
     cycles = max(steady, merge_work) + fill
     return ExprSimResult(dense=dense, cycles=cycles, lanes=lanes,
                          merge_work=merge_work)
+
+
+def _simulate_tiled(expr, fmt, schedule, arrays, dims) -> ExprSimResult:
+    """Simulate a ``Schedule.tile`` schedule: one inner simulation per
+    coordinate tile, combined under the streaming law.
+
+    Tiles stream back-to-back through ONE pipeline (the tiled engine
+    reuses a single compiled per-tile callable), so their steady-state
+    terms ADD and the pipeline fills once; the tile-merge stage — each
+    tile's partial folds into the running result — runs concurrently
+    downstream:  ``cycles = max(Σ steady_t, Σ merge_t) + fill``.
+    """
+    from . import tiling
+    from .einsum import parse
+
+    assign = parse(expr) if isinstance(expr, str) else expr
+    tile = tiling.normalize_tile(schedule)
+    inner = dataclasses.replace(schedule, tile={})
+    if not tile:
+        return simulate_expr(assign, fmt, inner, arrays, dims)
+    tiling.check_tile(assign, tile, schedule=schedule)
+    ext = tiling.tile_extents(dims, tile)
+    lhs_vars = assign.lhs.vars
+    out: Any = (np.zeros(tuple(dims[v] for v in lhs_vars)) if lhs_vars
+                else 0.0)
+    steady_sum, fill, merge_work = 0, 0, 0
+    lanes: List[LaneSim] = []
+    for tids in tiling.tile_grid(tile):
+        sliced = tiling.slice_operands(assign, arrays, dims, tile, tids)
+        res = simulate_expr(assign, fmt, inner, sliced, ext)
+        lanes.extend(res.lanes)
+        steady_sum += max((max(ls.result.work.values(), default=1)
+                           for ls in res.lanes), default=1)
+        fill = max(fill, max((ls.result.graph.depth()
+                              for ls in res.lanes), default=0) + 1)
+        # the tile's live partial folds into the running result (the
+        # engine's accumulate_coo merge), on top of any lane merge it
+        # already paid internally
+        merge_work += res.merge_work + int(np.count_nonzero(res.dense)) + 1
+        if lhs_vars:
+            d = np.asarray(res.dense)
+            idx = []
+            for ax, v in enumerate(lhs_vars):
+                if v in tile:
+                    lo = tids[v] * ext[v]
+                    hi = min(lo + ext[v], dims[v])
+                    if hi <= lo:     # tile fully past the extent: an
+                        idx = None   # all-padding cell, nothing to place
+                        break
+                    idx.append(slice(lo, hi))
+                    d = d[(slice(None),) * ax + (slice(0, hi - lo),)]
+                else:
+                    idx.append(slice(None))
+            if idx is not None:
+                out[tuple(idx)] += d
+        else:
+            out = out + res.dense
+    cycles = max(steady_sum, merge_work) + fill
+    return ExprSimResult(dense=out if lhs_vars else np.asarray(out),
+                         cycles=cycles, lanes=lanes, merge_work=merge_work,
+                         tiles=tiling.n_tiles(tile))

@@ -29,6 +29,14 @@ batched sparse-expression serving through the compiled SAM engine.
     PYTHONPATH=src python -m repro.launch.serve \
         --sam "T(i,j) = B(i,j) * C(i,k) * D(j,k); A(i,j) = T(i,k) * E(k,j)" \
         --sam-dims i=32,j=32,k=32 --sam-density 0.2 --batch 4
+
+    # out-of-core serving under a memory budget: a request whose untiled
+    # allocation estimate exceeds the budget streams coordinate-space
+    # tiles through one jit-cached per-tile engine (docs/TILING.md)
+    PYTHONPATH=src python -m repro.launch.serve \
+        --sam "X(i,j) = B(i,k) * C(k,j)" --sam-order ikj \
+        --sam-formats B=cc,C=dd --sam-dims i=512,j=512,k=512 \
+        --mem-budget 24MB --batch 2 --reps 2
 """
 from __future__ import annotations
 
@@ -106,7 +114,7 @@ def _parse_kv(text: str, cast=str):
 def serve_sam(expr: str, order: str, formats, dims, *, batch: int = 8,
               reps: int = 8, density: float = 0.1, seed: int = 0,
               split=None, devices: int = 0, autotune: bool = False,
-              log=print):
+              mem_budget=None, log=print):
     """Sparse-expression serving: compile ONCE, then dispatch batches of
     same-format operands through the vmapped jit-cached engine.
 
@@ -119,9 +127,14 @@ def serve_sam(expr: str, order: str, formats, dims, *, batch: int = 8,
     (cost-model ranking, ``core.autoschedule``) and persists the winner in
     the on-disk schedule cache, so every later request with the same
     cache key — same expression/format, dims bucket, sparsity bucket —
-    serves compiled with NO search. Returns (results of the last
-    dispatch, engine stats).
+    serves compiled with NO search. ``mem_budget`` (bytes or ``"64MB"``)
+    bounds peak device allocation: requests whose untiled estimate
+    exceeds it route through the out-of-core tiled driver automatically
+    (docs/TILING.md). Returns (results of the last dispatch, engine
+    stats).
     """
+    from ..core import tiling
+
     if devices and jax.device_count() < devices:
         raise SystemExit(
             f"--devices {devices} requested but only {jax.device_count()} "
@@ -132,12 +145,15 @@ def serve_sam(expr: str, order: str, formats, dims, *, batch: int = 8,
     if autotune and split:
         raise SystemExit("--autotune searches the schedule (including "
                          "splits); drop --split")
+    if mem_budget is not None:
+        mem_budget = tiling.parse_budget(mem_budget)
     fmt = Format(dict(formats))
     if autotune:
         from ..core.autoschedule import resolve_schedule
 
+        kw = {} if mem_budget is None else {"mem_budget": mem_budget}
         res = resolve_schedule(expr, fmt, dims, sparsity=density,
-                               device_count=devices or None)
+                               device_count=devices or None, **kw)
         sch = res.schedule
         if res.cache_hit:
             log(f"[serve-sam] autotune: schedule cache HIT -> "
@@ -178,12 +194,23 @@ def serve_sam(expr: str, order: str, formats, dims, *, batch: int = 8,
                if autotune else
                "pick a split factor a device subset divides"))
     eng = compile_expr(expr, fmt, sch, dims,
-                       shard_lanes=devices if devices else None)
+                       shard_lanes=devices if devices else None,
+                       sparsity=density, mem_budget=mem_budget)
     # lanes shard over the device mesh only on the single-call path (the
     # batch path nests lanes inside the outer vmap, which cannot carry a
     # shard_map); with a mesh present, dispatch requests one by one so
     # every request's lanes actually spread across the devices
     shard = eng._shard_lanes
+    tiled = getattr(eng, "tile_of", None)
+    if tiled:
+        log(f"[serve-sam] mem-budget "
+            f"{tiling.format_bytes(mem_budget) if mem_budget else 'n/a'}: "
+            f"request routed OUT-OF-CORE -> tile={tiled} "
+            f"({eng.n_tiles} tiles, ~{tiling.format_bytes(eng.tile_bytes)}"
+            f"/tile; tiles stream through one jit-cached per-tile plan)")
+    elif mem_budget is not None:
+        log(f"[serve-sam] mem-budget {tiling.format_bytes(mem_budget)}: "
+            f"untiled estimate fits, serving in-core")
     if split:
         log(f"[serve-sam] split={split} parallelize={sch.parallelize}: "
             f"{eng.par_n}-lane {eng.low.merge_kind}-merge, "
@@ -230,7 +257,7 @@ def serve_sam(expr: str, order: str, formats, dims, *, batch: int = 8,
 
 def serve_program(text: str, formats, dims, *, batch: int = 8,
                   reps: int = 8, density: float = 0.1, seed: int = 0,
-                  autotune: bool = False, log=print):
+                  autotune: bool = False, mem_budget=None, log=print):
     """Multi-expression program serving: compile the cascade ONCE
     (``jax_backend.compile_program``), then dispatch batches of operand
     sets through it.
@@ -239,14 +266,17 @@ def serve_program(text: str, formats, dims, *, batch: int = 8,
     the intermediates living on device; illegal fusions materialize
     between stages (the decisions are logged). ``autotune=True`` resolves
     every stage's schedule through the autoscheduler + persistent
-    schedule cache. Returns (results of the last dispatch, program stats).
+    schedule cache. ``mem_budget`` routes over-sized unfused stages
+    through the out-of-core tiled driver (docs/TILING.md). Returns
+    (results of the last dispatch, program stats).
     """
     prog = parse_program(text)
     fmt = Format(dict(formats))
     schedules = "auto" if autotune else {
         a.lhs.tensor: Schedule(loop_order=tuple(a.all_vars))
         for a in prog.assigns}
-    cp = compile_program(prog, fmt, schedules, dims, sparsity=density)
+    cp = compile_program(prog, fmt, schedules, dims, sparsity=density,
+                         mem_budget=mem_budget)
     for d in cp.decisions:
         src, dst = prog.names[d.producer], prog.names[d.consumer]
         log(f"[serve-program] {d.tensor}: {src} -> {dst} "
@@ -254,6 +284,12 @@ def serve_program(text: str, formats, dims, *, batch: int = 8,
                else f"materialized ({d.reason})"))
     if not cp.decisions:
         log("[serve-program] single-stage program (nothing to fuse)")
+    for kind, comp, unit in cp.units:
+        if kind == "expr" and getattr(unit, "tile_of", None):
+            from ..core import tiling
+            log(f"[serve-program] stage {unit.assign.lhs.tensor}: "
+                f"OUT-OF-CORE tile={unit.tile_of} ({unit.n_tiles} tiles, "
+                f"~{tiling.format_bytes(unit.tile_bytes)}/tile)")
     rng = np.random.default_rng(seed)
 
     def operand_set():
@@ -325,6 +361,11 @@ def main(argv=None):
                          "lanes) with the simulator cost model on the "
                          "first request per shape; later requests hit the "
                          "persistent schedule cache and serve compiled")
+    ap.add_argument("--mem-budget", default=None, metavar="BYTES",
+                    help="peak device-allocation budget (e.g. 64MB or "
+                         "67108864); requests whose untiled estimate "
+                         "exceeds it stream through the out-of-core "
+                         "tiled engine automatically (docs/TILING.md)")
     args = ap.parse_args(argv)
 
     if args.sam and ";" in args.sam:
@@ -343,7 +384,8 @@ def main(argv=None):
         results, _ = serve_program(args.sam, _parse_kv(args.sam_formats),
                                    dims, batch=args.batch, reps=args.reps,
                                    density=args.sam_density,
-                                   autotune=args.autotune)
+                                   autotune=args.autotune,
+                                   mem_budget=args.mem_budget)
         return results
 
     if args.sam:
@@ -359,7 +401,8 @@ def main(argv=None):
                                density=args.sam_density,
                                split=_parse_kv(args.split, int),
                                devices=args.devices,
-                               autotune=args.autotune)
+                               autotune=args.autotune,
+                               mem_budget=args.mem_budget)
         return results
 
     cfg = get_config(args.arch, reduced=args.reduced)

@@ -2,7 +2,8 @@
 
 Moments are stored in ``state_dtype`` (bf16 by default) and upcast at the
 update — the distributed-memory trick that lets deepseek-v3-671b training
-fit 512 v5e chips (napkin in DESIGN.md §6). All math runs in fp32.
+fit 512 v5e chips (napkin; see the DESIGN.md §8 deviations ledger). All
+math runs in fp32.
 """
 from __future__ import annotations
 

@@ -13,7 +13,9 @@ what the dense numpy oracle computes.
   bit-compatible with the unsplit schedule in both backends;
 * ``test_sharded_dispatch_forced_multi_device`` — the shard_map lane path
   on a forced multi-device host, in a subprocess (XLA device count is
-  fixed at jax import).
+  fixed at jax import);
+* ``test_random_tiled_conformance`` — random einsums x RANDOM tile grids
+  (the out-of-core layer): tiled == untiled == numpy in both backends.
 """
 import os
 import subprocess
@@ -190,6 +192,67 @@ def test_parallel_lanes_cut_modeled_cycles():
     np.testing.assert_allclose(par.dense, base.dense)
     assert len(par.lanes) == 4
     assert par.cycles < base.cycles
+
+
+@hst.composite
+def tiled_case(draw):
+    """A random einsum with a random tile grid riding a plain schedule."""
+    n_vars = draw(hst.integers(2, 3))
+    vs = list(VARS[:n_vars])
+    n_inputs = draw(hst.integers(1, 2))
+    accesses = []
+    for t in range(n_inputs):
+        order = draw(hst.integers(1, n_vars))
+        tvars = tuple(draw(hst.permutations(vs))[:order])
+        accesses.append((f"T{t}", tvars))
+    used = sorted({v for _, tv in accesses for v in tv})
+    n_out = draw(hst.integers(0, len(used)))
+    out_vars = tuple(draw(hst.permutations(used))[:n_out])
+    loop_order = tuple(draw(hst.permutations(used)))
+    dims = {v: draw(hst.integers(3, 9)) for v in used}
+    # random tile sizes on 1 or 2 variables (counts need not divide dims)
+    n_tiled = draw(hst.integers(1, min(2, len(used))))
+    tvars = tuple(draw(hst.permutations(used))[:n_tiled])
+    tile = {}
+    for v in tvars:
+        n = draw(hst.integers(2, 5))
+        tile[v] = min(n, dims[v])
+    seed = draw(hst.integers(0, 2 ** 31 - 1))
+    return accesses, out_vars, loop_order, dims, tile, seed
+
+
+@settings(max_examples=15, deadline=None)
+@given(tiled_case())
+def test_random_tiled_conformance(case):
+    """The out-of-core acceptance: for random einsums and RANDOM tile
+    sizes, tiled == untiled == numpy in both backends (contraction tiles
+    reduce-merge, result tiles concat-merge, ragged tails zero-pad)."""
+    accesses, out_vars, loop_order, dims, tile, seed = case
+    rng = np.random.default_rng(seed)
+    lhs = "X(" + ",".join(out_vars) + ")" if out_vars else "X"
+    expr = lhs + " = " + " * ".join(
+        f"{n}({','.join(tv)})" for n, tv in accesses)
+    arrays = {n: ((rng.random(tuple(dims[v] for v in tv)) < 0.5)
+                  * rng.integers(1, 5, tuple(dims[v] for v in tv))
+                  ).astype(float)
+              for n, tv in accesses}
+    fmt = Format({n: "c" * len(tv) for n, tv in accesses})
+    base = Schedule(loop_order=loop_order)
+    tiled = Schedule(loop_order=loop_order, tile=tile)
+
+    spec = (",".join("".join(tv) for _, tv in accesses)
+            + "->" + "".join(out_vars))
+    want = np.einsum(spec, *[arrays[n] for n, _ in accesses])
+
+    sim = simulate_expr(expr, fmt, tiled, arrays, dims)
+    np.testing.assert_allclose(sim.dense, want,
+                               err_msg=f"tiled sim: {expr} tile={tile}")
+    got = execute_expr(expr, fmt, tiled, arrays, dims).to_dense()
+    np.testing.assert_allclose(got, want,
+                               err_msg=f"tiled engine: {expr} tile={tile}")
+    untiled = execute_expr(expr, fmt, base, arrays, dims).to_dense()
+    np.testing.assert_allclose(got, untiled,
+                               err_msg=f"tiled != untiled: {expr} {tile}")
 
 
 @hst.composite

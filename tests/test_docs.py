@@ -1,8 +1,17 @@
-"""The documentation executes as written: every ```python code block in
-docs/SCHEDULING.md, docs/PROGRAMS.md and README.md runs top-to-bottom,
-so the guides' snippets and the quickstart cannot rot. (Docstring
-examples are guarded separately by CI's ``pytest --doctest-modules``
-step over the public scheduling/compile modules.)"""
+"""The documentation executes as written, and its links cannot rot.
+
+* Every ```python code block in README.md and every docs/*.md page runs
+  top-to-bottom (blocks build on each other, as a reader would run
+  them) — new docs pages are discovered automatically, so a page's
+  snippets cannot silently fall out of CI.
+* ``tools/check_docs.py`` runs as a test too: broken intra-repo links
+  and ```python fences outside the executed set fail tier-1, not just
+  the CI `docs-check` step.
+
+(Docstring examples are guarded separately by CI's
+``pytest --doctest-modules`` step over the public core modules.)
+"""
+import importlib.util
 import pathlib
 import re
 
@@ -10,14 +19,33 @@ import pytest
 
 ROOT = pathlib.Path(__file__).resolve().parent.parent
 
+_spec = importlib.util.spec_from_file_location(
+    "check_docs", ROOT / "tools" / "check_docs.py")
+check_docs = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(check_docs)
+
 
 def _python_blocks(path: pathlib.Path):
-    text = path.read_text()
-    return re.findall(r"```python\n(.*?)```", text, re.S)
+    return re.findall(r"```python\n(.*?)```", path.read_text(), re.S)
 
 
-@pytest.mark.parametrize("doc", ["docs/SCHEDULING.md", "docs/PROGRAMS.md",
-                                 "README.md"])
+# the executed set is defined ONCE (tools/check_docs.py) and discovered,
+# not hand-listed: a new docs page with snippets is picked up here
+# automatically, and a page without snippets (e.g. docs/INDEX.md) is
+# exercised by the link checker instead
+SNIPPET_DOCS = [str(p.relative_to(ROOT))
+                for p in check_docs.executed_markdown()
+                if _python_blocks(p)]
+
+
+def test_snippet_docs_discovered():
+    assert "README.md" in SNIPPET_DOCS
+    for must in ("docs/SCHEDULING.md", "docs/PROGRAMS.md",
+                 "docs/TILING.md", "docs/FORMATS.md"):
+        assert must in SNIPPET_DOCS, f"{must} lost its snippets"
+
+
+@pytest.mark.parametrize("doc", SNIPPET_DOCS)
 def test_markdown_snippets_execute(doc, tmp_path, monkeypatch):
     monkeypatch.setenv("SAM_SCHEDULE_CACHE",
                        str(tmp_path / "schedules.json"))
@@ -27,3 +55,11 @@ def test_markdown_snippets_execute(doc, tmp_path, monkeypatch):
     for i, block in enumerate(blocks):
         code = compile(block, f"{doc}[block {i}]", "exec")
         exec(code, ns)  # blocks build on each other, as a reader would run them
+
+
+def test_intra_repo_links_resolve():
+    assert check_docs.check_links() == []
+
+
+def test_python_fences_are_covered():
+    assert check_docs.check_snippet_coverage() == []

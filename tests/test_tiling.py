@@ -1,0 +1,441 @@
+"""Tiled out-of-core execution under a memory budget (DESIGN.md §7).
+
+The contract: a tiled schedule computes EXACTLY what the untiled one
+computes — contraction tiles reduce-merge, result tiles concat-merge,
+callers never see the grid — while one tile's working set (not the whole
+expression) bounds peak allocation, every tile after the first hits the
+shared per-tile plan, and the budget gate refuses/auto-tiles
+deterministically.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import coord_ops as co
+from repro.core import tiling
+from repro.core.custard import expr_cache_key, lower
+from repro.core.einsum import parse
+from repro.core.jax_backend import CompiledExpr, TiledExpr, compile_expr
+from repro.core.schedule import (Format, Schedule, schedule_from_dict,
+                                 schedule_to_dict)
+from repro.core.simulator import simulate_expr
+
+EXPR = "X(i,j) = B(i,k) * C(k,j)"
+DIMS = {"i": 20, "j": 14, "k": 16}
+FMT = Format({"B": "cc", "C": "cc"})
+
+
+def _ops(seed=0, density=0.3):
+    rng = np.random.default_rng(seed)
+    B = ((rng.random((DIMS["i"], DIMS["k"])) < density)
+         * rng.integers(1, 9, (DIMS["i"], DIMS["k"]))).astype(float)
+    C = ((rng.random((DIMS["k"], DIMS["j"])) < density)
+         * rng.integers(1, 9, (DIMS["k"], DIMS["j"]))).astype(float)
+    return {"B": B, "C": C}
+
+
+# ---------------------------------------------------------------------------
+# the schedule field + lowering discipline
+# ---------------------------------------------------------------------------
+
+def test_tile_round_trips_and_keys():
+    sch = Schedule(loop_order=("i", "k", "j"), tile={"k": 4})
+    assert schedule_from_dict(schedule_to_dict(sch)) == sch
+    a = parse(EXPR)
+    plain = Schedule(loop_order=("i", "k", "j"))
+    assert (expr_cache_key(a, FMT, sch, DIMS)
+            != expr_cache_key(a, FMT, plain, DIMS))
+
+
+def test_custard_rejects_tiled_schedules():
+    with pytest.raises(ValueError, match="tile"):
+        lower(EXPR, FMT, Schedule(loop_order=("i", "k", "j"),
+                                  tile={"k": 2}), DIMS)
+
+
+def test_tiled_expr_validates_its_grid():
+    with pytest.raises(ValueError, match="not in the"):
+        compile_expr(EXPR, FMT, Schedule(loop_order=("i", "k", "j"),
+                                         tile={"z": 2}), DIMS)
+    with pytest.raises(ValueError, match="tiled and split"):
+        compile_expr(EXPR, FMT,
+                     Schedule(loop_order=("i", "k", "j"),
+                              split={"k": 2}, tile={"k": 2}), DIMS)
+    with pytest.raises(ValueError, match="exceeds its extent"):
+        compile_expr(EXPR, FMT, Schedule(loop_order=("i", "k", "j"),
+                                         tile={"k": 999}), DIMS)
+
+
+# ---------------------------------------------------------------------------
+# conformance: tiled == untiled == numpy
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("tile", [{"k": 2}, {"k": 16},       # contraction
+                                  {"i": 4}, {"j": 3},        # result vars
+                                  {"i": 2, "k": 4},          # mixed grid
+                                  {"i": 3, "j": 2, "k": 5}])
+def test_tiled_engine_matches_untiled_and_numpy(tile):
+    arrays = _ops()
+    want = arrays["B"] @ arrays["C"]
+    base = Schedule(loop_order=("i", "k", "j"))
+    untiled = compile_expr(EXPR, FMT, base, DIMS)(arrays).to_dense()
+    eng = compile_expr(EXPR, FMT,
+                       dataclasses.replace(base, tile=tile), DIMS)
+    assert isinstance(eng, TiledExpr)
+    got = eng(arrays).to_dense()
+    np.testing.assert_array_equal(got, want)       # integer values: exact
+    np.testing.assert_array_equal(got, untiled)
+    sim = simulate_expr(EXPR, FMT, dataclasses.replace(base, tile=tile),
+                        arrays, DIMS)
+    np.testing.assert_allclose(sim.dense, want)
+    assert sim.tiles == tiling.n_tiles(tile)
+
+
+def test_tile_composes_with_split_and_lanes():
+    arrays = _ops(seed=3)
+    want = arrays["B"] @ arrays["C"]
+    sch = Schedule(loop_order=("i", "k", "j"), split={"k": 2},
+                   parallelize={"k": 2}, tile={"j": 2})
+    eng = compile_expr(EXPR, FMT, sch, DIMS, shard_lanes=False)
+    assert isinstance(eng, TiledExpr) and eng.par_n == 2
+    np.testing.assert_array_equal(eng(arrays).to_dense(), want)
+    sim = simulate_expr(EXPR, FMT, sch, arrays, DIMS)
+    np.testing.assert_allclose(sim.dense, want)
+
+
+def test_overshooting_tile_count_all_padding_tail_tiles():
+    """ceil-division grids can overshoot the extent (22 over 7 tiles of
+    4 covers [0,28)): the tail tiles are pure padding and must
+    contribute nothing — in BOTH backends."""
+    rng = np.random.default_rng(21)
+    b = ((rng.random(22) < 0.6) * rng.integers(1, 9, 22)).astype(float)
+    dims = {"i": 22}
+    sch = Schedule(loop_order=("i",), tile={"i": 7})
+    eng = compile_expr("x(i) = b(i)", Format({"b": "c"}), sch, dims)
+    np.testing.assert_array_equal(eng({"b": b}).to_dense(), b)
+    sim = simulate_expr("x(i) = b(i)", Format({"b": "c"}), sch,
+                        {"b": b}, dims)
+    np.testing.assert_allclose(sim.dense, b)
+    assert sim.tiles == 7
+
+
+def test_tiled_scalar_full_contraction():
+    rng = np.random.default_rng(7)
+    b = (rng.integers(0, 5, 30)).astype(float)
+    c = (rng.integers(0, 3, 30)).astype(float)
+    eng = compile_expr("x = b(i) * c(i)", Format({"b": "c", "c": "c"}),
+                       Schedule(loop_order=("i",), tile={"i": 4}),
+                       {"i": 30})
+    assert float(eng({"b": b, "c": c}).to_dense()) == float(b @ c)
+
+
+def test_tiling_contraction_var_missing_from_a_term_is_rejected():
+    """A term without a tiled contraction variable would be re-added once
+    per tile; both backends must refuse instead of corrupting the sum."""
+    dims = {"i": 8, "j": 8}
+    fmt = Format(default="c")
+    sch = Schedule(loop_order=("i", "j"), tile={"j": 2})
+    with pytest.raises(ValueError, match="contraction"):
+        compile_expr("x(i) = b(i) - C(i,j) * d(j)", fmt, sch, dims)
+    with pytest.raises(ValueError, match="contraction"):
+        simulate_expr("x(i) = b(i) - C(i,j) * d(j)", fmt, sch,
+                      {"b": np.ones(8), "C": np.eye(8), "d": np.ones(8)},
+                      dims)
+    assert tiling.legal_tile_vars(
+        parse("x(i) = b(i) - C(i,j) * d(j)")) == ("i",)
+
+
+def test_tiled_contraction_var_present_in_every_term():
+    rng = np.random.default_rng(13)
+    Bm = ((rng.random((10, 12)) < 0.5)
+          * rng.integers(1, 5, (10, 12))).astype(float)
+    Dm = ((rng.random((10, 12)) < 0.5)
+          * rng.integers(1, 5, (10, 12))).astype(float)
+    c = rng.integers(0, 4, 12).astype(float)
+    e = rng.integers(0, 4, 12).astype(float)
+    dims = {"i": 10, "j": 12}
+    fmt = Format(default="c")
+    want = Bm @ c + Dm @ e
+    eng = compile_expr("x(i) = B(i,j) * c(j) + D(i,j) * e(j)", fmt,
+                       Schedule(loop_order=("i", "j"), tile={"j": 3}),
+                       dims)
+    np.testing.assert_array_equal(
+        eng({"B": Bm, "c": c, "D": Dm, "e": e}).to_dense(), want)
+
+
+def test_tiled_multi_term_expression():
+    rng = np.random.default_rng(11)
+    b = (rng.integers(0, 5, 24)).astype(float)
+    Cm = ((rng.random((24, 18)) < 0.4)
+          * rng.integers(1, 9, (24, 18))).astype(float)
+    d = (rng.integers(0, 4, 18)).astype(float)
+    dims = {"i": 24, "j": 18}
+    fmt = Format({"b": "c", "C": "cc", "d": "c"})
+    want = b - Cm @ d
+    eng = compile_expr("x(i) = b(i) - C(i,j) * d(j)", fmt,
+                       Schedule(loop_order=("i", "j"), tile={"i": 3}),
+                       dims)
+    np.testing.assert_array_equal(eng({"b": b, "C": Cm, "d": d}).to_dense(),
+                                  want)
+
+
+# ---------------------------------------------------------------------------
+# the plan-sharing contract
+# ---------------------------------------------------------------------------
+
+def test_every_tile_after_the_first_hits_the_plan_cache():
+    arrays = _ops(seed=5)
+    eng = compile_expr(EXPR, FMT,
+                       Schedule(loop_order=("i", "k", "j"),
+                                tile={"k": 4}), DIMS)
+    m0, h0 = eng.engine.stats["plan_misses"], eng.engine.stats["plan_hits"]
+    eng(arrays)
+    assert eng.engine.stats["plan_misses"] - m0 == 1
+    assert eng.engine.stats["plan_hits"] - h0 == eng.n_tiles - 1
+    eng(arrays)                                    # warm call: ALL tiles hit
+    assert eng.engine.stats["plan_misses"] - m0 == 1
+    assert eng.engine.stats["plan_hits"] - h0 == 2 * eng.n_tiles - 1
+
+
+def test_compile_expr_returns_one_tiled_engine_per_config():
+    sch = Schedule(loop_order=("i", "k", "j"), tile={"k": 2})
+    a = compile_expr(EXPR, FMT, sch, DIMS)
+    b = compile_expr(EXPR, FMT, sch, DIMS)
+    assert a is b
+
+
+# ---------------------------------------------------------------------------
+# the budget gate
+# ---------------------------------------------------------------------------
+
+def test_estimate_grows_with_extents_and_density():
+    a = parse(EXPR)
+    sch = Schedule(loop_order=("i", "k", "j"))
+    small = tiling.estimate_call_bytes(a, FMT, sch, DIMS,
+                                       densities={"B": 0.1, "C": 0.1})
+    denser = tiling.estimate_call_bytes(a, FMT, sch, DIMS,
+                                        densities={"B": 0.9, "C": 0.9})
+    bigger = tiling.estimate_call_bytes(
+        a, FMT, sch, {v: 8 * d for v, d in DIMS.items()},
+        densities={"B": 0.1, "C": 0.1})
+    assert small < denser and small < bigger
+
+
+def test_plan_tiles_fits_the_budget_or_raises():
+    a = parse(EXPR)
+    sch = Schedule(loop_order=("i", "k", "j"))
+    dens = {"B": 0.3, "C": 0.3}
+    est = tiling.estimate_call_bytes(a, FMT, sch, DIMS, densities=dens)
+    plan = tiling.plan_tiles(a, FMT, sch, DIMS, est // 3, densities=dens)
+    assert plan and tiling.estimate_call_bytes(
+        a, FMT, sch, tiling.tile_extents(DIMS, plan),
+        densities=dens) <= est // 3
+    assert tiling.plan_tiles(a, FMT, sch, DIMS, est * 2,
+                             densities=dens) == {}
+    with pytest.raises(tiling.MemoryBudgetExceeded):
+        tiling.plan_tiles(a, FMT, sch, DIMS, 16, densities=dens)
+
+
+def test_budget_refuses_or_auto_tiles():
+    arrays = _ops(seed=9)
+    want = arrays["B"] @ arrays["C"]
+    sch = Schedule(loop_order=("i", "k", "j"))
+    dens = {"B": 0.3, "C": 0.3}
+    est = tiling.estimate_call_bytes(EXPR, FMT, sch, DIMS, densities=dens)
+    with pytest.raises(tiling.MemoryBudgetExceeded) as ei:
+        compile_expr(EXPR, FMT, sch, DIMS, mem_budget=est // 3,
+                     sparsity=dens, auto_tile=False)
+    assert ei.value.estimate == est and ei.value.budget == est // 3
+    eng = compile_expr(EXPR, FMT, sch, DIMS, mem_budget=est // 3,
+                       sparsity=dens)
+    assert isinstance(eng, TiledExpr) and eng.n_tiles >= 2
+    assert eng.tile_bytes <= est // 3
+    np.testing.assert_array_equal(eng(arrays).to_dense(), want)
+    # in-budget requests keep the ordinary engine
+    ok = compile_expr(EXPR, FMT, sch, DIMS, mem_budget=est * 2,
+                      sparsity=dens)
+    assert isinstance(ok, CompiledExpr)
+
+
+def test_eager_fallback_strips_tile():
+    """execute_expr's eager reference fallback must not hand Custard a
+    tiled schedule (it has no static capacities to bound)."""
+    from repro.core.jax_backend import execute_expr
+
+    B = np.eye(6)
+    out = execute_expr("x(i) = B(i,j) * c(j)", Format({"B": "cc"}),
+                       Schedule(loop_order=("i", "j"), tile={"i": 2}),
+                       {"B": B, "c": np.ones(6)}, {"i": 6, "j": 6},
+                       compiled=False)
+    np.testing.assert_allclose(out.to_dense(), np.ones(6))
+
+
+def test_search_unfittable_budget_raises_budget_error():
+    """A budget no candidate fits even fully tiled must raise
+    MemoryBudgetExceeded (the type every other over-budget path raises),
+    not the generic 'nothing lowers' ValueError."""
+    from repro.core.autoschedule import search
+
+    with pytest.raises(tiling.MemoryBudgetExceeded) as ei:
+        search("x(i) = B(i,j) * c(j)", Format({"B": "cc", "c": "c"}),
+               {"i": 64, "j": 64}, mem_budget=1, device_count=1)
+    assert ei.value.budget == 1 and ei.value.estimate > 1
+
+
+def test_budget_string_forms():
+    assert tiling.parse_budget("2MB") == 2 << 20
+    assert tiling.parse_budget("512") == 512
+    for bad in ("lots", "1..5MB"):
+        with pytest.raises(ValueError, match="cannot parse"):
+            tiling.parse_budget(bad)
+
+
+def test_auto_schedule_with_budget_honors_auto_tile_false():
+    """auto_tile=False must refuse over-budget requests even when the
+    schedule comes from the (budget-blind, then) search."""
+    dens = {"B": 0.3, "C": 0.3}
+    est = tiling.estimate_call_bytes(
+        EXPR, FMT, Schedule(loop_order=("i", "k", "j")), DIMS,
+        densities=dens)
+    with pytest.raises(tiling.MemoryBudgetExceeded):
+        compile_expr(EXPR, FMT, "auto", DIMS, mem_budget=est // 100,
+                     sparsity=dens, auto_tile=False)
+
+
+def test_tiled_engine_cache_partitions_on_densities():
+    """A denser sparsity hint must re-check the per-tile budget, not
+    reuse a sparser caller's cached decision."""
+    sch = Schedule(loop_order=("i", "k", "j"), tile={"k": 2})
+    sparse_hint = {"B": 0.01, "C": 0.01}
+    dense_hint = {"B": 1.0, "C": 1.0}
+    lo = tiling.estimate_call_bytes(
+        EXPR, FMT, Schedule(loop_order=("i", "k", "j")),
+        tiling.tile_extents(DIMS, {"k": 2}), densities=sparse_hint)
+    hi = tiling.estimate_call_bytes(
+        EXPR, FMT, Schedule(loop_order=("i", "k", "j")),
+        tiling.tile_extents(DIMS, {"k": 2}), densities=dense_hint)
+    budget = (lo + hi) // 2                 # sparse tile fits, dense not
+    eng = compile_expr(EXPR, FMT, sch, DIMS, mem_budget=budget,
+                       sparsity=sparse_hint)
+    assert isinstance(eng, TiledExpr)
+    with pytest.raises(tiling.MemoryBudgetExceeded):
+        compile_expr(EXPR, FMT, sch, DIMS, mem_budget=budget,
+                     sparsity=dense_hint)
+
+
+def test_plan_tiles_never_overshoots_the_grid():
+    """Planned counts are effective: every returned n satisfies
+    n == ceil(d / ceil(d/n)), so no all-padding tail dispatches."""
+    a = parse(EXPR)
+    dims = {"i": 9, "j": 22, "k": 13}
+    sch = Schedule(loop_order=("i", "k", "j"))
+    dens = {"B": 1.0, "C": 1.0}
+    est = tiling.estimate_call_bytes(a, FMT, sch, dims, densities=dens)
+    for frac in (2, 5, 20, 100):
+        plan = tiling.plan_tiles(a, FMT, sch, dims, max(est // frac, 200),
+                                 densities=dens)
+        for v, n in plan.items():
+            chunk = -(-dims[v] // n)
+            assert n == -(-dims[v] // chunk), (plan, v)
+
+
+# ---------------------------------------------------------------------------
+# the merge primitive
+# ---------------------------------------------------------------------------
+
+def test_accumulate_coo_reduce_and_concat_merges():
+    k1 = np.array([1, 5, 9], np.int64)
+    v1 = np.array([1.0, 2.0, 3.0], np.float32)
+    # overlapping keys: a contraction-tile partial (reduce-merge)
+    k, v = co.accumulate_coo(k1, v1, np.array([5, 9, 12], np.int64),
+                             np.array([10.0, 20.0, 30.0], np.float32))
+    assert k.tolist() == [1, 5, 9, 12]
+    assert v.tolist() == [1.0, 12.0, 23.0, 30.0]
+    # disjoint keys: a result-tile partial (concat-merge, same primitive)
+    k2, v2 = co.accumulate_coo(k, v, np.array([0, 100], np.int64),
+                               np.array([7.0, 8.0], np.float32))
+    assert k2.tolist() == [0, 1, 5, 9, 12, 100]
+    assert v2[0] == 7.0 and v2[-1] == 8.0
+    # empty-into-empty stays empty
+    ek, ev = co.accumulate_coo(np.zeros(0, np.int64), np.zeros(0),
+                               np.zeros(0, np.int64), np.zeros(0))
+    assert len(ek) == 0 and len(ev) == 0
+
+
+# ---------------------------------------------------------------------------
+# autoschedule + serving integration
+# ---------------------------------------------------------------------------
+
+def test_search_with_budget_only_returns_fitting_schedules(tmp_path):
+    from repro.core.autoschedule import ScheduleCache, resolve_schedule, search
+
+    dims = {"i": 64, "j": 64, "k": 64}
+    dens = {"B": 0.3, "C": 1.0}
+    fmt = Format({"B": "cc", "C": "dd"})
+    est = tiling.estimate_call_bytes(
+        EXPR, fmt, Schedule(loop_order=("i", "k", "j")), dims,
+        densities=dens)
+    budget = est // 2
+    rep = search(EXPR, fmt, dims, sparsity=dens, device_count=1,
+                 mem_budget=budget, max_orders=2)
+    assert rep.candidates
+    for c in rep.candidates:
+        per_tile = tiling.estimate_call_bytes(
+            EXPR, fmt, c.schedule,
+            tiling.tile_extents(dims, c.schedule.tile), densities=dens)
+        assert per_tile <= budget
+    # the cache remembers budget-qualified winners under their own key
+    cache = ScheduleCache(path=tmp_path / "s.json")
+    r1 = resolve_schedule(EXPR, fmt, dims, sparsity=dens, cache=cache,
+                          device_count=1, mem_budget=budget, max_orders=2)
+    assert not r1.cache_hit
+    r2 = resolve_schedule(EXPR, fmt, dims, sparsity=dens, cache=cache,
+                          device_count=1, mem_budget=budget, max_orders=2)
+    assert r2.cache_hit and r2.schedule == r1.schedule
+    r3 = resolve_schedule(EXPR, fmt, dims, sparsity=dens, cache=cache,
+                          device_count=1, max_orders=2)
+    assert r3.key != r1.key                       # unbudgeted: its own entry
+
+
+def test_serve_sam_routes_over_budget_requests_tiled():
+    from repro.launch.serve import serve_sam
+
+    lines = []
+    dens = 0.3
+    dims = dict(DIMS)
+    est = tiling.estimate_call_bytes(
+        EXPR, FMT, Schedule(loop_order=("i", "k", "j")), dims,
+        densities={"B": dens, "C": dens})
+    _, stats = serve_sam(EXPR, "ikj", {"B": "cc", "C": "cc"}, dims,
+                         batch=2, reps=2, density=dens,
+                         mem_budget=est // 3, log=lines.append)
+    assert stats["tiles"] >= 2 and stats["tile_calls"] > 0
+    assert any("OUT-OF-CORE" in l for l in lines)
+
+
+def test_program_budget_tiles_unfused_stages():
+    from repro.core.jax_backend import compile_program
+    from repro.core.program import numpy_reference
+
+    text = "T(i,k) = B(i,j) * C(j,k); x(i) = T(i,k) * d(k)"
+    rng = np.random.default_rng(2)
+    arrays = {"B": ((rng.random((16, 16)) < 0.4)
+                    * rng.integers(1, 5, (16, 16))).astype(float),
+              "C": ((rng.random((16, 16)) < 0.4)
+                    * rng.integers(1, 5, (16, 16))).astype(float),
+              "d": rng.integers(0, 4, 16).astype(float)}
+    dims = {"i": 16, "j": 16, "k": 16}
+    fmt = Format(default="c")
+    sch = {"T": Schedule(loop_order=("i", "j", "k")),
+           "x": Schedule(loop_order=("i", "k"))}
+    est = tiling.estimate_call_bytes(
+        "T(i,k) = B(i,j) * C(j,k)", fmt, sch["T"], dims,
+        densities={"B": 0.4, "C": 0.4})
+    cp = compile_program(text, fmt, sch, dims, fuse=False,
+                         mem_budget=est // 2, sparsity=0.4)
+    assert any(isinstance(u, TiledExpr) for _, _, u in cp.units)
+    out = cp(arrays)
+    ref = numpy_reference(text, arrays)
+    np.testing.assert_allclose(out["x"].to_dense(), ref["x"])
+    np.testing.assert_allclose(out["T"].to_dense(), ref["T"])

@@ -1,0 +1,124 @@
+#!/usr/bin/env python
+"""Markdown checker: broken intra-repo links + uncovered python fences.
+
+Two classes of documentation rot, both build-failing (the CI `docs-check`
+step runs this script; ``tests/test_docs.py`` runs the same checks as a
+tier-1 test):
+
+1. **Broken intra-repo links** — every ``[text](target)`` in every
+   tracked ``*.md`` file whose target is not an external URL must
+   resolve to an existing file (relative to the linking file), and a
+   ``#fragment`` on a markdown target must match a heading anchor in it
+   (GitHub slugification).
+2. **Uncovered fenced snippets** — every ```` ```python ```` fence must
+   live in a file the snippet-execution test actually runs
+   (``README.md`` or ``docs/*.md``, the set ``tests/test_docs.py``
+   globs). A python fence anywhere else would LOOK executable while
+   silently rotting.
+
+Usage: ``python tools/check_docs.py`` (exit 1 on any finding).
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+from typing import List
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+# [text](target) — target captured up to the closing paren (no nesting in
+# our docs); images (![...]) match too, which is what we want
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_HEADING = re.compile(r"^#{1,6}\s+(.*)$", re.M)
+_PY_FENCE = re.compile(r"```python\b")
+
+# repo-meta working files, not documentation surface: PAPER/PAPERS/
+# SNIPPETS are seed reference material (SNIPPETS.md quotes OTHER repos'
+# code, which is exactly not runnable here), ISSUE/CHANGES/ROADMAP are
+# the PR driver's notes
+_META = {"PAPER.md", "PAPERS.md", "SNIPPETS.md", "ISSUE.md",
+         "CHANGES.md", "ROADMAP.md"}
+
+
+def tracked_markdown() -> List[pathlib.Path]:
+    """The documentation surface: every repo ``*.md`` outside ``.git``
+    except the repo-meta working files (sorted for determinism)."""
+    return sorted(p for p in ROOT.rglob("*.md")
+                  if ".git" not in p.parts and p.name not in _META)
+
+
+def executed_markdown() -> List[pathlib.Path]:
+    """The files whose python fences ``tests/test_docs.py`` executes."""
+    return sorted([ROOT / "README.md"] + list((ROOT / "docs").glob("*.md")))
+
+
+def _anchor(heading: str) -> str:
+    """GitHub heading → anchor slug (lowercase, punctuation dropped,
+    spaces to hyphens)."""
+    text = re.sub(r"[`*_]", "", heading.strip())
+    text = re.sub(r"[^\w\- ]", "", text.lower())
+    return re.sub(r" +", "-", text.strip())
+
+
+def _anchors_of(path: pathlib.Path) -> set:
+    return {_anchor(h) for h in _HEADING.findall(path.read_text())}
+
+
+def check_links() -> List[str]:
+    """Broken intra-repo link findings, one message per finding."""
+    errors: List[str] = []
+    for md in tracked_markdown():
+        for target in _LINK.findall(md.read_text()):
+            if re.match(r"[a-z][a-z0-9+.-]*:", target):   # http:, mailto:
+                continue
+            if target.startswith("#"):                     # same-page anchor
+                if _anchor(target[1:]) not in _anchors_of(md) \
+                        and target[1:] not in _anchors_of(md):
+                    errors.append(f"{md.relative_to(ROOT)}: dangling "
+                                  f"same-page anchor {target!r}")
+                continue
+            path_part, _, fragment = target.partition("#")
+            dest = (md.parent / path_part).resolve()
+            if not dest.exists():
+                errors.append(f"{md.relative_to(ROOT)}: broken link "
+                              f"{target!r} (no such file)")
+                continue
+            if fragment and dest.suffix == ".md":
+                if fragment not in _anchors_of(dest):
+                    errors.append(f"{md.relative_to(ROOT)}: link "
+                                  f"{target!r} anchor not found in "
+                                  f"{dest.relative_to(ROOT)}")
+    return errors
+
+
+def check_snippet_coverage() -> List[str]:
+    """Python fences outside the executed set, one message per file."""
+    executed = set(executed_markdown())
+    errors: List[str] = []
+    for md in tracked_markdown():
+        if md in executed:
+            continue
+        n = len(_PY_FENCE.findall(md.read_text()))
+        if n:
+            errors.append(
+                f"{md.relative_to(ROOT)}: {n} ```python fence(s) outside "
+                f"the executed set (README.md + docs/*.md) — move the "
+                f"snippet there or drop the language tag so it is not "
+                f"presented as runnable")
+    return errors
+
+
+def main() -> int:
+    errors = check_links() + check_snippet_coverage()
+    for e in errors:
+        print(f"docs-check: {e}")
+    executed = [str(p.relative_to(ROOT)) for p in executed_markdown()]
+    print(f"docs-check: {len(tracked_markdown())} markdown files, "
+          f"snippets executed from {executed}, "
+          f"{len(errors)} finding(s)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
