@@ -19,8 +19,8 @@ import time
 
 def main() -> None:
     from . import (autotune, compiled_cache, fig11, fig12, fig13, fig14,
-                   fig15, moe_dispatch, program_fusion, split_scaling,
-                   table1, table2, tiled_oob)
+                   fig15, moe_dispatch, program_fusion, serving,
+                   split_scaling, table1, table2, tiled_oob)
     benches = {
         "table1": table1.run, "table2": table2.run,
         "fig11": fig11.run, "fig12": fig12.run, "fig13": fig13.run,
@@ -31,6 +31,7 @@ def main() -> None:
         "autotune": autotune.run,
         "program_fusion": program_fusion.run,
         "tiled_oob": tiled_oob.run,
+        "serving": serving.run,
     }
     args = sys.argv[1:]
     smoke = "--smoke" in args

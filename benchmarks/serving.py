@@ -1,0 +1,156 @@
+"""Sustained-load serving benchmark: continuous batching vs the
+sequential dispatch loop (DESIGN.md §9, docs/SERVING.md).
+
+The workload models heterogeneous serving traffic for one expression:
+every request carries fresh operands whose density is drawn per request,
+so the nonzero counts jitter across the engine's power-of-two input
+buckets — exactly the traffic a bucketed jit engine finds hardest,
+because each novel bucket combination is a fresh input signature and
+therefore a fresh XLA compile.
+
+Two paths execute the SAME request stream, each from a cold engine:
+
+1. **served** — ``core.serving.SamServer`` coalesces requests into
+   batched vmapped dispatches (width ``--batch``). Shared sticky hints
+   pin the batch input signature after warmup, so the whole stream
+   compiles O(1) executables, and the pipeline overlaps host
+   encode / device execute / host decode across consecutive dispatches.
+2. **sequential** — one ``CompiledExpr.execute`` per request, the
+   dispatch-one-request-at-a-time loop serve.py ran before the serving
+   layer existed. It explores the full bucket-signature lattice of the
+   traffic, paying a plan install per novel signature.
+
+The served path runs FIRST: any process-wide JAX eager-op warmup it
+leaves behind benefits the baseline, so the reported speedup is
+conservative. Checks:
+
+- per-request results bit-identical between the two paths;
+- served throughput ≥ 2x sequential (smoke: > 1x — small sizes);
+- p99 latency bounded.
+
+Writes ``BENCH_serving.json`` (requests/sec both paths, speedup,
+p50/p99 ms, batch occupancy) next to the repo root so CI can upload the
+trajectory. CSV rows: ``serving,<phase>,<value>,<wall_us>,<derived>``.
+
+    PYTHONPATH=src python -m benchmarks.run serving
+    PYTHONPATH=src python benchmarks/serving.py --smoke
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import numpy as np
+
+from repro.core import custard
+from repro.core.jax_backend import clear_compile_cache, compile_expr
+from repro.core.schedule import Format, Schedule
+from repro.core.serving import Request, SamServer
+
+EXPR = "X(i,j) = B(i,k) * C(k,j)"
+ORDER = ("i", "k", "j")
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+# full-size run: ≥2x is the acceptance floor; smoke asserts >1x (the
+# tiny sizes leave less compile churn for batching to amortize)
+FLOOR_FULL = 2.0
+FLOOR_SMOKE = 1.0
+P99_BOUND_MS = 120_000.0
+
+
+def _workload(n: int, count: int, seed: int):
+    """``count`` operand sets with per-request density jitter (each
+    request a different sparsity — heterogeneous serving traffic)."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(count):
+        d = float(rng.uniform(0.05, 0.3))
+        ops = {}
+        for name in ("B", "C"):
+            a = rng.random((n, n)).astype(np.float32)
+            a[rng.random((n, n)) > d] = 0.0
+            ops[name] = a
+        out.append(ops)
+    return out
+
+
+def _fresh_engine(dims):
+    """A cold engine: cleared process caches so neither path inherits
+    the other's plans."""
+    clear_compile_cache()
+    custard.clear_lowering_cache()
+    return compile_expr(EXPR, Format({"B": "cc", "C": "cc"}),
+                        Schedule(loop_order=ORDER), dims)
+
+
+def run(log, smoke: bool = False) -> bool:
+    n = 16 if smoke else 32
+    count = 48 if smoke else 256
+    width = 4 if smoke else 8
+    floor = FLOOR_SMOKE if smoke else FLOOR_FULL
+    dims = {"i": n, "j": n, "k": n}
+    sets = _workload(n, count, seed=7)
+
+    # -- served path first (leaves the process warmer for the baseline)
+    eng = _fresh_engine(dims)
+    srv = SamServer(max_batch=width)
+    reqs = [Request(expr=EXPR, arrays=s, formats=Format({"B": "cc",
+                                                         "C": "cc"}),
+                    dims=dims, schedule=Schedule(loop_order=ORDER))
+            for s in sets]
+    t0 = time.perf_counter()
+    handles = srv.submit_many(reqs, engine=eng)
+    srv.drain(timeout=600)
+    served = [h.result() for h in handles]
+    srv_wall = time.perf_counter() - t0
+    stats = srv.stats()
+    srv.shutdown()
+    srv_rps = count / srv_wall
+    log(f"serving,served,{srv_rps:.1f}rps,{srv_wall * 1e6:.0f},"
+        f"dispatches={stats['dispatches']}"
+        f":occ={stats['batch_occupancy']:.1f}"
+        f":misses={eng.stats['plan_misses']}")
+
+    # -- sequential baseline: one execute per request, cold engine
+    eng2 = _fresh_engine(dims)
+    t0 = time.perf_counter()
+    sequential = [eng2.execute(s) for s in sets]
+    seq_wall = time.perf_counter() - t0
+    seq_rps = count / seq_wall
+    log(f"serving,sequential,{seq_rps:.1f}rps,{seq_wall * 1e6:.0f},"
+        f"misses={eng2.stats['plan_misses']}")
+
+    # -- contract checks
+    identical = all(np.array_equal(a.to_dense(), b.to_dense())
+                    for a, b in zip(served, sequential))
+    speedup = seq_wall / srv_wall
+    p50, p99 = stats["p50_ms"], stats["p99_ms"]
+    p99_ok = 0.0 < p99 <= P99_BOUND_MS and p50 <= p99
+    ok = identical and speedup >= floor and p99_ok
+    log(f"serving,speedup,{speedup:.2f}x,0,"
+        f"{'bit-identical' if identical else 'MISMATCH'}")
+    log(f"serving/summary,requests,{count},width,{width},"
+        f"p50_ms,{p50:.0f},p99_ms,{p99:.0f},"
+        f"derived,{'pass' if ok else 'FAIL'}")
+
+    out = {
+        "bench": "serving", "smoke": smoke,
+        "expr": EXPR, "n": n, "requests": count, "batch_width": width,
+        "served_rps": round(srv_rps, 2), "sequential_rps": round(seq_rps, 2),
+        "speedup": round(speedup, 2),
+        "p50_ms": round(p50, 1), "p99_ms": round(p99, 1),
+        "batch_occupancy": stats["batch_occupancy"],
+        "dispatches": stats["dispatches"],
+        "bit_identical": identical,
+    }
+    (ROOT / "BENCH_serving.json").write_text(json.dumps(out, indent=2)
+                                             + "\n")
+    return ok
+
+
+if __name__ == "__main__":
+    import sys
+    ok = run(lambda s: print(s, flush=True),
+             smoke="--smoke" in sys.argv)
+    sys.exit(0 if ok else 1)

@@ -493,11 +493,14 @@ def _bucket_batch(b: int) -> int:
     return 1 if b <= 1 else 1 << (b - 1).bit_length()
 
 
-def _pad_end(a: jnp.ndarray, n: int, fill) -> jnp.ndarray:
+def _pad_end(a: np.ndarray, n: int, fill) -> np.ndarray:
+    # Host-side numpy on purpose: padding with jnp ops would compile one
+    # tiny XLA program per novel concrete shape, which dominates encode
+    # cost under serving traffic (every request has a fresh nnz).
     if a.shape[0] >= n:
         return a
-    pad = jnp.full((n - a.shape[0],), fill, a.dtype)
-    return jnp.concatenate([a, pad])
+    pad = np.full((n - a.shape[0],), fill, a.dtype)
+    return np.concatenate([a, pad])
 
 
 @dataclasses.dataclass
@@ -505,6 +508,22 @@ class _Plan:
     """One jitted executable: static capacities + the callable."""
     caps: Dict[str, int]
     fn: Callable
+
+
+@dataclasses.dataclass
+class EncodedBatch:
+    """A host-encoded batched dispatch, ready for the device stage.
+
+    Produced by ``CompiledExpr.encode_batch`` (host encode), consumed by
+    ``execute_encoded`` (device execute) and ``decode_batch`` (host
+    decode) — the three-stage split lets a serving pipeline overlap the
+    encode of dispatch N+1 with the execute of dispatch N."""
+    stacked: Any                 # batch-stacked padded operand pytree
+    sig: Tuple                   # shared input signature (plan-cache key)
+    b: int                       # live batch members
+    b_pad: int                   # power-of-two padded batch width
+    flats: List                  # live members, unstacked (cap recording)
+    rep: int = 0                 # index of the largest-nnz member
 
 
 def _run_with_growth(plan: _Plan, flat, stats: Dict[str, int],
@@ -531,6 +550,31 @@ def _run_with_growth(plan: _Plan, flat, stats: Dict[str, int],
     raise RuntimeError("compiled SAM capacity growth did not converge")
 
 
+def _raw_flat_of(ft: FiberTree) -> Dict[str, Any]:
+    """Raw per-level arrays of one operand fibertree, as NUMPY.
+
+    Only compressed seg/crd and the value array feed ``_pad_flat_arrays``
+    (dense expansions are rebuilt there from level metadata), so dense
+    levels get zero-length placeholders — cheaper than
+    ``JTensor.from_fibertree``, which both materialises the dense
+    expansion and converts every level through jnp (a device upload plus
+    a tiny-op compile per novel shape)."""
+    segs, crds = [], []
+    empty = np.zeros(0, np.int32)
+    for lv in ft.levels:
+        if lv.format == COMPRESSED:
+            segs.append(np.asarray(lv.seg, np.int32))
+            crds.append(np.asarray(lv.crd, np.int32))
+        elif lv.format == DENSE:
+            segs.append(empty)
+            crds.append(empty)
+        else:
+            raise NotImplementedError(
+                f"JAX backend supports d/c levels, not {lv.format}")
+    return {"segs": tuple(segs), "crds": tuple(crds),
+            "vals": np.asarray(ft.vals, np.float32)}
+
+
 def _pad_flat_arrays(raw, level_meta, hints=None):
     """Pad raw operand arrays to power-of-two buckets (shared by the
     expression engine and the program chain engine).
@@ -540,6 +584,12 @@ def _pad_flat_arrays(raw, level_meta, hints=None):
     array length all DERIVE from the parent-level bucket, so the jit
     signature depends on nothing but per-level nnz buckets (a size
     sitting on a parents+1 boundary cannot flip the signature).
+
+    The padded pytree leaves are NUMPY arrays: jit converts them at the
+    call boundary in one upload, whereas building them with jnp ops
+    would trace/compile a tiny XLA program per novel concrete shape —
+    under serving traffic (fresh nnz per request) those compiles
+    dominate the encode stage.
     """
     flat, sig = {}, []
     for name in sorted(raw):
@@ -550,9 +600,9 @@ def _pad_flat_arrays(raw, level_meta, hints=None):
             ns = num_parents + 1
             if fmt_l == DENSE:
                 nc = num_parents * dim
-                segs.append(jnp.arange(ns, dtype=jnp.int32) * dim)
-                crds.append(jnp.tile(jnp.arange(dim, dtype=jnp.int32),
-                                     num_parents))
+                segs.append(np.arange(ns, dtype=np.int32) * dim)
+                crds.append(np.tile(np.arange(dim, dtype=np.int32),
+                                    num_parents))
             else:
                 c = e["crds"][i]
                 nc = (hints[name][i] if hints
@@ -570,13 +620,17 @@ def _pad_flat_arrays(raw, level_meta, hints=None):
 
 
 def _tensors_from_flat_arrays(flat, level_meta) -> Dict[str, JTensor]:
+    # jnp.asarray: flat leaves are host numpy (see _pad_flat_arrays), but
+    # stream ops index these arrays with tracers during the eager
+    # capacity-record pass — numpy refuses tracer indices. No-op under
+    # jit (leaves are already tracers) and off the per-call hot path.
     out = {}
     for name, e in flat.items():
         out[name] = JTensor(
-            [JLevel(s, c, d)
+            [JLevel(jnp.asarray(s), jnp.asarray(c), d)
              for s, c, (_, d) in zip(e["segs"], e["crds"],
                                      level_meta[name])],
-            e["vals"])
+            jnp.asarray(e["vals"]))
     return out
 
 
@@ -681,6 +735,12 @@ class CompiledExpr:
         self._plans: Dict[Tuple, _Plan] = {}
         self._batch_plans: Dict[Tuple, _Plan] = {}
         self._jit_cache: Dict[Tuple, Callable] = {}
+        # Sticky per-level bucket high-water for batched encodes: under
+        # serving traffic each request's nnz jitters across power-of-two
+        # buckets, and without stickiness every batch whose member max
+        # lands in a new bucket combination pays a fresh vmapped XLA
+        # compile. Monotone hints pin the batch signature after warmup.
+        self._hint_highwater: Dict[str, List[int]] = {}
         self.stats = {"traces": 0, "plan_hits": 0, "plan_misses": 0,
                       "overflow_retries": 0, "calls": 0, "batch_calls": 0,
                       "lane_dispatches": 0, "sharded_dispatches": 0}
@@ -711,10 +771,7 @@ class CompiledExpr:
         for name, ft in tensors.items():
             self._level_meta.setdefault(
                 name, [(lv.format, lv.dim) for lv in ft.levels])
-            jt = JTensor.from_fibertree(ft)
-            raw[name] = {"segs": tuple(lv.seg for lv in jt.levels),
-                         "crds": tuple(lv.crd for lv in jt.levels),
-                         "vals": jt.vals}
+            raw[name] = _raw_flat_of(ft)
         return raw
 
     def _pad_flat(self, raw, hints=None):
@@ -972,6 +1029,21 @@ class CompiledExpr:
             for i in range(len(raws[0][name]["crds"]))]
             for name in raws[0]}
 
+    def _sticky_hints(self, raws: Sequence[Dict]) -> Dict[str, List[int]]:
+        """Shared hints merged with the engine's running per-level
+        high-water, so the batch input signature is monotone over the
+        engine's lifetime: a stream of dispatches with jittering nnz
+        settles on ONE signature (and one XLA executable) after warmup
+        instead of recompiling per bucket combination."""
+        hints = self._shared_hints(raws)
+        for name, hs in hints.items():
+            prev = self._hint_highwater.get(name)
+            if prev is not None:
+                hs = [max(a, b) for a, b in zip(hs, prev)]
+                hints[name] = hs
+            self._hint_highwater[name] = list(hs)
+        return hints
+
     def _dispatch_out(self, flat, sig):
         """One plan-cached execution; returns the raw keyed-COO ``out``."""
         self.stats["calls"] += 1
@@ -1025,12 +1097,75 @@ class CompiledExpr:
         if not arrays_list:
             return []
         raws = [self._raw_flat(a) for a in arrays_list]
-        hints = self._shared_hints(raws)
+        hints = self._sticky_hints(raws)
         out = []
         for raw in raws:
             flat, sig = self._pad_flat(raw, hints)
             out.append(self._dispatch_single(flat, sig))
         return out
+
+    # -- staged batch execution (host encode / device execute / host
+    # decode split out so a serving pipeline can overlap the stages of
+    # consecutive dispatches; ``core.serving`` is the consumer) ----------
+    def encode_batch(self, arrays_list: Sequence[Dict[str, np.ndarray]]
+                     ) -> "EncodedBatch":
+        """Host-side stage 1 of a batched dispatch: build the concordant
+        fibertrees, pad every member to ONE shared input signature, pad
+        the batch axis to a power of two, and stack. The result feeds
+        ``execute_encoded``; no device compute beyond the array uploads
+        happens here."""
+        raws = [self._raw_flat(a) for a in arrays_list]
+        hints = self._sticky_hints(raws)
+        # largest-nnz member, recorded pre-padding: capacity recording
+        # interprets just this one member eagerly (an O(batch) eager sweep
+        # would dominate plan installs at serving widths) and the growth
+        # loop heals any residual undershoot from the other members
+        rep = max(range(len(raws)),
+                  key=lambda i: sum(int(e["vals"].shape[0])
+                                    for e in raws[i].values()))
+        flats_sigs = [self._pad_flat(r, hints) for r in raws]
+        flats = [f for f, _ in flats_sigs]
+        sig = flats_sigs[0][1]
+        b = len(flats)
+        b_pad = _bucket_batch(b)
+        padded = flats
+        if b_pad > b:      # pad the dispatch with empty operand sets
+            filler = jax.tree_util.tree_map(np.zeros_like, flats[0])
+            padded = flats + [filler] * (b_pad - b)
+        # numpy stack: the ONE host->device upload happens at the jit
+        # call boundary in execute_encoded, keeping this stage pure host
+        # work that pipeline threads can overlap with device execution
+        stacked = jax.tree_util.tree_map(lambda *xs: np.stack(xs), *padded)
+        return EncodedBatch(stacked=stacked, sig=sig, b=b, b_pad=b_pad,
+                            flats=flats, rep=rep)
+
+    def execute_encoded(self, enc: "EncodedBatch"):
+        """Device stage 2: one vmapped plan-cached dispatch of an encoded
+        batch. Returns the raw keyed-COO ``out`` for ``decode_batch``."""
+        self.stats["batch_calls"] += 1
+        if any(n > 1 for n in self.lane_ns):
+            self.stats["lane_dispatches"] += 1
+        plan = self._batch_plans.get((enc.sig, enc.b_pad))
+        if plan is None:
+            self.stats["plan_misses"] += 1
+            caps = self._record_caps([enc.flats[enc.rep]])
+            plan = self._install_plan(enc.sig, caps, batch=True,
+                                      b_pad=enc.b_pad)
+        else:
+            self.stats["plan_hits"] += 1
+        return self._run_plan(plan, enc.sig, enc.stacked, batch=True,
+                              b_pad=enc.b_pad)
+
+    def decode_batch(self, enc: "EncodedBatch", out) -> List[FiberTree]:
+        """Host-side stage 3: assemble one ``FiberTree`` per live batch
+        member (batch-axis padding dropped).
+
+        The whole ``out`` tree transfers in ONE ``device_get`` before the
+        per-member loop: slicing device arrays member-by-member would pay
+        a device op plus a blocking transfer per member, which dominates
+        decode at serving batch widths."""
+        host = jax.device_get(out)
+        return [self._assemble_out(host, b=i) for i in range(enc.b)]
 
     def execute_batch(self, arrays_list: Sequence[Dict[str, np.ndarray]]
                       ) -> List[FiberTree]:
@@ -1059,29 +1194,9 @@ class CompiledExpr:
         """
         if not arrays_list:
             return []
-        self.stats["batch_calls"] += 1
-        if any(n > 1 for n in self.lane_ns):
-            self.stats["lane_dispatches"] += 1
-        raws = [self._raw_flat(a) for a in arrays_list]
-        hints = self._shared_hints(raws)
-        flats_sigs = [self._pad_flat(r, hints) for r in raws]
-        flats = [f for f, _ in flats_sigs]
-        sig = flats_sigs[0][1]
-        b = len(flats)
-        b_pad = _bucket_batch(b)
-        if b_pad > b:      # pad the dispatch with empty operand sets
-            filler = jax.tree_util.tree_map(jnp.zeros_like, flats[0])
-            flats = flats + [filler] * (b_pad - b)
-        stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *flats)
-        plan = self._batch_plans.get((sig, b_pad))
-        if plan is None:
-            self.stats["plan_misses"] += 1
-            caps = self._record_caps(flats[:b])
-            plan = self._install_plan(sig, caps, batch=True, b_pad=b_pad)
-        else:
-            self.stats["plan_hits"] += 1
-        out = self._run_plan(plan, sig, stacked, batch=True, b_pad=b_pad)
-        return [self._assemble_out(out, b=i) for i in range(b)]
+        enc = self.encode_batch(arrays_list)
+        out = self.execute_encoded(enc)
+        return self.decode_batch(enc, out)
 
 
 # ---------------------------------------------------------------------------
@@ -1525,10 +1640,7 @@ class _FusedChain:
                 key = f"s{i}.{name}"
                 self._level_meta.setdefault(
                     key, [(lv.format, lv.dim) for lv in ft.levels])
-                jt = JTensor.from_fibertree(ft)
-                raw[key] = {"segs": tuple(lv.seg for lv in jt.levels),
-                            "crds": tuple(lv.crd for lv in jt.levels),
-                            "vals": jt.vals}
+                raw[key] = _raw_flat_of(ft)
         return raw
 
     def _stage_tensors(self, flat, i: int, inter: Dict[str, JTensor]

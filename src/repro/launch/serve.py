@@ -114,20 +114,26 @@ def _parse_kv(text: str, cast=str):
 def serve_sam(expr: str, order: str, formats, dims, *, batch: int = 8,
               reps: int = 8, density: float = 0.1, seed: int = 0,
               split=None, devices: int = 0, autotune: bool = False,
-              mem_budget=None, log=print):
-    """Sparse-expression serving: compile ONCE, then dispatch batches of
-    same-format operands through the vmapped jit-cached engine.
+              mem_budget=None, use_server: bool = True, log=print):
+    """Sparse-expression serving: compile ONCE, then stream requests
+    through the continuous-batching server (``core.serving.SamServer``).
 
     Every request in a dispatch shares the expression/format/schedule (the
     jit signature); only the operand data differs — the SAM analogue of
-    batched decode. ``split={var: n}`` applies §4.4 iteration splitting AND
-    parallel lane duplication over that variable; with multiple devices the
-    lanes shard over the device mesh. ``autotune=True`` picks the whole
-    schedule instead: the first request shape searches the schedule space
-    (cost-model ranking, ``core.autoschedule``) and persists the winner in
-    the on-disk schedule cache, so every later request with the same
-    cache key — same expression/format, dims bucket, sparsity bucket —
-    serves compiled with NO search. ``mem_budget`` (bytes or ``"64MB"``)
+    batched decode. The server coalesces the submitted requests by
+    compiled-cache key into batched vmapped dispatches of width ``batch``
+    and overlaps host encode / device execute / host decode across
+    consecutive dispatches (docs/SERVING.md); ``use_server=False`` keeps
+    the legacy one-dispatch-at-a-time loop (the sequential baseline that
+    ``benchmarks/serving.py`` measures against). ``split={var: n}``
+    applies §4.4 iteration splitting AND parallel lane duplication over
+    that variable; with multiple devices the lanes shard over the device
+    mesh. ``autotune=True`` picks the whole schedule instead: the first
+    request shape searches the schedule space (cost-model ranking,
+    ``core.autoschedule``) and persists the winner in the on-disk
+    schedule cache, so every later request with the same cache key —
+    same expression/format, dims bucket, sparsity bucket — serves
+    compiled with NO search. ``mem_budget`` (bytes or ``"64MB"``)
     bounds peak device allocation: requests whose untiled estimate
     exceeds it route through the out-of-core tiled driver automatically
     (docs/TILING.md). Returns (results of the last dispatch, engine
@@ -231,26 +237,52 @@ def serve_sam(expr: str, order: str, formats, dims, *, batch: int = 8,
                 arrays[acc.tensor] = random_operand(shape, density, rng)
         return arrays
 
-    def dispatch():
-        ops = [operand_set() for _ in range(batch)]
-        if shard:
-            return eng.execute_many(ops)
-        return eng.execute_batch(ops)
+    if not use_server:
+        # legacy sequential loop: one hand-assembled dispatch at a time
+        # (the baseline benchmarks/serving.py compares the server against)
+        def dispatch():
+            ops = [operand_set() for _ in range(batch)]
+            if shard:
+                return eng.execute_many(ops)
+            return eng.execute_batch(ops)
 
-    # dispatch 1 pays the capacity-record + trace cost; the rest hit cache
-    t0 = time.perf_counter()
-    results = dispatch()
-    t_first = time.perf_counter() - t0
-    t1 = time.perf_counter()
-    for _ in range(max(reps - 1, 0)):
-        results = dispatch()
-    if reps > 1:
-        warm = (time.perf_counter() - t1) / (reps - 1)
-        warm_txt = f"warm={warm * 1e3:.1f}ms/dispatch ({batch / warm:.1f} expr/s)"
-    else:
-        warm_txt = "warm=n/a (reps<2)"
-    log(f"[serve-sam] {expr!r}: batch={batch} reps={reps} "
-        f"first={t_first * 1e3:.1f}ms {warm_txt}")
+        t0 = time.perf_counter()
+        results = dispatch()      # dispatch 1 pays record + trace cost
+        t_first = time.perf_counter() - t0
+        t1 = time.perf_counter()
+        for _ in range(max(reps - 1, 0)):
+            results = dispatch()
+        if reps > 1:
+            warm = (time.perf_counter() - t1) / (reps - 1)
+            warm_txt = (f"warm={warm * 1e3:.1f}ms/dispatch "
+                        f"({batch / warm:.1f} expr/s)")
+        else:
+            warm_txt = "warm=n/a (reps<2)"
+        log(f"[serve-sam] {expr!r}: batch={batch} reps={reps} "
+            f"first={t_first * 1e3:.1f}ms {warm_txt}")
+        log(f"[serve-sam] engine stats: {eng.stats}")
+        return results, eng.stats
+
+    # continuous-batching server: submit the whole load as one burst;
+    # the batcher coalesces same-key requests into vmapped dispatches of
+    # width ``batch`` while the async pipeline overlaps encode/execute/
+    # decode across consecutive dispatches (docs/SERVING.md)
+    from ..core.serving import Request, SamServer
+
+    srv = SamServer(max_batch=batch)
+    reqs = [Request(expr if isinstance(expr, str) else str(expr),
+                    operand_set(), formats=fmt, dims=dims, density=density)
+            for _ in range(batch * max(reps, 1))]
+    handles = srv.submit_many(reqs, engine=eng)
+    srv.drain(timeout=600)
+    results = [h.result() for h in handles[-batch:]]
+    sstats = srv.stats()
+    srv.shutdown()
+    log(f"[serve-sam] {expr!r}: {sstats['completed']} requests in "
+        f"{sstats['dispatches']} dispatches "
+        f"(occupancy {sstats['batch_occupancy']:.1f}): "
+        f"{sstats['requests_per_sec']:.1f} req/s "
+        f"p50={sstats['p50_ms']:.1f}ms p99={sstats['p99_ms']:.1f}ms")
     log(f"[serve-sam] engine stats: {eng.stats}")
     return results, eng.stats
 
@@ -305,24 +337,25 @@ def serve_program(text: str, formats, dims, *, batch: int = 8,
                             tuple(dims[v] for v in f.vars), density, rng)
         return out
 
-    def dispatch():
-        return [cp(operand_set()) for _ in range(batch)]
+    # program requests stream through the same continuous-batching
+    # server (coalesced by program cache key; stages execute per request
+    # inside the pipeline's dispatch stage)
+    from ..core.serving import Request, SamServer
 
-    t0 = time.perf_counter()
-    results = dispatch()     # first dispatch pays record + trace
-    t_first = time.perf_counter() - t0
-    t1 = time.perf_counter()
-    for _ in range(max(reps - 1, 0)):
-        results = dispatch()
-    if reps > 1:
-        warm = (time.perf_counter() - t1) / (reps - 1)
-        warm_txt = (f"warm={warm * 1e3:.1f}ms/dispatch "
-                    f"({batch / warm:.1f} programs/s)")
-    else:
-        warm_txt = "warm=n/a (reps<2)"
+    srv = SamServer(max_batch=batch)
+    reqs = [Request(text, operand_set(), formats=fmt, dims=dims,
+                    density=density)
+            for _ in range(batch * max(reps, 1))]
+    handles = srv.submit_many(reqs, engine=cp)
+    srv.drain(timeout=600)
+    results = [h.result() for h in handles[-batch:]]
+    sstats = srv.stats()
+    srv.shutdown()
     log(f"[serve-program] {len(prog.assigns)} stages, outputs="
-        f"{','.join(prog.outputs)}: batch={batch} reps={reps} "
-        f"first={t_first * 1e3:.1f}ms {warm_txt}")
+        f"{','.join(prog.outputs)}: {sstats['completed']} requests in "
+        f"{sstats['dispatches']} dispatches: "
+        f"{sstats['requests_per_sec']:.1f} req/s "
+        f"p50={sstats['p50_ms']:.1f}ms p99={sstats['p99_ms']:.1f}ms")
     log(f"[serve-program] program stats: {cp.stats}")
     return results, cp.stats
 

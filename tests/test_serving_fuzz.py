@@ -1,0 +1,118 @@
+"""Property/fuzz suite: random request interleavings never
+cross-contaminate batches.
+
+Requests for ≥3 distinct compiled-cache keys (different expressions,
+formats spanning ``d``/``c`` levels, plus engine-unsupported ``b``
+bitvector formats) are interleaved in random submission orders through a
+deterministic sync-mode server. The properties:
+
+1. every admitted request's result equals its numpy oracle — whatever
+   batch it rode in, it computed ITS operands under ITS
+   expression/format (no cross-key contamination);
+2. ``b``-format requests are refused at admission
+   (``reason="unsupported-format"``) and their refusal never perturbs
+   the d/c requests batched around them;
+3. dispatch accounting is consistent: per-key dispatch counts respect
+   coalescing bounds (``ceil(count / max_batch)`` dispatches per key at
+   minimum — groups only form within one key).
+
+Runs under ``tests/_hypothesis_stub.py`` when hypothesis is absent
+(deterministic seeded examples), like ``test_coord_ops_fuzz.py``.
+"""
+import numpy as np
+
+try:
+    from hypothesis import given, settings, strategies as hst
+except ImportError:
+    from _hypothesis_stub import given, settings, strategies as hst
+
+from repro.core.serving import AdmissionError, Request, SamServer
+
+N = 6
+
+# ≥3 distinct cache keys: expression text, formats (d and c levels
+# mixed), and the numpy oracle for each. The "bv" flavor carries a
+# bitvector format the compiled engine refuses at admission.
+FLAVORS = {
+    "mv_cc": {"expr": "x(i) = B(i,j) * c(j)",
+              "formats": {"B": "cc", "c": "c"},
+              "oracle": lambda o: o["B"] @ o["c"]},
+    "mv_dc": {"expr": "y(i) = D(i,j) * e(j)",
+              "formats": {"D": "dc", "e": "d"},
+              "oracle": lambda o: o["D"] @ o["e"]},
+    "mm_cc": {"expr": "X(i,j) = B(i,k) * C(k,j)",
+              "formats": {"B": "cc", "C": "cc"},
+              "oracle": lambda o: o["B"] @ o["C"]},
+    "add_c": {"expr": "s(i) = u(i) + v(i)",
+              "formats": {"u": "c", "v": "c"},
+              "oracle": lambda o: o["u"] + o["v"]},
+    "bv": {"expr": "x(i) = B(i,j) * c(j)",
+           "formats": {"B": "bb", "c": "c"},
+           "oracle": None},
+}
+
+
+def _operands(flavor: str, rng) -> dict:
+    def sp(shape):
+        return ((rng.random(shape) < 0.5)
+                * rng.integers(1, 9, shape)).astype(np.float32)
+    if flavor in ("mv_cc", "mv_dc", "bv"):
+        mat = "B" if flavor != "mv_dc" else "D"
+        vec = "c" if flavor != "mv_dc" else "e"
+        return {mat: sp((N, N)), vec: sp(N)}
+    if flavor == "mm_cc":
+        return {"B": sp((N, N)), "C": sp((N, N))}
+    return {"u": sp(N), "v": sp(N)}
+
+
+@hst.composite
+def interleaving(draw):
+    """A random interleaved request stream over ≥3 cache keys with a
+    sprinkling of refused bitvector requests."""
+    seed = draw(hst.integers(0, 2 ** 31 - 1))
+    max_batch = draw(hst.integers(2, 4))
+    n_req = draw(hst.integers(6, 14))
+    rng = np.random.default_rng(seed)
+    names = list(FLAVORS)
+    # ensure ≥3 distinct d/c keys appear, then fill randomly
+    stream = ["mv_cc", "mv_dc", "mm_cc"]
+    stream += [names[int(rng.integers(0, len(names)))]
+               for _ in range(n_req - 3)]
+    stream = [stream[i] for i in rng.permutation(len(stream))]
+    return [(f, _operands(f, rng)) for f in stream], max_batch
+
+
+@settings(max_examples=5, deadline=None)
+@given(interleaving())
+def test_interleaved_batches_never_cross_contaminate(case):
+    stream, max_batch = case
+    srv = SamServer(sync=True, max_batch=max_batch)
+    handles = srv.submit_many(
+        [Request(FLAVORS[f]["expr"], ops,
+                 formats=FLAVORS[f]["formats"]) for f, ops in stream])
+    srv.flush()
+
+    admitted = {}
+    for (flavor, ops), h in zip(stream, handles):
+        if flavor == "bv":
+            # refused at admission, not dispatched in anyone's batch
+            err = h.exception()
+            assert isinstance(err, AdmissionError)
+            assert err.reason == "unsupported-format"
+            continue
+        got = h.result().to_dense()
+        want = FLAVORS[flavor]["oracle"](ops)
+        # integer-valued operands: float32 sums are exact
+        assert np.array_equal(got, want), flavor
+        admitted[flavor] = admitted.get(flavor, 0) + 1
+
+    st = srv.stats()
+    srv.shutdown()
+    total = sum(admitted.values())
+    assert st["completed"] == total
+    assert st["rejected"] == len(stream) - total
+    # groups form within one key only: at least ceil(n/max_batch)
+    # dispatches per key, and no dispatch wider than max_batch
+    min_dispatches = sum(-(-c // max_batch) for c in admitted.values())
+    assert st["dispatches"] >= min_dispatches
+    assert st["max_batch_seen"] <= max_batch
