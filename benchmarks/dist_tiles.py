@@ -1,0 +1,149 @@
+"""Distributed tile fan-out benchmark: 2-D (tiles × lanes) execution
+over simulated workers (DESIGN.md §10, docs/DISTRIBUTED.md).
+
+The expression ``X(i,j) = B(i,k) * C(k,j)`` is tiled into an 8-tile
+coordinate grid and the grid is fanned out over 1/2/4 simulated workers
+(``core.dist_exec.DistTiledExpr``). Three contracts:
+
+1. **modeled scaling** — ``simulate_expr(..., workers=w)`` applies the
+   max-over-devices cycle law (tile ``t`` on worker ``t mod w``, steady
+   states add per worker, machine takes the max): modeled tile
+   throughput at 4 workers must be ≥ 2.5x the single-device figure.
+   Wall-clock on ONE host cannot show this — every "device" here is a
+   forced-host-platform slice of the same CPU — so the model is the
+   scaling oracle, exactly as the autoscheduler uses it.
+2. **bit-identical fan-out** — the real driver's result bytes equal the
+   single-device ``TiledExpr`` fold AND the numpy oracle for every
+   worker count (the deterministic grid-order merge, not completion
+   order, fixes the float fold).
+3. **chaos survival** — an injected kill of a worker mid-run retries the
+   lost tile on a survivor, shrinks the mesh, and still produces
+   bit-identical bytes; the stats record exactly one lost worker.
+
+Writes ``BENCH_dist.json`` (modeled cycles per worker count, scaling,
+the 2.5x floor, chaos stats) at the repo root so CI can upload the
+trajectory. CSV rows: ``dist_tiles,<phase>,<value>,<wall_us>,<derived>``.
+
+    PYTHONPATH=src python -m benchmarks.run dist_tiles
+    PYTHONPATH=src python benchmarks/dist_tiles.py --smoke
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import numpy as np
+
+from repro.core.dist_exec import DistTiledExpr, InjectedFault, dist_compile
+from repro.core.jax_backend import compile_expr
+from repro.core.schedule import Format, Schedule
+from repro.core.simulator import simulate_expr
+
+# module-level rng (not benchmarks.common.RNG: this file also runs as a
+# plain script in the CI smoke job, outside the package)
+RNG = np.random.default_rng(20230325)
+
+EXPR = "X(i,j) = B(i,k) * C(k,j)"
+FMT = Format({"B": "cc", "C": "cc"})
+ORDER = ("i", "k", "j")
+TILE = {"i": 4, "k": 2}          # 8 tiles -> 2 per worker at 4 workers
+WORKER_COUNTS = (1, 2, 4)
+SCALING_FLOOR = 2.5              # modeled 4-worker speedup over 1 worker
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def _operands(n: int, density: float):
+    """Integer-valued operands: every f32 partial sum is exact, so
+    bit-identity across merge paths is a hard check, not a tolerance."""
+    B = ((RNG.random((n, n)) < density)
+         * RNG.integers(1, 9, (n, n))).astype(float)
+    C = ((RNG.random((n, n)) < density)
+         * RNG.integers(1, 9, (n, n))).astype(float)
+    return B, C
+
+
+def run(log, smoke: bool = False) -> bool:
+    n = 24 if smoke else 48
+    density = 0.3 if smoke else 0.2
+    dims = {"i": n, "j": n, "k": n}
+    sch = Schedule(loop_order=ORDER, tile=dict(TILE))
+    B, C = _operands(n, density)
+    arrays = {"B": B, "C": C}
+    want = B @ C
+
+    # 1. modeled scaling: the max-over-devices cycle law at 1/2/4 workers
+    cycles = {}
+    for w in WORKER_COUNTS:
+        t0 = time.perf_counter()
+        res = simulate_expr(EXPR, FMT, sch, arrays, dims, workers=w)
+        sim_us = (time.perf_counter() - t0) * 1e6
+        cycles[w] = res.cycles
+        log(f"dist_tiles,modeled_w{w},{res.cycles}cyc,{sim_us:.0f},"
+            f"tiles={res.tiles}")
+        if not np.array_equal(res.dense, want):
+            log(f"dist_tiles,modeled_w{w},MISMATCH,0,sim-vs-numpy")
+            return False
+    scaling = cycles[1] / cycles[max(WORKER_COUNTS)]
+    scale_ok = scaling >= SCALING_FLOOR
+    log(f"dist_tiles,scaling,{scaling:.2f}x,0,"
+        f"{'pass' if scale_ok else 'BELOW_FLOOR'}(floor={SCALING_FLOOR}x)")
+
+    # 2. real driver: bit-identical to single-device fold + numpy oracle
+    base = compile_expr(EXPR, FMT, sch, dims)
+    ref = base(arrays).to_dense()
+    identical = bool(np.array_equal(ref, want))
+    wall = {}
+    for w in WORKER_COUNTS:
+        eng = dist_compile(EXPR, FMT, sch, dims, workers=w)
+        t0 = time.perf_counter()
+        out = eng(arrays).to_dense()
+        wall[w] = (time.perf_counter() - t0) * 1e6
+        same = (out.tobytes() == ref.tobytes())
+        identical &= same
+        log(f"dist_tiles,fanout_w{w},{eng.stats['tile_calls']}tile_calls,"
+            f"{wall[w]:.0f},{'bit-identical' if same else 'MISMATCH'}")
+
+    # 3. chaos survival: kill worker 1 on its first tile, still identical
+    tiled = compile_expr(EXPR, FMT, sch, dims)
+    chaos = DistTiledExpr(tiled, workers=4, faults=[
+        InjectedFault(tile=1, worker=1, attempt=0, kind="kill")])
+    t0 = time.perf_counter()
+    out = chaos(arrays).to_dense()
+    chaos_us = (time.perf_counter() - t0) * 1e6
+    chaos_same = out.tobytes() == ref.tobytes()
+    st = chaos.stats
+    chaos_ok = (chaos_same and st["workers_lost"] == 1
+                and st["retries"] >= 1 and len(chaos.live_workers) == 3)
+    log(f"dist_tiles,chaos_kill,lost={st['workers_lost']}"
+        f":retries={st['retries']},{chaos_us:.0f},"
+        f"{'bit-identical' if chaos_same else 'MISMATCH'}")
+
+    ok = scale_ok and identical and chaos_ok
+    log(f"dist_tiles/summary,tiles,{base.n_tiles},workers,"
+        f"{max(WORKER_COUNTS)},scaling,{scaling:.2f}x,"
+        f"derived,{'pass' if ok else 'FAIL'}")
+
+    out_json = {
+        "bench": "dist_tiles", "smoke": smoke,
+        "expr": EXPR, "n": n, "tile": TILE, "tiles": base.n_tiles,
+        "modeled_cycles": {str(w): cycles[w] for w in WORKER_COUNTS},
+        "scaling_4w": round(scaling, 2), "scaling_floor": SCALING_FLOOR,
+        "wall_us": {str(w): round(wall[w]) for w in WORKER_COUNTS},
+        "bit_identical": identical,
+        "chaos": {"workers_lost": st["workers_lost"],
+                  "retries": st["retries"],
+                  "replans": st["replans"],
+                  "live_workers": len(chaos.live_workers),
+                  "bit_identical": chaos_same},
+    }
+    (ROOT / "BENCH_dist.json").write_text(json.dumps(out_json, indent=2)
+                                          + "\n")
+    return ok
+
+
+if __name__ == "__main__":
+    import sys
+    ok = run(lambda s: print(s, flush=True),
+             smoke="--smoke" in sys.argv)
+    sys.exit(0 if ok else 1)

@@ -18,9 +18,9 @@ import time
 
 
 def main() -> None:
-    from . import (autotune, compiled_cache, fig11, fig12, fig13, fig14,
-                   fig15, moe_dispatch, program_fusion, serving,
-                   split_scaling, table1, table2, tiled_oob)
+    from . import (autotune, compiled_cache, dist_tiles, fig11, fig12,
+                   fig13, fig14, fig15, moe_dispatch, program_fusion,
+                   serving, split_scaling, table1, table2, tiled_oob)
     benches = {
         "table1": table1.run, "table2": table2.run,
         "fig11": fig11.run, "fig12": fig12.run, "fig13": fig13.run,
@@ -32,6 +32,7 @@ def main() -> None:
         "program_fusion": program_fusion.run,
         "tiled_oob": tiled_oob.run,
         "serving": serving.run,
+        "dist_tiles": dist_tiles.run,
     }
     args = sys.argv[1:]
     smoke = "--smoke" in args

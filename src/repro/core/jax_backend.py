@@ -1332,6 +1332,25 @@ class TiledExpr:
                     if lv.format == COMPRESSED:
                         cur[i] = max(cur[i], _bucket(len(lv.crd)))
 
+    def _finalize(self, acc_k: np.ndarray, acc_v: np.ndarray,
+                  total: float) -> FiberTree:
+        """Assemble the merged tile partials — the accumulated COO, or
+        the running scalar ``total`` — into the result ``FiberTree`` in
+        the ORIGINAL coordinate space, exactly as the untiled
+        ``CompiledExpr`` would return it. Shared with the distributed
+        tile driver (``dist_exec.DistTiledExpr``) so both paths produce
+        bit-identical results by construction."""
+        if self._scalar:
+            return FiberTree.from_dense(np.asarray(float(total)), "")
+        # coo_to_fibertree also drops zeros (cancelled partial sums)
+        lhs = self.assign.lhs
+        return coo_to_fibertree(
+            acc_k, acc_v, np.ones(len(acc_k), bool), self._out_strides,
+            tuple(self.dims[v] for v in self.rvars),
+            self.fmt.of(lhs.tensor, len(self.rvars))
+            or "c" * len(self.rvars),
+            tuple(lhs.vars.index(v) for v in self.rvars))
+
     def __call__(self, arrays: Dict[str, np.ndarray]) -> FiberTree:
         """Execute one operand set tile by tile; returns the result
         ``FiberTree`` in the ORIGINAL coordinate space, exactly as the
@@ -1355,16 +1374,7 @@ class TiledExpr:
             acc_k, acc_v = co.accumulate_coo(
                 acc_k, acc_v, self._global_keys(coords, tids), vals,
                 key_bound=self._key_bound)
-        if self._scalar:
-            return FiberTree.from_dense(np.asarray(float(total)), "")
-        # coo_to_fibertree also drops zeros (cancelled partial sums)
-        lhs = self.assign.lhs
-        return coo_to_fibertree(
-            acc_k, acc_v, np.ones(len(acc_k), bool), self._out_strides,
-            tuple(self.dims[v] for v in self.rvars),
-            self.fmt.of(lhs.tensor, len(self.rvars))
-            or "c" * len(self.rvars),
-            tuple(lhs.vars.index(v) for v in self.rvars))
+        return self._finalize(acc_k, acc_v, total)
 
     def execute(self, arrays: Dict[str, np.ndarray]) -> FiberTree:
         """Alias of ``__call__`` (API parity with ``CompiledExpr``)."""

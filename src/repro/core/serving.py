@@ -136,7 +136,9 @@ class ResultHandle:
         self._result: Any = None
         self._error: Optional[BaseException] = None
         self.submitted_at = clock()
-        self.latency_s: Optional[float] = None
+        self.latency_s: Optional[float] = None       # submit -> done
+        self.service_s: Optional[float] = None       # dispatch -> done
+        self.queue_wait_s: Optional[float] = None    # submit -> dispatch
 
     def done(self) -> bool:
         return self._event.is_set()
@@ -155,9 +157,13 @@ class ResultHandle:
         return self._error
 
     def _fulfill(self, result=None, error: Optional[BaseException] = None,
-                 latency_s: Optional[float] = None) -> None:
+                 latency_s: Optional[float] = None,
+                 service_s: Optional[float] = None,
+                 queue_wait_s: Optional[float] = None) -> None:
         self._result, self._error = result, error
         self.latency_s = latency_s
+        self.service_s = service_s
+        self.queue_wait_s = queue_wait_s
         self._event.set()
 
 
@@ -177,6 +183,7 @@ class _Group:
     entry: _EngineEntry
     handles: List[ResultHandle]
     arrays: List[Dict[str, np.ndarray]]
+    started_at: float = 0.0     # when the dispatch left the queue
     enc: Any = None
     out: Any = None
     results: Optional[List] = None
@@ -184,10 +191,13 @@ class _Group:
 
 
 def _engine_kind(engine) -> str:
+    from .dist_exec import DistTiledExpr
+
     if isinstance(engine, CompiledProgram):
         return "program"
-    if isinstance(engine, TiledExpr):
-        return "seq"       # tiles stream sequentially; no vmap batch axis
+    if isinstance(engine, (TiledExpr, DistTiledExpr)):
+        return "seq"       # tiles stream sequentially (or fan out over
+        #                    workers inside the request); no vmap batch axis
     if isinstance(engine, CompiledExpr) and engine._shard_lanes:
         return "many"      # shard_map cannot nest inside the batch vmap
     return "batch"
@@ -285,6 +295,8 @@ class SamServer:
         self._max_batch_seen = 0
         self._max_queue_depth = 0
         self._latencies: deque = deque(maxlen=4096)
+        self._service_lat: deque = deque(maxlen=4096)
+        self._queue_waits: deque = deque(maxlen=4096)
         self._first_submit_t: Optional[float] = None
         self._last_done_t: Optional[float] = None
 
@@ -515,7 +527,8 @@ class SamServer:
         if not self._queue:
             return None
         key0, handle, entry, arrays = self._queue.popleft()
-        group = _Group(entry=entry, handles=[handle], arrays=[arrays])
+        group = _Group(entry=entry, handles=[handle], arrays=[arrays],
+                       started_at=self._clock())
         if len(group.handles) < self.max_batch:
             keep = deque()
             while self._queue:
@@ -562,12 +575,20 @@ class SamServer:
                 group.error = e
         now = self._clock()
         results = group.results or []
+        # service latency runs dispatch-start -> done; queue wait runs
+        # submit -> dispatch-start. Together they partition the
+        # queue-inclusive latency, so a burst submit no longer makes the
+        # service figure look pathological (see stats()).
+        service = now - group.started_at
         for i, handle in enumerate(group.handles):
             lat = now - handle.submitted_at
+            wait = group.started_at - handle.submitted_at
             if group.error is not None:
-                handle._fulfill(error=group.error, latency_s=lat)
+                handle._fulfill(error=group.error, latency_s=lat,
+                                service_s=service, queue_wait_s=wait)
             else:
-                handle._fulfill(result=results[i], latency_s=lat)
+                handle._fulfill(result=results[i], latency_s=lat,
+                                service_s=service, queue_wait_s=wait)
         with self._lock:
             n = len(group.handles)
             self._dispatches += 1
@@ -580,6 +601,10 @@ class SamServer:
             else:
                 self._completed += n
                 self._latencies.extend(h.latency_s for h in group.handles)
+                self._service_lat.extend(h.service_s
+                                         for h in group.handles)
+                self._queue_waits.extend(h.queue_wait_s
+                                         for h in group.handles)
             self._last_done_t = now
             self._done.notify_all()
 
@@ -703,9 +728,26 @@ class SamServer:
         ``batched_requests`` (their ratio is ``batch_occupancy``),
         ``max_batch_seen``, ``tiled_requests`` (admitted out-of-core),
         ``p50_ms``/``p99_ms`` over the completed-request latencies, and
-        ``requests_per_sec`` (completed over first-submit→last-done)."""
+        ``requests_per_sec`` (completed over first-submit→last-done).
+
+        ``p50_ms``/``p99_ms`` are *queue-inclusive* (submit → done), so a
+        burst submit inflates them with queue wait.
+        ``service_p50_ms``/``service_p99_ms`` cover only dispatch-start →
+        done, and ``queue_wait_p50_ms``/``queue_wait_p99_ms`` cover
+        submit → dispatch-start; use those to tell congestion apart from
+        slow execution."""
+
+        def _pcts(samples: deque) -> tuple:
+            arr = np.asarray(samples, dtype=float)
+            if not arr.size:
+                return 0.0, 0.0
+            return (float(np.percentile(arr, 50) * 1e3),
+                    float(np.percentile(arr, 99) * 1e3))
+
         with self._lock:
             lat = np.asarray(self._latencies, dtype=float)
+            service_p50, service_p99 = _pcts(self._service_lat)
+            wait_p50, wait_p99 = _pcts(self._queue_waits)
             elapsed = None
             if self._first_submit_t is not None and self._last_done_t:
                 elapsed = self._last_done_t - self._first_submit_t
@@ -728,6 +770,10 @@ class SamServer:
                 if lat.size else 0.0,
                 "p99_ms": float(np.percentile(lat, 99) * 1e3)
                 if lat.size else 0.0,
+                "service_p50_ms": service_p50,
+                "service_p99_ms": service_p99,
+                "queue_wait_p50_ms": wait_p50,
+                "queue_wait_p99_ms": wait_p99,
                 "elapsed_s": elapsed or 0.0,
                 "requests_per_sec": (self._completed / elapsed
                                      if elapsed else 0.0),

@@ -732,6 +732,16 @@ class ExprSimResult:
     so modeled numbers stay comparable with the measured tiled engine
     (``jax_backend.TiledExpr``). ``tiles`` is the tile-grid volume (1 =
     untiled).
+
+    ``workers > 1`` models the distributed tile fan-out
+    (``dist_exec.DistTiledExpr``): tiles round-robin over the workers
+    (the driver's assignment), each worker streams ITS tiles
+    back-to-back, and the workers run concurrently — so per-tile steady
+    states add PER WORKER and the machine-wide steady term is the MAX
+    over workers, not the sum. The grid-order merge stays one downstream
+    fold and the per-worker pipelines fill concurrently:
+    ``cycles = max(max over workers of its tiles' steady sum,
+    merge work) + fill``.
     """
 
     dense: Any
@@ -739,6 +749,7 @@ class ExprSimResult:
     lanes: List[LaneSim]
     merge_work: int
     tiles: int = 1
+    workers: int = 1
 
     @property
     def lane_cycles(self) -> List[int]:
@@ -803,7 +814,8 @@ def sampled_cycles(expr, fmt, schedule, arrays, dims, *,
     return simulate_expr(assign, fmt, schedule, s_arrays, s_dims).cycles
 
 
-def simulate_expr(expr, fmt, schedule, arrays, dims) -> ExprSimResult:
+def simulate_expr(expr, fmt, schedule, arrays, dims, *,
+                  workers: int = 1) -> ExprSimResult:
     """Lower (split + parallelize + tile) and simulate an expression
     end-to-end.
 
@@ -815,7 +827,10 @@ def simulate_expr(expr, fmt, schedule, arrays, dims) -> ExprSimResult:
     (the lane-join unioner/reducer of §4.4). Tiled schedules
     (``Schedule.tile``, the out-of-core knob) simulate every coordinate
     tile through the tile-free inner schedule and combine them under the
-    streaming cycle law described on ``ExprSimResult``.
+    streaming cycle law described on ``ExprSimResult``; ``workers``
+    spreads the tile stream over that many concurrent devices under the
+    max-over-devices law (untiled expressions are one unit of work, so
+    ``workers`` does not change them).
 
     >>> import numpy as np
     >>> from repro.core.schedule import Format, Schedule
@@ -831,11 +846,19 @@ def simulate_expr(expr, fmt, schedule, arrays, dims) -> ExprSimResult:
     ...                       {"B": B, "c": np.ones(3)}, {"i": 2, "j": 3})
     >>> tiled.dense.tolist(), tiled.tiles
     ([3.0, 3.0], 3)
+    >>> dist = simulate_expr("x(i) = B(i,j) * c(j)", Format({"B": "cc"}),
+    ...                      Schedule(loop_order=("i", "j"),
+    ...                               tile={"j": 3}),
+    ...                      {"B": B, "c": np.ones(3)}, {"i": 2, "j": 3},
+    ...                      workers=3)
+    >>> dist.dense.tolist(), dist.workers, dist.cycles <= tiled.cycles
+    ([3.0, 3.0], 3, True)
     """
     from .custard import lower
 
     if getattr(schedule, "tile", None):
-        return _simulate_tiled(expr, fmt, schedule, arrays, dims)
+        return _simulate_tiled(expr, fmt, schedule, arrays, dims,
+                               workers=workers)
 
     low = lower(expr, fmt, schedule, dims)
     tensors = low.build_inputs(arrays)
@@ -877,7 +900,8 @@ def simulate_expr(expr, fmt, schedule, arrays, dims) -> ExprSimResult:
                          merge_work=merge_work)
 
 
-def _simulate_tiled(expr, fmt, schedule, arrays, dims) -> ExprSimResult:
+def _simulate_tiled(expr, fmt, schedule, arrays, dims,
+                    workers: int = 1) -> ExprSimResult:
     """Simulate a ``Schedule.tile`` schedule: one inner simulation per
     coordinate tile, combined under the streaming law.
 
@@ -886,6 +910,14 @@ def _simulate_tiled(expr, fmt, schedule, arrays, dims) -> ExprSimResult:
     terms ADD and the pipeline fills once; the tile-merge stage — each
     tile's partial folds into the running result — runs concurrently
     downstream:  ``cycles = max(Σ steady_t, Σ merge_t) + fill``.
+
+    With ``workers > 1`` (the distributed fan-out,
+    ``dist_exec.DistTiledExpr``) tile ``t`` runs on worker
+    ``t mod workers`` — the driver's round-robin assignment — and the
+    workers stream concurrently: steady states add PER WORKER and the
+    machine-wide steady term is the MAX over workers, not the sum. The
+    grid-order merge fold and the one-time pipeline fill are unchanged:
+    ``cycles = max(max_w Σ steady_t[t ≡ w], Σ merge_t) + fill``.
     """
     from . import tiling
     from .einsum import parse
@@ -900,14 +932,16 @@ def _simulate_tiled(expr, fmt, schedule, arrays, dims) -> ExprSimResult:
     lhs_vars = assign.lhs.vars
     out: Any = (np.zeros(tuple(dims[v] for v in lhs_vars)) if lhs_vars
                 else 0.0)
-    steady_sum, fill, merge_work = 0, 0, 0
+    per_worker = [0] * max(int(workers), 1)
+    fill, merge_work = 0, 0
     lanes: List[LaneSim] = []
-    for tids in tiling.tile_grid(tile):
+    for t_i, tids in enumerate(tiling.tile_grid(tile)):
         sliced = tiling.slice_operands(assign, arrays, dims, tile, tids)
         res = simulate_expr(assign, fmt, inner, sliced, ext)
         lanes.extend(res.lanes)
-        steady_sum += max((max(ls.result.work.values(), default=1)
-                           for ls in res.lanes), default=1)
+        per_worker[t_i % len(per_worker)] += max(
+            (max(ls.result.work.values(), default=1)
+             for ls in res.lanes), default=1)
         fill = max(fill, max((ls.result.graph.depth()
                               for ls in res.lanes), default=0) + 1)
         # the tile's live partial folds into the running result (the
@@ -932,7 +966,8 @@ def _simulate_tiled(expr, fmt, schedule, arrays, dims) -> ExprSimResult:
                 out[tuple(idx)] += d
         else:
             out = out + res.dense
-    cycles = max(steady_sum, merge_work) + fill
+    cycles = max(max(per_worker), merge_work) + fill
     return ExprSimResult(dense=out if lhs_vars else np.asarray(out),
                          cycles=cycles, lanes=lanes, merge_work=merge_work,
-                         tiles=tiling.n_tiles(tile))
+                         tiles=tiling.n_tiles(tile),
+                         workers=len(per_worker))

@@ -37,6 +37,14 @@ batched sparse-expression serving through the compiled SAM engine.
         --sam "X(i,j) = B(i,k) * C(k,j)" --sam-order ikj \
         --sam-formats B=cc,C=dd --sam-dims i=512,j=512,k=512 \
         --mem-budget 24MB --batch 2 --reps 2
+
+    # distributed out-of-core serving: over-budget requests tile AND the
+    # tiles spread over N simulated workers with fault-tolerant retry
+    # (docs/DISTRIBUTED.md); --workers forces the host device count
+    PYTHONPATH=src python -m repro.launch.serve \
+        --sam "X(i,j) = B(i,k) * C(k,j)" --sam-order ikj \
+        --sam-formats B=cc,C=dd --sam-dims i=512,j=512,k=512 \
+        --mem-budget 24MB --workers 4 --batch 2 --reps 2
 """
 from __future__ import annotations
 
@@ -47,15 +55,20 @@ import time
 
 if __name__ == "__main__":
     # must run before jax initializes: force the host platform device count
-    # so --devices can shard lane dispatch even on a CPU-only machine
-    _dv = None
-    for _i, _a in enumerate(sys.argv[1:], 1):
-        if _a == "--devices" and _i + 1 < len(sys.argv):
-            _dv = sys.argv[_i + 1]
-        elif _a.startswith("--devices="):
-            _dv = _a.split("=", 1)[1]
-    if _dv and _dv.isdigit() and ("--xla_force_host_platform_device_count"
-                                  not in os.environ.get("XLA_FLAGS", "")):
+    # so --devices (lane sharding) and --workers (distributed tiles) can
+    # place work on distinct devices even on a CPU-only machine
+    _dv = 0
+    for _flag in ("--devices", "--workers"):
+        for _i, _a in enumerate(sys.argv[1:], 1):
+            _v = None
+            if _a == _flag and _i + 1 < len(sys.argv):
+                _v = sys.argv[_i + 1]
+            elif _a.startswith(_flag + "="):
+                _v = _a.split("=", 1)[1]
+            if _v and _v.isdigit():
+                _dv = max(_dv, int(_v))
+    if _dv > 1 and ("--xla_force_host_platform_device_count"
+                    not in os.environ.get("XLA_FLAGS", "")):
         os.environ["XLA_FLAGS"] = (
             f"--xla_force_host_platform_device_count={_dv} "
             + os.environ.get("XLA_FLAGS", ""))
@@ -113,8 +126,9 @@ def _parse_kv(text: str, cast=str):
 
 def serve_sam(expr: str, order: str, formats, dims, *, batch: int = 8,
               reps: int = 8, density: float = 0.1, seed: int = 0,
-              split=None, devices: int = 0, autotune: bool = False,
-              mem_budget=None, use_server: bool = True, log=print):
+              split=None, devices: int = 0, workers: int = 0,
+              autotune: bool = False, mem_budget=None,
+              use_server: bool = True, log=print):
     """Sparse-expression serving: compile ONCE, then stream requests
     through the continuous-batching server (``core.serving.SamServer``).
 
@@ -217,6 +231,17 @@ def serve_sam(expr: str, order: str, formats, dims, *, batch: int = 8,
     elif mem_budget is not None:
         log(f"[serve-sam] mem-budget {tiling.format_bytes(mem_budget)}: "
             f"untiled estimate fits, serving in-core")
+    if workers and workers > 1:
+        if tiled:
+            from ..core.dist_exec import DistTiledExpr
+
+            eng = DistTiledExpr(eng, workers=workers)
+            log(f"[serve-sam] --workers {workers}: {eng.n_tiles} tiles "
+                f"DISTRIBUTED over {len(eng.workers)} simulated worker(s) "
+                f"with fault-tolerant retry (docs/DISTRIBUTED.md)")
+        else:
+            log(f"[serve-sam] --workers {workers}: request fits in-core "
+                f"(untiled), nothing to distribute; serving single-device")
     if split:
         log(f"[serve-sam] split={split} parallelize={sch.parallelize}: "
             f"{eng.par_n}-lane {eng.low.merge_kind}-merge, "
@@ -389,6 +414,12 @@ def main(argv=None):
                     help="shard parallel lanes over this many devices "
                          "(forces the host device count when run as a "
                          "script on CPU)")
+    ap.add_argument("--workers", type=int, default=0,
+                    help="distribute out-of-core tile grids over this "
+                         "many simulated workers with fault-tolerant "
+                         "retry (docs/DISTRIBUTED.md); needs --mem-budget "
+                         "small enough to tile. Forces the host device "
+                         "count when run as a script on CPU")
     ap.add_argument("--autotune", action="store_true",
                     help="search the schedule space (loop order, split, "
                          "lanes) with the simulator cost model on the "
@@ -410,6 +441,10 @@ def main(argv=None):
             raise SystemExit("program serving does not shard lanes yet; "
                              "drop --devices (stages run serial, fused "
                              "where legal)")
+        if args.workers:
+            raise SystemExit("program serving does not distribute tiles "
+                             "yet; drop --workers (single-expression "
+                             "--sam supports it)")
         prog = parse_program(args.sam)
         all_vars = [v for a in prog.assigns for v in a.all_vars]
         dims = {**{v: 64 for v in all_vars},
@@ -434,6 +469,7 @@ def main(argv=None):
                                density=args.sam_density,
                                split=_parse_kv(args.split, int),
                                devices=args.devices,
+                               workers=args.workers,
                                autotune=args.autotune,
                                mem_budget=args.mem_budget)
         return results

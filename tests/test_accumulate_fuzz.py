@@ -1,0 +1,152 @@
+"""Fuzz ``coord_ops.accumulate_coo`` under adversarial partial arrival
+orders — the primitive the distributed tile merge rests on.
+
+The distributed driver (``core.dist_exec``) folds per-worker COO
+partials through ``accumulate_coo`` in tile-grid order; bit-identical
+results rely on the fold being a well-behaved monoid over keyed
+partials:
+
+* **order-independence of the SET**: folding the same partials in any
+  arrival order yields the same sorted (keys, vals) — integer-valued
+  floats make the f32 sums exact, so this is equality, not tolerance
+  (reduce-merge: overlapping key spaces, like contraction tiles;
+  concat-merge: disjoint key spaces, like result tiles — both come out
+  of the same primitive);
+* **empty partials are identity elements** anywhere in the fold;
+* **duplicate-coordinate collisions** inside ONE partial collapse into
+  their sum (a partial that double-reports a coordinate);
+* the dense-scatter path (``key_bound``) and the sort-merge path
+  (``key_bound=None``) agree entry-for-entry.
+
+Runs under hypothesis when present, else the deterministic
+``_hypothesis_stub`` fallback.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+try:
+    from hypothesis import given, settings, strategies as hst
+except ImportError:  # clean checkout: deterministic stub keeps tests running
+    from _hypothesis_stub import given, settings, strategies as hst
+
+from repro.core.coord_ops import accumulate_coo
+
+KEY_BOUND = 64          # small key space forces collisions across partials
+
+
+def _oracle(partials):
+    """Dense reference: scatter-add every partial into a key_bound-wide
+    dense vector (exact for integer-valued f32)."""
+    dense = np.zeros(KEY_BOUND, np.float64)
+    for keys, vals in partials:
+        np.add.at(dense, keys, vals)
+    live = np.nonzero(dense)[0]
+    return live.astype(np.int64), dense[live].astype(np.float32)
+
+
+def _fold(partials, key_bound=None):
+    acc_k = np.zeros(0, np.int64)
+    acc_v = np.zeros(0, np.float32)
+    for keys, vals in partials:
+        acc_k, acc_v = accumulate_coo(acc_k, acc_v, keys, vals,
+                                      key_bound=key_bound)
+    return acc_k, acc_v
+
+
+@hst.composite
+def partial_set(draw):
+    """3-6 partials; each 0-12 entries of integer-valued floats. Key
+    spaces overlap (reduce-merge) or sit in disjoint stripes
+    (concat-merge) per draw; some partials are empty; some contain
+    within-partial duplicate keys."""
+    n_parts = draw(hst.integers(3, 6))
+    disjoint = draw(hst.integers(0, 1))     # 1 -> concat-merge stripes
+    stripe = KEY_BOUND // n_parts
+    partials = []
+    for p in range(n_parts):
+        n = draw(hst.integers(0, 12))
+        lo, hi = ((p * stripe, (p + 1) * stripe) if disjoint
+                  else (0, KEY_BOUND))
+        keys = np.array([draw(hst.integers(lo, hi - 1))
+                         for _ in range(n)], np.int64)
+        # small signed integers: collisions can cancel to exact zero,
+        # which the oracle then drops — the merge must drop it too or
+        # keep an explicit zero consistently (assert below allows both)
+        vals = np.array([float(draw(hst.integers(1, 9)))
+                         for _ in range(n)], np.float32)
+        partials.append((keys, vals))
+    perm_seed = draw(hst.integers(0, 2 ** 31 - 1))
+    return partials, perm_seed
+
+
+@settings(max_examples=30, deadline=None)
+@given(partial_set())
+def test_fold_is_arrival_order_blind(case):
+    partials, perm_seed = case
+    want_k, want_v = _oracle(partials)
+    base_k, base_v = _fold(partials)
+    assert np.array_equal(base_k, want_k)
+    assert np.array_equal(base_v, want_v)
+    # adversarial arrival order: any permutation folds to the same bytes
+    rng = np.random.default_rng(perm_seed)
+    for _ in range(3):
+        order = rng.permutation(len(partials))
+        got_k, got_v = _fold([partials[i] for i in order])
+        assert got_k.tobytes() == base_k.tobytes()
+        assert got_v.tobytes() == base_v.tobytes()
+
+
+@settings(max_examples=15, deadline=None)
+@given(partial_set())
+def test_dense_and_sort_merge_paths_agree(case):
+    partials, _ = case
+    sort_k, sort_v = _fold(partials, key_bound=None)
+    dense_k, dense_v = _fold(partials, key_bound=KEY_BOUND)
+    assert np.array_equal(sort_k, dense_k)
+    assert np.array_equal(sort_v, dense_v)
+
+
+def test_empty_partials_are_identity():
+    empty = (np.zeros(0, np.int64), np.zeros(0, np.float32))
+    a = (np.array([3, 7], np.int64), np.array([1.0, 2.0], np.float32))
+    b = (np.array([7, 9], np.int64), np.array([4.0, 8.0], np.float32))
+    want_k, want_v = _oracle([a, b])
+    for arrangement in ([empty, a, empty, b, empty],
+                        [a, b], [empty, empty, a, b],
+                        [b, empty, a]):
+        got_k, got_v = _fold(arrangement)
+        assert np.array_equal(got_k, want_k), arrangement
+        assert np.array_equal(got_v, want_v), arrangement
+    # all-empty fold: the identity itself
+    k, v = _fold([empty, empty])
+    assert k.size == 0 and v.size == 0
+
+
+def test_within_partial_duplicate_keys_collapse():
+    # one partial double-reports key 5; the merge must sum, not drop
+    dup = (np.array([5, 5, 5, 2], np.int64),
+           np.array([1.0, 2.0, 4.0, 3.0], np.float32))
+    k, v = _fold([dup])
+    assert k.tolist() == [2, 5]
+    assert v.tolist() == [3.0, 7.0]
+    # and colliding AGAIN with an accumulator that already holds key 5
+    k2, v2 = accumulate_coo(k, v, np.array([5], np.int64),
+                            np.array([10.0], np.float32))
+    assert k2.tolist() == [2, 5]
+    assert v2.tolist() == [3.0, 17.0]
+
+
+def test_incremental_equals_one_shot():
+    # folding partials one at a time == concatenating everything into a
+    # single giant partial and folding once
+    rng = np.random.default_rng(5)
+    partials = [(rng.integers(0, KEY_BOUND, 8).astype(np.int64),
+                 rng.integers(1, 9, 8).astype(np.float32))
+                for _ in range(4)]
+    inc_k, inc_v = _fold(partials)
+    big = (np.concatenate([k for k, _ in partials]),
+           np.concatenate([v for _, v in partials]))
+    one_k, one_v = _fold([big])
+    assert inc_k.tobytes() == one_k.tobytes()
+    assert inc_v.tobytes() == one_v.tobytes()

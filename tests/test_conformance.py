@@ -15,7 +15,13 @@ what the dense numpy oracle computes.
   on a forced multi-device host, in a subprocess (XLA device count is
   fixed at jax import);
 * ``test_random_tiled_conformance`` — random einsums x RANDOM tile grids
-  (the out-of-core layer): tiled == untiled == numpy in both backends.
+  (the out-of-core layer): tiled == untiled == numpy in both backends;
+* ``test_random_distributed_conformance`` — the same random tiled cases
+  fanned out over 1/2/4 simulated workers (``core.dist_exec``):
+  distributed == single-device tiled == numpy, to the BYTE;
+* ``test_distributed_merge_order_determinism`` — tile partials merged
+  from shuffled arrival orders produce identical result bytes (the
+  grid-order fold is completion-order-blind).
 """
 import os
 import subprocess
@@ -253,6 +259,79 @@ def test_random_tiled_conformance(case):
     untiled = execute_expr(expr, fmt, base, arrays, dims).to_dense()
     np.testing.assert_allclose(got, untiled,
                                err_msg=f"tiled != untiled: {expr} {tile}")
+
+
+@settings(max_examples=8, deadline=None)
+@given(tiled_case())
+def test_random_distributed_conformance(case):
+    """The distributed acceptance: the SAME random tiled cases fan out
+    over 1/2/4 simulated workers and the result bytes equal the
+    single-device tiled fold (and numpy) — the grid-order merge makes
+    worker count and scheduling mode invisible in the output."""
+    from repro.core.dist_exec import DistTiledExpr
+    from repro.core.jax_backend import TiledExpr, compile_expr
+    from repro.core.serving import FakeClock
+
+    accesses, out_vars, loop_order, dims, tile, seed = case
+    rng = np.random.default_rng(seed)
+    lhs = "X(" + ",".join(out_vars) + ")" if out_vars else "X"
+    expr = lhs + " = " + " * ".join(
+        f"{n}({','.join(tv)})" for n, tv in accesses)
+    arrays = {n: ((rng.random(tuple(dims[v] for v in tv)) < 0.5)
+                  * rng.integers(1, 5, tuple(dims[v] for v in tv))
+                  ).astype(float)
+              for n, tv in accesses}
+    fmt = Format({n: "c" * len(tv) for n, tv in accesses})
+    eng = compile_expr(expr, fmt, Schedule(loop_order=loop_order,
+                                           tile=tile), dims)
+    assert isinstance(eng, TiledExpr)
+    ref = eng(arrays)
+    ref_dense = ref.to_dense()
+    spec = (",".join("".join(tv) for _, tv in accesses)
+            + "->" + "".join(out_vars))
+    want = np.einsum(spec, *[arrays[n] for n, _ in accesses])
+    np.testing.assert_allclose(ref_dense, want,
+                               err_msg=f"tiled: {expr} tile={tile}")
+    for workers in (1, 2, 4):
+        # overlap alternates so both the inline and the threaded
+        # scheduler see the random-case space
+        d = DistTiledExpr(eng, workers=workers, clock=FakeClock(),
+                          overlap=bool((seed + workers) % 2))
+        got = d(arrays).to_dense()
+        assert got.tobytes() == np.asarray(ref_dense).tobytes(), \
+            f"dist(workers={workers}) != tiled: {expr} tile={tile}"
+        assert d.stats["failures"] == 0
+
+
+def test_distributed_merge_order_determinism():
+    """Same inputs, shuffled completion order -> identical result bytes.
+    ``merge_partials`` folds in tile-grid order regardless of the dict's
+    arrival (insertion) order, so which worker finished first can never
+    leak into the output."""
+    from repro.core.dist_exec import dist_compile
+    from repro.core.serving import FakeClock
+
+    rng = np.random.default_rng(11)
+    n = 10
+    dims = {"i": n, "j": n, "k": n}
+    arrays = {m: ((rng.random((n, n)) < 0.5)
+                  * rng.integers(1, 5, (n, n))).astype(float)
+              for m in ("B", "C")}
+    d = dist_compile("X(i,j) = B(i,k) * C(k,j)",
+                     Format({"B": "cc", "C": "cc"}),
+                     Schedule(loop_order=("i", "k", "j"),
+                              tile={"i": 3, "k": 2}),
+                     dims, workers=2, clock=FakeClock())
+    partials = d.tile_partials(arrays)
+    assert len(partials) == d.n_tiles >= 4
+    ref = d.merge_partials(partials).to_dense().tobytes()
+    order = list(partials)
+    for shuffle_seed in range(5):
+        np.random.default_rng(shuffle_seed).shuffle(order)
+        shuffled = {idx: partials[idx] for idx in order}
+        assert list(shuffled) != sorted(shuffled) or shuffle_seed == 0
+        got = d.merge_partials(shuffled).to_dense().tobytes()
+        assert got == ref, f"merge order leaked (perm seed {shuffle_seed})"
 
 
 @hst.composite

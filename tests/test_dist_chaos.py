@@ -1,0 +1,203 @@
+"""Chaos layer for the distributed tile driver (``core.dist_exec``).
+
+Every fault here is DETERMINISTIC: ``InjectedFault(tile, worker,
+attempt)`` fires exactly when that tile lands on that worker on that
+attempt, and all timing flows through the serving layer's ``FakeClock``
+— there are NO wall-clock sleeps anywhere in this file. The contract
+under test (DESIGN.md §10):
+
+* a failed dispatch retries on a DIFFERENT surviving worker;
+* a killed worker drops out mid-run (elastic re-plan onto the shrunken
+  set) and the run still completes **bit-identical to numpy**;
+* a worker exceeding ``worker_fail_limit`` failures is dropped like a
+  kill;
+* terminal failures carry machine-readable reasons
+  (``"retries-exhausted"`` / ``"no-workers"``), per-dispatch failures
+  log reasons (``"injected-fail"`` / ``"injected-kill"`` /
+  ``"tile-timeout"``) mirroring ``AdmissionError.reason``;
+* injected slowness trips the timeout detector and the straggler
+  watchdog without any real elapsed time.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core.dist_exec import (DistributedError, DistTiledExpr,
+                                  FaultInjector, InjectedFault,
+                                  dist_compile)
+from repro.core.jax_backend import compile_expr
+from repro.core.schedule import Format, Schedule
+from repro.core.serving import FakeClock
+from repro.distributed.fault_tolerance import StragglerPolicy
+
+EXPR = "X(i,j) = B(i,k) * C(k,j)"
+FMT = Format({"B": "cc", "C": "cc"})
+SCH = Schedule(loop_order=("i", "k", "j"), tile={"i": 2, "k": 2})  # 4 tiles
+N = 8
+DIMS = {"i": N, "j": N, "k": N}
+
+
+def _operands(seed: int = 0):
+    """Integer-valued operands: f32 partial sums are exact, so equality
+    checks are bitwise, not tolerances."""
+    rng = np.random.default_rng(seed)
+    B = ((rng.random((N, N)) < 0.4)
+         * rng.integers(1, 9, (N, N))).astype(float)
+    C = ((rng.random((N, N)) < 0.4)
+         * rng.integers(1, 9, (N, N))).astype(float)
+    return {"B": B, "C": C}
+
+
+def _dist(faults=(), **kw):
+    kw.setdefault("clock", FakeClock())
+    return dist_compile(EXPR, FMT, SCH, DIMS, faults=list(faults), **kw)
+
+
+def test_injected_fail_retries_on_surviving_worker():
+    # inline schedule: tile 1 attempt 0 -> worker (1+0) % 2 = 1; the
+    # injected fail forces attempt 1 -> worker (1+1) % 2 = 0
+    arrays = _operands()
+    want = arrays["B"] @ arrays["C"]
+    d = _dist([InjectedFault(tile=1, worker=1, attempt=0, kind="fail")],
+              workers=2, overlap=False)
+    out = d(arrays).to_dense()
+    assert np.array_equal(out, want)
+    assert d.stats["failures"] == 1 and d.stats["retries"] == 1
+    assert d.stats["workers_lost"] == 0
+    assert d.live_workers == [0, 1]          # a fail does NOT kill
+    assert d.failure_log == [{"tile": 1, "worker": 1, "attempt": 0,
+                              "reason": "injected-fail",
+                              "worker_lost": False}]
+    assert [(f.tile, f.worker) for f in d.faults.fired] == [(1, 1)]
+
+
+def test_kill_one_worker_mid_run_bit_identical():
+    # the ROADMAP acceptance bar: threaded fan-out over 2 workers, kill
+    # worker 1 on its first tile; its queued tiles orphan back to the
+    # survivor and the result bytes still equal numpy AND the
+    # single-device tiled fold
+    arrays = _operands(seed=1)
+    want = arrays["B"] @ arrays["C"]
+    ref = compile_expr(EXPR, FMT, SCH, DIMS)(arrays).to_dense()
+    d = _dist([InjectedFault(tile=1, worker=1, attempt=0, kind="kill")],
+              workers=2, overlap=True)
+    out = d(arrays).to_dense()
+    assert out.tobytes() == ref.tobytes()
+    assert np.array_equal(out, want)
+    assert d.stats["workers_lost"] == 1 and d.stats["replans"] == 1
+    assert d.stats["retries"] == 1
+    assert d.live_workers == [0]
+    [entry] = d.failure_log
+    assert entry["reason"] == "injected-kill" and entry["worker_lost"]
+    # all 4 tiles completed somewhere, none lost
+    assert sum(w.tiles_done for w in d.workers) == 4
+
+    # revive() restores the full fabric; with the chaos hooks swapped
+    # out the next run is clean (faults persist per-injector, so a
+    # revived fabric under the SAME injector would die again)
+    d.revive()
+    d.faults = FaultInjector()
+    assert d.live_workers == [0, 1]
+    assert np.array_equal(d(arrays).to_dense(), want)
+    assert d.stats["workers_lost"] == 1      # history, not state
+
+
+def test_fail_limit_drops_flaky_worker():
+    # worker_fail_limit=0: the very first failure exceeds the limit and
+    # the worker is dropped exactly like a kill
+    arrays = _operands(seed=2)
+    d = _dist([InjectedFault(tile=1, worker=1, attempt=0, kind="fail")],
+              workers=2, overlap=False, worker_fail_limit=0)
+    out = d(arrays).to_dense()
+    assert np.array_equal(out, arrays["B"] @ arrays["C"])
+    assert d.stats["workers_lost"] == 1
+    assert d.live_workers == [0]
+    assert d.failure_log[0]["worker_lost"]
+
+
+def test_retries_exhausted_is_machine_readable():
+    # tile 1 fails on every attempt (attempt 0 on worker 1, attempt 1 on
+    # worker 0); max_attempts=2 makes the second failure terminal
+    arrays = _operands(seed=3)
+    d = _dist([InjectedFault(tile=1, worker=1, attempt=0),
+               InjectedFault(tile=1, worker=0, attempt=1)],
+              workers=2, overlap=False, max_attempts=2)
+    with pytest.raises(DistributedError) as ei:
+        d(arrays)
+    assert ei.value.reason == "retries-exhausted"
+    assert [e["reason"] for e in d.failure_log] == ["injected-fail"] * 2
+
+
+def test_all_workers_lost_is_machine_readable():
+    arrays = _operands(seed=4)
+    d = _dist([InjectedFault(tile=0, worker=0, attempt=0, kind="kill")],
+              workers=1)
+    with pytest.raises(DistributedError) as ei:
+        d(arrays)
+    assert ei.value.reason == "no-workers"
+    # a driver whose whole fabric died refuses further calls until
+    # revive()
+    with pytest.raises(DistributedError) as ei2:
+        d(arrays)
+    assert ei2.value.reason == "no-workers"
+    d.revive()
+    d.faults = FaultInjector()
+    assert np.array_equal(d(arrays).to_dense(),
+                          arrays["B"] @ arrays["C"])
+
+
+def test_slow_fault_trips_timeout_and_retries():
+    # the slow fault advances the INJECTED clock by 10s (> 5s timeout):
+    # detected as a tile-timeout failure, retried on the other worker —
+    # zero wall-clock time passes
+    arrays = _operands(seed=5)
+    d = _dist([InjectedFault(tile=0, worker=0, attempt=0, kind="slow",
+                             dt=10.0)],
+              workers=2, overlap=False, tile_timeout_s=5.0)
+    out = d(arrays).to_dense()
+    assert np.array_equal(out, arrays["B"] @ arrays["C"])
+    assert d.stats["timeouts"] == 1 and d.stats["retries"] == 1
+    assert d.failure_log[0]["reason"] == "tile-timeout"
+
+
+def test_straggler_watchdog_flags_injected_slowness():
+    # on the FakeClock every normal tile takes 0s, so the EMA settles at
+    # 0 and ANY injected slowness (under the 5s timeout here) flags as a
+    # straggler without failing the tile
+    arrays = _operands(seed=6)
+    pol = StragglerPolicy(threshold=2.0, grace_steps=0)
+    d = _dist([InjectedFault(tile=3, worker=1, attempt=0, kind="slow",
+                             dt=1.0)],
+              workers=2, overlap=False, tile_timeout_s=5.0,
+              straggler=pol)
+    out = d(arrays).to_dense()
+    assert np.array_equal(out, arrays["B"] @ arrays["C"])
+    assert d.stats["stragglers"] == 1 and d.stats["timeouts"] == 0
+    [(step, dt, _ema)] = pol.flagged
+    assert step == 3 and dt == 1.0
+    assert d.stats["failures"] == 0          # flagged, not failed
+
+
+def test_fault_validation_and_injector_bookkeeping():
+    with pytest.raises(ValueError):
+        InjectedFault(tile=0, worker=0, kind="meteor")
+    inj = FaultInjector([InjectedFault(tile=2, worker=0, attempt=1)])
+    assert inj.check(2, 0, 0) is None        # wrong attempt: no fire
+    assert inj.check(2, 0, 1) is not None
+    assert len(inj.fired) == 1
+    arrays = _operands(seed=7)
+    d = _dist([], workers=2, overlap=False)
+    assert np.array_equal(d(arrays).to_dense(),
+                          arrays["B"] @ arrays["C"])
+    assert d.stats["failures"] == 0 and d.faults.fired == []
+
+
+def test_dist_requires_a_tiled_engine():
+    plain = compile_expr(EXPR, FMT, Schedule(loop_order=("i", "k", "j")),
+                         DIMS)
+    with pytest.raises(TypeError):
+        DistTiledExpr(plain)
+    with pytest.raises(ValueError):
+        dist_compile(EXPR, FMT, Schedule(loop_order=("i", "k", "j")),
+                     DIMS)

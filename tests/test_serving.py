@@ -96,6 +96,36 @@ def test_sync_coalescing_auto_dispatch_and_fake_clock_stats():
     srv.shutdown()
 
 
+def test_latency_split_service_vs_queue_wait():
+    # the queue-inclusive p50/p99 from a burst submit conflate waiting
+    # with executing; the split fields separate them: queue_wait runs
+    # submit -> dispatch-start, service runs dispatch-start -> done, and
+    # on the FakeClock (no time passes inside dispatch) service is
+    # exactly 0 while queue_wait carries the whole latency
+    rng = np.random.default_rng(2)
+    clock = FakeClock()
+    srv = SamServer(sync=True, max_batch=8, clock=clock)
+    h1 = srv.submit(Request(MV, _ops_mv(rng), formats={"B": "cc",
+                                                       "c": "c"}))
+    clock.advance(0.1)
+    h2 = srv.submit(Request(MV, _ops_mv(rng), formats={"B": "cc",
+                                                       "c": "c"}))
+    clock.advance(0.15)
+    srv.flush()                    # dispatch leaves the queue at t=0.25
+    assert h1.queue_wait_s == pytest.approx(0.25)
+    assert h2.queue_wait_s == pytest.approx(0.15)
+    assert h1.service_s == h2.service_s == 0.0
+    for h in (h1, h2):             # the split partitions the old figure
+        assert h.latency_s == pytest.approx(h.queue_wait_s + h.service_s)
+    st = srv.stats()
+    assert st["queue_wait_p50_ms"] == pytest.approx(200.0)
+    assert st["queue_wait_p99_ms"] == pytest.approx(249.0)
+    assert st["service_p50_ms"] == st["service_p99_ms"] == 0.0
+    # old keys stay queue-inclusive (trajectory continuity)
+    assert st["p50_ms"] == pytest.approx(200.0)
+    srv.shutdown()
+
+
 def test_sync_results_match_execute_batch_and_staged_api():
     rng = np.random.default_rng(1)
     eng = _mm_engine()
