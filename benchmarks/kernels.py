@@ -1,0 +1,213 @@
+"""Fused streaming-kernel hot path: one dispatch vs the staged pipeline.
+
+The engine's multiply collapse used to run as three separate device
+programs with a materialized intermediate between each — sorted
+intersection, gather + elementwise multiply, keyed union reduce. The
+fused ``intersect_mul_reduce`` primitive executes the same Gustavson
+inner loop as ONE program: no intermediate ever round-trips through
+host memory. This bench measures exactly that contrast:
+
+* **fused** — a single jit of ``coord_ops.fused_intersect_mul_reduce``
+  (the dispatch-table fallback whose Pallas twin
+  ``kernels/ops._fused_imr_pallas`` is drilled bit-for-bit by
+  ``tests/test_kernel_conformance.py``).
+* **staged** — three separately jitted stages with a host materialize
+  (``np.asarray``) between them, the pre-fusion execution shape.
+
+Gates: the two paths are BIT-identical always; the fused path must win
+>= 1.3x wall time at full size (smoke relaxes the wall gate like
+``program_fusion`` — sub-ms CI clocks are too noisy — but still runs
+it unguarded). An interpret-mode conformance sweep re-checks every
+Pallas kernel against its fallback inside the bench, and the kernels'
+algorithmic FLOP/byte counts are placed on the v5e roofline
+(``roofline.analysis.kernel_roofline``). Results (including the
+roofline fractions) are pinned to ``BENCH_kernels.json`` at the repo
+root.
+
+    PYTHONPATH=src python -m benchmarks.run kernels
+    PYTHONPATH=src python benchmarks/kernels.py --smoke
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import coord_ops as co
+from repro.kernels import ops as kops
+from repro.roofline.analysis import kernel_roofline
+
+THRESHOLD = 1.3
+_ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+def _best_call_us(fn, reps: int) -> float:
+    """Minimum per-call wall time (same rationale as program_fusion)."""
+    fn()
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    return float(np.min(times)) * 1e6
+
+
+def _streams(na: int, nb: int, space: int, bound: int, rng):
+    """Level-scanner-shaped stream pair (valid keys strictly increasing,
+    prefix-valid, PAD-keyed tails) plus output keys under ``bound``."""
+    la, lb = int(na * 0.75), int(nb * 0.75)
+    a_key = np.full(na, co.PAD_KEY, np.int64)
+    a_key[:la] = np.sort(rng.choice(space, la, replace=False))
+    b_key = np.full(nb, co.PAD_KEY, np.int64)
+    b_key[:lb] = np.sort(rng.choice(space, lb, replace=False))
+    return (jnp.asarray(a_key), jnp.asarray(np.arange(na) < la),
+            jnp.asarray(rng.integers(-4, 5, na).astype(np.float32)),
+            jnp.asarray(b_key), jnp.asarray(np.arange(nb) < lb),
+            jnp.asarray(rng.integers(-4, 5, nb).astype(np.float32)),
+            jnp.asarray(rng.integers(0, bound, na)))
+
+
+def _conformance(log) -> dict:
+    """Interpret-mode sweep: every Pallas kernel vs its fallback, exact."""
+    rng = np.random.default_rng(3)
+    out = {}
+    ak, av, avs, bk, bv, bvs, ok_ = _streams(256, 256, 2048, 64, rng)
+    ref = co.fused_intersect_mul_reduce(ak, av, avs, bk, bv, bvs, ok_, 80,
+                                        key_bound=64)
+    got = kops._fused_imr_pallas(ak, av, avs, bk, bv, bvs, ok_, 80,
+                                 key_bound=64)
+    out["intersect_mul_reduce"] = all(
+        np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(ref, got))
+    keys = jnp.asarray(rng.integers(0, 64, 512))
+    vals = jnp.asarray(rng.integers(-4, 5, 512).astype(np.float32))
+    valid = jnp.asarray(rng.random(512) < 0.8)
+    ref = co.keyed_union_reduce(keys, vals, valid, 80, key_bound=64)
+    got = kops._keyed_union_reduce_pallas(keys, vals, valid, 80,
+                                          key_bound=64)
+    out["keyed_union_reduce"] = all(
+        np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(ref, got))
+    b2 = jnp.asarray(rng.integers(-4, 5, 512).astype(np.float32))
+    ref = co.mul_reduce(keys, vals, b2, valid, 80, key_bound=64)
+    got = kops._mul_reduce_pallas(keys, vals, b2, valid, 80, key_bound=64)
+    out["mul_reduce"] = all(np.array_equal(np.asarray(a), np.asarray(b))
+                            for a, b in zip(ref, got))
+    ids = jnp.asarray(rng.integers(0, 32, 512))
+    ref = co.default_segment_sum(vals, ids, 32)
+    got = kops._keyed_segment_sum_pallas(vals, ids, 32)
+    out["keyed_segment_sum"] = bool(np.array_equal(np.asarray(ref),
+                                                   np.asarray(got)))
+    coo = np.sort(rng.choice(30, 12, replace=False)).astype(np.int64)
+    padded = np.full(16, co.PAD_KEY, np.int64)
+    padded[:12] = coo
+    vmask = jnp.asarray(np.arange(16) < 12)
+    ref = co.coo_to_levels(jnp.asarray(padded), vmask, [6, 5], [16, 16])
+    got = kops._coo_to_levels_pallas(jnp.asarray(padded), vmask, [6, 5],
+                                     [16, 16])
+    out["coo_to_levels"] = all(
+        np.array_equal(np.asarray(r), np.asarray(g))
+        for lr, lg in zip(ref[:2], got[:2]) for r, g in zip(lr, lg))
+    # BSR SpMM vs the dense reference
+    m = (rng.integers(1, 5, (32, 32))
+         * (rng.random((32, 32)) < 0.25)).astype(np.float32)
+    c = rng.integers(-3, 4, (32, 16)).astype(np.float32)
+    rows, cols = np.nonzero(
+        m.reshape(4, 8, 4, 8).transpose(0, 2, 1, 3).any(axis=(2, 3)))
+    blocks = m.reshape(4, 8, 4, 8).transpose(0, 2, 1, 3)[rows, cols]
+    bm, ci, bp = kops.bsr_from_block_coords(rows, cols, blocks, 4)
+    out["spmm_bsr"] = bool(np.array_equal(
+        np.asarray(kops.spmm_bsr(bm, ci, bp, c, n_tile=16)), m @ c))
+    for name, okc in out.items():
+        log(f"kernels/conformance,{name},"
+            f"{'bit-identical' if okc else 'MISMATCH'}")
+    return out
+
+
+def run(log, smoke: bool = False) -> bool:
+    # full size sits where the staged path's host materializes are a real
+    # fraction of the work (the regime the fusion targets); past ~32k the
+    # O(T x S) workspace matmul both paths share swamps the contrast
+    na = nb = 4096 if smoke else 8192
+    space, bound = (1 << 14, 1024) if smoke else (1 << 15, 2048)
+    cap = bound + 8
+    reps = 5 if smoke else 25
+    rng = np.random.default_rng(17)
+    ak, av, avs, bk, bv, bvs, out_key = _streams(na, nb, space, bound, rng)
+
+    fused_fn = jax.jit(lambda *xs: co.fused_intersect_mul_reduce(
+        *xs, cap, key_bound=bound))
+    s_intersect = jax.jit(co.intersect_keys)
+    s_mul = jax.jit(lambda avs_, bvs_, idx, hit:
+                    avs_ * jnp.where(hit, bvs_[idx], 0.0))
+    s_reduce = jax.jit(lambda k, v, ok: co.keyed_union_reduce(
+        k, v, ok, cap, key_bound=bound))
+
+    def fused_call():
+        return jax.block_until_ready(
+            fused_fn(ak, av, avs, bk, bv, bvs, out_key))
+
+    def staged_call():
+        # each stage is its own device program; np.asarray is the
+        # materialized intermediate the fused path eliminates
+        hit, idx = (np.asarray(x) for x in
+                    jax.block_until_ready(s_intersect(ak, av, bk, bv)))
+        prod = np.asarray(jax.block_until_ready(
+            s_mul(avs, bvs, jnp.asarray(idx), jnp.asarray(hit))))
+        return jax.block_until_ready(
+            s_reduce(out_key, jnp.asarray(prod), jnp.asarray(hit)))
+
+    f_out = fused_call()
+    s_out = staged_call()
+    identical = all(np.array_equal(np.asarray(a), np.asarray(b))
+                    for a, b in zip(f_out, s_out))
+    fused_us = _best_call_us(fused_call, reps)
+    staged_us = _best_call_us(staged_call, reps)
+    wall = staged_us / fused_us
+
+    conf = _conformance(log)
+    ok = identical and all(conf.values())
+    if not smoke:
+        ok &= wall >= THRESHOLD
+
+    # algorithmic roofline placement (v5e): membership compare + gather
+    # dot + one-hot scatter for the fused kernel; block matmuls for SpMM
+    imr_flops = 3.0 * na * nb + 4.0 * na * (bound + 1)
+    imr_bytes = 13.0 * (na + nb) + 4.0 * na + 12.0 * cap
+    roof = {"intersect_mul_reduce": kernel_roofline(imr_flops, imr_bytes)}
+    nnzb, bs, nmat = 256, 128, 1024
+    roof["spmm_bsr"] = kernel_roofline(
+        2.0 * nnzb * bs * bs * nmat,
+        4.0 * (nnzb * bs * bs + nnzb * bs * nmat * 2))
+    for name, r in roof.items():
+        log(f"kernels/roofline,{name},{r['bound']},"
+            f"intensity,{r['intensity']:.1f},"
+            f"peak_fraction,{r['peak_fraction']:.3f}")
+
+    log("kernels/header,mode,wall_us,derived")
+    log(f"kernels,fused,{fused_us:.0f},{'pass' if ok else 'FAIL'}")
+    log(f"kernels,staged,{staged_us:.0f},"
+        f"{'bit-identical' if identical else 'MISMATCH'}")
+    log(f"kernels/summary,wall_speedup,{wall:.2f}"
+        f"{'(unguarded)' if smoke else ''},threshold,{THRESHOLD}")
+
+    (_ROOT / "BENCH_kernels.json").write_text(json.dumps({
+        "bench": "kernels", "smoke": smoke,
+        "sizes": {"na": na, "nb": nb, "key_space": space, "bound": bound},
+        "fused_us": round(fused_us, 1), "staged_us": round(staged_us, 1),
+        "wall_speedup": round(wall, 3), "threshold": THRESHOLD,
+        "bit_identical": identical, "conformance": conf,
+        "roofline": roof,
+    }, indent=2) + "\n")
+    return ok
+
+
+if __name__ == "__main__":
+    ok = run(lambda s: print(s, flush=True),
+             smoke="--smoke" in sys.argv)
+    sys.exit(0 if ok else 1)

@@ -19,9 +19,11 @@ import time
 
 def main() -> None:
     from . import (autotune, compiled_cache, dist_tiles, fig11, fig12,
-                   fig13, fig14, fig15, moe_dispatch, program_fusion,
-                   serving, split_scaling, table1, table2, tiled_oob)
+                   fig13, fig14, fig15, kernels, moe_dispatch,
+                   program_fusion, serving, split_scaling, table1, table2,
+                   tiled_oob)
     benches = {
+        "kernels": kernels.run,
         "table1": table1.run, "table2": table2.run,
         "fig11": fig11.run, "fig12": fig12.run, "fig13": fig13.run,
         "fig14": fig14.run, "fig15": fig15.run,

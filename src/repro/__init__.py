@@ -1,0 +1,1 @@
+"""SAM reproduction: streaming sparse tensor algebra on JAX/Pallas."""

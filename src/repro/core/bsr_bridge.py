@@ -1,0 +1,192 @@
+"""Block-format (``b``) contraction bridge onto the BSR Pallas kernels.
+
+The compiled streaming engine serves ``d``/``c`` level formats; tensors
+declared all-``b`` store sparsity at BLOCK granularity — exactly the
+hierarchical split the paper applies to fit finite memories (§4.1), and
+exactly the shape the seed BSR kernels (``kernels/spmm_bsr.py``,
+``kernels/sddmm_bsr.py``) execute as dense per-block MXU matmuls.
+``jax_backend.compile_expr`` recognizes the two canonical block-sparse
+contractions here and routes them to a ``BsrEngine`` instead of refusing:
+
+* **SpMM** — ``x(i,k) = B(i,j) * C(j,k)`` with ``B`` all-``b``: ``B``
+  blockifies to BCSR and every surviving (block-row, block-col) runs one
+  ``bs × bs`` MXU matmul against the dense right-hand side.
+* **SDDMM** — ``X(i,j) = M(i,j) * A(i,k) * C(j,k)`` with ``M`` all-``b``:
+  the dense product is computed ONLY at ``M``'s nonzero blocks (the
+  paper's flagship fusion example, Fig. 11), then scaled elementwise by
+  the mask block values.
+
+Either dense factor may list its indices in the transposed order (e.g.
+``C(k,j)``); the bridge re-arranges host-side. The block size is the
+largest power-of-two divisor common to the blocked extents (capped at
+the 128-lane MXU width), so any extents work — degenerate 1×1 blocks
+simply recover element-granular COO.
+
+The engine quacks like ``CompiledExpr`` for the serving paths
+(``__call__``/``execute``/``execute_batch``/``execute_many``/``stats``),
+so ``SamServer`` admits block-format requests whose pattern matches.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .einsum import Access, Assignment
+from .fibertree import FiberTree
+from .schedule import Format
+
+
+def _is_block(fmt: Format, acc: Access) -> bool:
+    levels = fmt.of(acc.tensor, len(acc.vars)) or ""
+    return len(acc.vars) == 2 and levels == "b" * len(acc.vars)
+
+
+def _pow2_divisor(n: int, cap: int) -> int:
+    """Largest power of two dividing ``n``, at most ``cap`` (>= 1)."""
+    n = int(n)
+    d = n & -n if n else 1
+    return max(1, min(d, cap))
+
+
+@dataclasses.dataclass(frozen=True)
+class BsrPattern:
+    """A recognized block-sparse contraction (see module docstring)."""
+    kind: str                    # "spmm" | "sddmm"
+    sparse: str                  # the all-``b`` operand
+    dense: Tuple[str, ...]       # dense operand(s), kernel argument order
+    transposed: Tuple[bool, ...]  # per dense operand: stored transposed?
+    red_var: str                 # the contracted index variable
+
+
+def bsr_pattern(assign: Assignment, fmt: Format) -> Optional[BsrPattern]:
+    """Match ``assign`` against the bridged block-sparse contractions.
+
+    Returns a ``BsrPattern`` when the expression is a single positive
+    product term in SpMM or SDDMM shape with exactly one rank-2 all-``b``
+    factor (every other operand ``d``/``c``); None otherwise — callers
+    fall back to their normal handling.
+    """
+    if len(assign.terms) != 1 or assign.terms[0].sign != 1:
+        return None
+    term = assign.terms[0]
+    if len(assign.lhs.vars) != 2:
+        return None
+    sparse = [f for f in term.factors if _is_block(fmt, f)]
+    rest = [f for f in term.factors if not _is_block(fmt, f)]
+    if len(sparse) != 1:
+        return None
+    for f in rest:
+        if set(fmt.of(f.tensor, len(f.vars)) or "") - set("dc"):
+            return None
+    s = sparse[0]
+    red = [v for v in term.vars if v not in assign.lhs.vars]
+    if len(red) != 1:
+        return None
+    k = red[0]
+    ri, rj = assign.lhs.vars
+
+    if len(term.factors) == 2 and len(rest) == 1:
+        # SpMM: x(i,k) = B(i,j) * C(j,k) — B block-sparse over the output
+        # rows × contraction, C dense over contraction × output cols
+        d = rest[0]
+        if s.vars == (ri, k) and set(d.vars) == {k, rj}:
+            return BsrPattern("spmm", s.tensor, (d.tensor,),
+                              (d.vars != (k, rj),), k)
+        return None
+
+    if len(term.factors) == 3 and len(rest) == 2:
+        # SDDMM: X(i,j) = M(i,j) * A(i,k) * C(j,k) — M samples the output
+        # blocks, A carries the output rows, C the output cols
+        if s.vars != (ri, rj):
+            return None
+        a = [f for f in rest if ri in f.vars and k in f.vars]
+        c = [f for f in rest if rj in f.vars and k in f.vars]
+        if len(a) != 1 or len(c) != 1:
+            return None
+        return BsrPattern("sddmm", s.tensor, (a[0].tensor, c[0].tensor),
+                          (a[0].vars != (ri, k), c[0].vars != (rj, k)), k)
+    return None
+
+
+def _blockify(m: np.ndarray, bs: int
+              ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """(rows, cols, blocks) of the nonzero ``bs × bs`` blocks of ``m``."""
+    nr, nc = m.shape[0] // bs, m.shape[1] // bs
+    tiles = m.reshape(nr, bs, nc, bs).transpose(0, 2, 1, 3)
+    mask = np.any(tiles != 0, axis=(2, 3))
+    rows, cols = np.nonzero(mask)
+    return rows, cols, np.ascontiguousarray(tiles[rows, cols])
+
+
+class BsrEngine:
+    """Executes one bridged block-sparse contraction (see ``bsr_pattern``).
+
+    Results are assembled with ``FiberTree.from_dense`` in the LHS format,
+    so downstream consumers see exactly what the streaming engine would
+    return for the same dense result.
+    """
+
+    def __init__(self, assign: Assignment, fmt: Format,
+                 dims: Dict[str, int], pattern: BsrPattern):
+        self.assign = assign
+        self.fmt = fmt
+        self.dims = dict(dims)
+        self.pattern = pattern
+        lhs = assign.lhs
+        self._out_fmt = fmt.of(lhs.tensor, len(lhs.vars)) or ""
+        # API parity with CompiledExpr for the serving paths: block
+        # contractions have no parallel lanes to shard
+        self._shard_lanes = False
+        self.stats = {"calls": 0, "batch_calls": 0, "nnz_blocks": 0,
+                      "kernel": pattern.kind, "block_size": 0}
+
+    # -- execution -------------------------------------------------------
+    def _dense_operand(self, arrays, idx: int) -> np.ndarray:
+        m = np.asarray(arrays[self.pattern.dense[idx]], dtype=np.float32)
+        return np.ascontiguousarray(m.T) if self.pattern.transposed[idx] \
+            else m
+
+    def __call__(self, arrays: Dict[str, np.ndarray]) -> FiberTree:
+        from ..kernels import ops as kops
+
+        self.stats["calls"] += 1
+        p = self.pattern
+        sp = np.asarray(arrays[p.sparse], dtype=np.float32)
+        if p.kind == "spmm":
+            c = self._dense_operand(arrays, 0)           # (K, N)
+            bs = _pow2_divisor(np.gcd(sp.shape[0], sp.shape[1]), 128)
+            n_tile = _pow2_divisor(c.shape[1], 128)
+            rows, cols, blocks = _blockify(sp, bs)
+            bm, ci, bp = kops.bsr_from_block_coords(rows, cols, blocks,
+                                                    sp.shape[0] // bs)
+            out = np.asarray(kops.spmm_bsr(bm, ci, bp, c, n_tile=n_tile))
+        else:                                            # sddmm
+            a = self._dense_operand(arrays, 0)           # (M, K)
+            c = self._dense_operand(arrays, 1)           # (N, K)
+            bs = _pow2_divisor(np.gcd(sp.shape[0], sp.shape[1]), 128)
+            k_tile = _pow2_divisor(a.shape[1], 128)
+            rows, cols, blocks = _blockify(sp, bs)
+            sampled = np.asarray(kops.sddmm_bsr(rows, cols, a, c, bs,
+                                                k_tile=k_tile))
+            # SDDMM scales the sampled dense product by the mask values
+            sampled = sampled * blocks
+            nr, nc = sp.shape[0] // bs, sp.shape[1] // bs
+            tiles = np.zeros((nr, nc, bs, bs), np.float32)
+            tiles[rows, cols] = sampled
+            out = tiles.transpose(0, 2, 1, 3).reshape(sp.shape)
+        self.stats["nnz_blocks"] = int(len(rows))
+        self.stats["block_size"] = int(bs)
+        return FiberTree.from_dense(out, self._out_fmt)
+
+    def execute(self, arrays: Dict[str, np.ndarray]) -> FiberTree:
+        """Alias of ``__call__`` (API parity with ``CompiledExpr``)."""
+        return self(arrays)
+
+    def execute_batch(self, arrays_list: Sequence[Dict[str, np.ndarray]]
+                      ) -> List[FiberTree]:
+        self.stats["batch_calls"] += 1
+        return [self(a) for a in arrays_list]
+
+    execute_many = execute_batch

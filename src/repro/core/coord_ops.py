@@ -205,8 +205,49 @@ def keyed_union_reduce(keys, vals, valid, cap: int, segment_sum_impl=None,
     return uk, jnp.where(out_valid, uv, 0.0), out_valid, count
 
 
+def mul_reduce(keys, a_vals, b_vals, valid, cap: int, *, key_bound=None,
+               segment_sum_impl=None):
+    """Fused multiply × keyed reduce: sum ``a_vals * b_vals`` at equal
+    ``keys``.
+
+    The reduce stage of the Gustavson inner loop with the ALU product
+    folded in: the compiled engine defers a ``mul`` ALU's product into
+    its final collapse so the product stream is never materialized
+    separately from the reduction (``kernels/ops.py`` lowers this to one
+    Pallas workspace kernel on TPU). This fallback is the exact unfused
+    composition, so routing through it is bit-identical to computing the
+    product eagerly. Returns ``(keys, vals, valid, count)`` like
+    ``keyed_union_reduce``.
+    """
+    return keyed_union_reduce(keys, a_vals * b_vals, valid, cap,
+                              segment_sum_impl, key_bound=key_bound)
+
+
+def fused_intersect_mul_reduce(a_key, a_valid, a_vals, b_key, b_valid,
+                               b_vals, out_key, cap: int, *, key_bound=None,
+                               segment_sum_impl=None):
+    """The Gustavson inner loop as ONE primitive: sorted intersection of
+    ``b`` into ``a`` × value gather × multiply × keyed segment-reduce.
+
+    ``a_key``/``b_key`` are sorted stream keys (invalid rows keyed
+    ``PAD_KEY``); ``a_vals``/``out_key`` are aligned to *a* positions and
+    ``b_vals`` to *b* positions — no intersected, gathered, or product
+    stream is ever an input, which is exactly what the fused Pallas
+    kernel (``kernels/fused_stream.py``) exploits: on TPU the whole
+    composition runs as one kernel with no intermediate streams in HBM.
+    This fallback is the composition of ``intersect_keys`` + gather +
+    multiply + ``keyed_union_reduce`` and therefore bit-identical to the
+    unfused pipeline by construction. Returns ``(keys, vals, valid,
+    count)`` like ``keyed_union_reduce``.
+    """
+    hit, idx = intersect_keys(a_key, a_valid, b_key, b_valid)
+    prod = a_vals * b_vals[idx]
+    return keyed_union_reduce(out_key, prod, hit, cap, segment_sum_impl,
+                              key_bound=key_bound)
+
+
 def accumulate_coo(acc_keys, acc_vals, keys, vals, key_bound=None,
-                   segment_sum_impl=None):
+                   segment_sum_impl=None, union_reduce_impl=None):
     """Merge a new keyed COO partial into a running accumulator.
 
     The out-of-core tile driver's merge step (``jax_backend.TiledExpr``,
@@ -219,7 +260,9 @@ def accumulate_coo(acc_keys, acc_vals, keys, vals, key_bound=None,
     never all tiles at once.
 
     Inputs/outputs are host (numpy) arrays of live entries only; returns
-    ``(keys, vals)`` sorted by key, unique.
+    ``(keys, vals)`` sorted by key, unique. ``union_reduce_impl`` routes
+    the merge through a dispatch-table implementation (the Pallas
+    dense-workspace kernel on TPU); None keeps this module's fallback.
     """
     k = jnp.concatenate([jnp.asarray(acc_keys, I64), jnp.asarray(keys, I64)])
     v = jnp.concatenate([jnp.asarray(acc_vals, jnp.float32),
@@ -227,7 +270,8 @@ def accumulate_coo(acc_keys, acc_vals, keys, vals, key_bound=None,
     if k.shape[0] == 0:
         return (np.zeros(0, np.int64), np.zeros(0, np.float32))
     cap = max(8, 1 << (int(k.shape[0]) - 1).bit_length())
-    uk, uv, _, count = keyed_union_reduce(
+    union_reduce = union_reduce_impl or keyed_union_reduce
+    uk, uv, _, count = union_reduce(
         k, v, jnp.ones(k.shape, bool), cap, segment_sum_impl,
         key_bound=key_bound)
     n = int(count)

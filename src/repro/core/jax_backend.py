@@ -164,6 +164,12 @@ class ValStream:
     stream: Optional[CanonStream]
     vals: jnp.ndarray
     valid: jnp.ndarray
+    # provenance of a multiply: ``(a_vals, b_vals)`` with
+    # ``vals == a_vals * b_vals``. Advisory — ``vals`` is always the eager
+    # product — but lets the final collapse hand the un-multiplied streams
+    # to a fused multiply-reduce kernel (the product then never exists as
+    # a separate HBM stream on that path).
+    pair: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None
 
 
 @dataclasses.dataclass
@@ -225,6 +231,7 @@ class JaxBackend:
                  out_cap: Optional[int] = None,
                  segsum: Optional[Callable] = None,
                  intersect: Optional[Callable] = None,
+                 mul_reduce: Optional[Callable] = None,
                  lane: Optional[Any] = None):
         self.g = graph_
         self.t = tensors
@@ -241,6 +248,9 @@ class JaxBackend:
         self.out_cap = out_cap
         self.segsum = segsum                       # keyed segment-sum impl
         self.intersect_impl = intersect or co.intersect_keys
+        # fused multiply × keyed-reduce impl for the final collapse; None
+        # keeps the classic path (reduce the already-multiplied stream)
+        self.mul_reduce_impl = mul_reduce
         self.caps_record: Dict[str, int] = {}      # eager: exact sizes used
         self.required: Dict[str, jnp.ndarray] = {}  # static: traced needs
 
@@ -356,8 +366,9 @@ class JaxBackend:
         f = {"mul": jnp.multiply, "add": jnp.add, "sub": jnp.subtract}[op]
         if a.vals.shape != b.vals.shape:
             raise ValueError("ALU operands misaligned in JAX backend")
+        pair = (a.vals, b.vals) if op == "mul" else None
         return {"val": ValStream(a.stream, f(a.vals, b.vals),
-                                 a.valid | b.valid)}
+                                 a.valid | b.valid, pair=pair)}
 
     def _reduce(self, node, ins):
         v: ValStream = ins["val"]
@@ -406,8 +417,19 @@ class JaxBackend:
             self.caps_record["out"] = need
         else:
             cap = self.out_cap
-        uk, uv, uvalid, count = co.keyed_union_reduce(
-            key, v.vals, valid, cap, self.segsum, key_bound=mult)
+        if v.pair is not None and self.mul_reduce_impl is not None:
+            # the stream is a multiply: hand the un-multiplied operand
+            # streams to the fused multiply-reduce primitive (on CPU this
+            # resolves to ``co.mul_reduce`` — literally the composition
+            # below, so results are bit-identical; on TPU it is one Pallas
+            # workspace kernel and the product stream never hits HBM).
+            pa, pb = v.pair
+            uk, uv, uvalid, count = self.mul_reduce_impl(
+                key, pa, pb, valid, cap, key_bound=mult,
+                segment_sum_impl=self.segsum)
+        else:
+            uk, uv, uvalid, count = co.keyed_union_reduce(
+                key, v.vals, valid, cap, self.segsum, key_bound=mult)
         if self.out_cap is not None:
             self.required["out"] = count
         return COOResult(uk, uv, uvalid, strides)
@@ -723,12 +745,14 @@ class CompiledExpr:
         self._segsum = None
         self._intersect = None
         self._union_reduce = None
+        self._mul_reduce = None
         if use_kernels:
             try:
                 from ..kernels import ops as kops
                 self._segsum = kops.sam_primitive("keyed_segment_sum")
                 self._intersect = kops.sam_primitive("sorted_intersect")
                 self._union_reduce = kops.sam_primitive("keyed_union_reduce")
+                self._mul_reduce = kops.sam_primitive("mul_reduce")
             except ImportError:      # kernels layer unavailable: coord_ops
                 pass
         self._level_meta: Dict[str, List[Tuple[str, int]]] = {}
@@ -836,6 +860,7 @@ class CompiledExpr:
         # batching is not guaranteed in interpret mode).
         segsum = None if batch else self._segsum
         intersect = None if batch else self._intersect
+        mul_reduce = None if batch else self._mul_reduce
         union_reduce = ((None if batch else self._union_reduce)
                         or co.keyed_union_reduce)
         scan_caps = [
@@ -850,7 +875,8 @@ class CompiledExpr:
             be = JaxBackend(self.graphs[ti], tensors, self.low.dims,
                             self.rvars, scan_caps=scan_caps[ti],
                             out_cap=out_caps[ti], segsum=segsum,
-                            intersect=intersect, lane=lane)
+                            intersect=intersect, mul_reduce=mul_reduce,
+                            lane=lane)
             return be.run_streams(), be.required
 
         def core(flat):
@@ -920,8 +946,8 @@ class CompiledExpr:
         jit_key = (self.graph_hashes,
                    tuple(sorted(self.dims.items())), tuple(self.rvars),
                    sig, tuple(sorted(caps.items())), batch, b_pad,
-                   self._segsum is not None, tuple(self.lane_ns),
-                   self._shard_lanes)
+                   self._segsum is not None, self._mul_reduce is not None,
+                   tuple(self.lane_ns), self._shard_lanes)
         fn = self._jit_cache.get(jit_key)
         if fn is None:
             core = self._build_core(caps, batch)
@@ -1267,6 +1293,15 @@ class TiledExpr:
         self.engine = compile_expr(self.assign, fmt, inner, self.inner_dims,
                                    use_kernels=use_kernels,
                                    shard_lanes=shard_lanes)
+        # tile-merge stage impl: the Pallas dense-workspace kernel on TPU
+        # (same dispatch entry as the engine's lane/term merge)
+        self._union_reduce = None
+        if use_kernels:
+            try:
+                from ..kernels import ops as kops
+                self._union_reduce = kops.sam_primitive("keyed_union_reduce")
+            except ImportError:
+                pass
         self.rvars = self.engine.orig_result_order   # orig vars, loop order
         self._scalar = not self.rvars
         self._out_strides = [(v, self.dims[v]) for v in self.rvars]
@@ -1373,7 +1408,8 @@ class TiledExpr:
                 continue
             acc_k, acc_v = co.accumulate_coo(
                 acc_k, acc_v, self._global_keys(coords, tids), vals,
-                key_bound=self._key_bound)
+                key_bound=self._key_bound,
+                union_reduce_impl=self._union_reduce)
         return self._finalize(acc_k, acc_v, total)
 
     def execute(self, arrays: Dict[str, np.ndarray]) -> FiberTree:
@@ -1392,6 +1428,7 @@ class TiledExpr:
 
 
 _TILED: Dict[Tuple, TiledExpr] = {}
+_BSR: Dict[Tuple, Any] = {}
 
 
 # ---------------------------------------------------------------------------
@@ -1485,6 +1522,20 @@ def compile_expr(expr, fmt: Format, schedule,
         schedule = resolve_schedule(expr, fmt, dims, sparsity=sparsity,
                                     device_count=dev, **kw).schedule
     assign = parse(expr) if isinstance(expr, str) else expr
+
+    # -- block-format (b) BSR routing (core/bsr_bridge.py) ----------------
+    # recognized block-sparse contractions execute on the BSR Pallas
+    # kernels end-to-end instead of the streaming engine
+    from .bsr_bridge import BsrEngine, bsr_pattern
+    pat = bsr_pattern(assign, fmt)
+    if pat is not None:
+        bkey = expr_cache_key(assign, fmt, schedule, dims)
+        eng = _BSR.get(bkey)
+        if eng is None:
+            eng = BsrEngine(assign, fmt, dims, pat)
+            _BSR[bkey] = eng
+        return eng
+
     # resolve the lane-mesh size BEFORE keying, so shard_lanes=None and an
     # explicit equivalent request share one engine (and its plan/jit caches)
     par_n = max([n for n in schedule.parallelize.values() if n > 1],
@@ -1536,6 +1587,7 @@ def compile_expr(expr, fmt: Format, schedule,
 def clear_compile_cache() -> None:
     _COMPILED.clear()
     _TILED.clear()
+    _BSR.clear()
 
 
 def execute_graph(graph_: g.Graph, tensors: Dict[str, FiberTree],
@@ -1592,7 +1644,8 @@ class _FusedChain:
     overflow exactly like ``CompiledExpr``.
     """
 
-    def __init__(self, stages, *, segsum=None, intersect=None):
+    def __init__(self, stages, *, segsum=None, intersect=None,
+                 coo_levels=None):
         from .einsum import Term as _Term
 
         self.stages = stages
@@ -1602,6 +1655,9 @@ class _FusedChain:
         self.signs = [s.lowered.terms[0].sign for s in stages]
         self._segsum = segsum
         self._intersect = intersect
+        # COO → (seg, crd) splice impl for the fused handoff; falls back to
+        # coord_ops when the kernels layer is unavailable
+        self._coo_levels = coo_levels or co.coo_to_levels
         # external accesses per stage (everything not spliced), and the
         # sub-assignment used to build their concordant fibertrees
         self._ext: List[Tuple] = []
@@ -1667,7 +1723,7 @@ class _FusedChain:
     def _jt_from_coo(self, coo: COOResult, sign: int, level_caps
                      ) -> Tuple[JTensor, List]:
         dims_list = [d for _, d in coo.strides]
-        segs, crds, counts = co.coo_to_levels(coo.keys, coo.valid,
+        segs, crds, counts = self._coo_levels(coo.keys, coo.valid,
                                               dims_list, level_caps)
         cap_in = level_caps[-1]
         vals = coo.vals if sign == 1 else sign * coo.vals
@@ -1795,12 +1851,13 @@ class CompiledProgram:
         self.lp = lp
         self.cache_key = _program_key(lp)
         self.mem_budget = mem_budget
-        segsum = intersect = None
+        segsum = intersect = coo_levels = None
         if use_kernels:
             try:
                 from ..kernels import ops as kops
                 segsum = kops.sam_primitive("keyed_segment_sum")
                 intersect = kops.sam_primitive("sorted_intersect")
+                coo_levels = kops.sam_primitive("coo_to_levels")
             except ImportError:
                 pass
         self.units: List[Tuple[str, List[int], Any]] = []
@@ -1817,7 +1874,8 @@ class CompiledProgram:
                 self.units.append(("expr", comp, eng))
             else:
                 chain = _FusedChain([lp.stages[i] for i in comp],
-                                    segsum=segsum, intersect=intersect)
+                                    segsum=segsum, intersect=intersect,
+                                    coo_levels=coo_levels)
                 self.units.append(("chain", comp, chain))
         self.stats = {
             "calls": 0,

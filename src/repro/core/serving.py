@@ -191,11 +191,12 @@ class _Group:
 
 
 def _engine_kind(engine) -> str:
+    from .bsr_bridge import BsrEngine
     from .dist_exec import DistTiledExpr
 
     if isinstance(engine, CompiledProgram):
         return "program"
-    if isinstance(engine, (TiledExpr, DistTiledExpr)):
+    if isinstance(engine, (TiledExpr, DistTiledExpr, BsrEngine)):
         return "seq"       # tiles stream sequentially (or fan out over
         #                    workers inside the request); no vmap batch axis
     if isinstance(engine, CompiledExpr) and engine._shard_lanes:
@@ -378,6 +379,12 @@ class SamServer:
         return dims
 
     def _check_formats(self, fmt: Format, assign: Assignment) -> None:
+        from .bsr_bridge import bsr_pattern
+
+        if bsr_pattern(assign, fmt) is not None:
+            # block-format contractions in SpMM/SDDMM shape execute on
+            # the BSR Pallas kernels (core/bsr_bridge.py) — admitted
+            return
         tensors = {a.tensor: len(a.vars) for t in assign.terms
                    for a in t.factors}
         tensors[assign.lhs.tensor] = len(assign.lhs.vars)

@@ -1,0 +1,76 @@
+"""Pallas COO → compressed-levels packing for the program-fusion handoff.
+
+``coord_ops.coo_to_levels`` turns a fused stage's keyed COO result into
+the ``(seg, crd)`` arrays the next stage's level scanners read
+(DESIGN.md §6). Its per-level cost splits into cheap mask/prefix math and
+the stable compaction that actually moves data. This module keeps the
+mask/prefix math in jnp (it fuses into the surrounding trace) and routes
+each level's compaction through the ``scatter_workspace`` one-hot MXU
+kernel: the compaction destinations are unique slot ids, so the
+scatter-ADD degenerates to a scatter-MOVE and one (cap, 2) workspace pass
+packs ``[crd, parent_rank]`` for the level.
+
+Exactness: coordinates and parent ranks ride the f32 MXU path, so the
+dispatch wrapper (``kernels/ops.py``) only selects this implementation
+when every level extent and capacity is below 2**24 — beyond that it
+falls back to ``coord_ops.coo_to_levels``. Within the guard the packed
+integers are exactly representable and the result is bit-identical to
+the fallback.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import jax.numpy as jnp
+
+from ..core import coord_ops as co
+from .scatter_workspace import scatter_workspace
+
+# f32 one-hot moves are exact only below the float32 integer horizon
+MAX_EXACT_COORD = 1 << 24
+
+
+def coo_to_levels_pallas(keys, valid, dims_list: Sequence[int],
+                         caps: Sequence[int], *, t_tile: int = 1024,
+                         interpret: bool = False
+                         ) -> Tuple[List, List, List]:
+    """Drop-in for ``coord_ops.coo_to_levels`` with Pallas compaction.
+
+    Same contract and bit-identical results (see module docstring for the
+    exactness guard the dispatch wrapper enforces).
+    """
+    n = len(dims_list)
+    pref = [None] * n
+    cur = jnp.where(valid, keys, co.PAD_KEY)
+    for l in range(n - 1, -1, -1):
+        pref[l] = cur
+        if l:
+            cur = jnp.where(valid, cur // dims_list[l], co.PAD_KEY)
+    segs, crds, counts = [], [], []
+    parent_cap = 1
+    parent_rank = jnp.zeros(keys.shape[0], dtype=co.I64)
+    for l in range(n):
+        first = jnp.concatenate(
+            [jnp.ones((1,), bool), pref[l][1:] != pref[l][:-1]]) & valid
+        cnt = jnp.sum(first.astype(co.I64))
+        # stable compaction as a unique-destination workspace scatter:
+        # flagged rows move to their prefix-sum rank, the rest land in
+        # the kernel's dropped padding slot
+        dest = jnp.where(first, jnp.cumsum(first) - 1, caps[l])
+        cols = jnp.stack([(pref[l] % dims_list[l]).astype(jnp.float32),
+                          parent_rank.astype(jnp.float32)], axis=1)
+        packed = scatter_workspace(dest.astype(jnp.int32), cols,
+                                   num_slots=caps[l], t_tile=t_tile,
+                                   interpret=interpret)
+        crd_l = packed[:, 0].astype(co.I32)
+        par_l = packed[:, 1].astype(co.I64)
+        live = jnp.arange(caps[l]) < cnt
+        par_l = jnp.where(live, par_l, parent_cap)
+        seg_l = jnp.searchsorted(par_l, jnp.arange(parent_cap + 1)
+                                 ).astype(co.I32)
+        segs.append(seg_l)
+        crds.append(jnp.where(live, crd_l, 0).astype(co.I32))
+        counts.append(cnt)
+        parent_rank = jnp.cumsum(first.astype(co.I64)) - 1
+        parent_cap = caps[l]
+    return segs, crds, counts

@@ -1,0 +1,117 @@
+"""Fused streaming kernel: sorted intersection × multiply × segment-reduce.
+
+The Gustavson inner loop of every compiled einsum
+(``coord_ops.fused_intersect_mul_reduce``) as ONE Pallas kernel: for each
+tile of the *a* stream, membership of ``a_key`` in the VMEM-resident *b*
+stream, the gather of the matching *b* values, the ALU product, and the
+dense-workspace scatter-reduce all happen in registers/VMEM — no hit
+mask, gathered stream, or product stream is ever materialized in HBM.
+
+TPU shapes everything: dynamic vector gathers don't exist in Mosaic, so
+both the membership probe and the value gather are (T, NB) comparison /
+one-hot matmuls against the resident *b* rows, and the scatter-reduce is
+the same one-hot MXU accumulation as ``scatter_workspace``. The output is
+the raw dense workspace ``(sums, hits)``; the wrapper in ``kernels/ops.py``
+compacts it exactly like ``coord_ops.keyed_union_reduce``'s dense branch
+so results are bit-identical to the unfused pipeline.
+
+Contract (checked by tests/test_kernel_conformance.py, guarded by the
+dispatch wrapper): keys fit int32, valid keys strictly increase within
+each stream, the *b* stream is prefix-valid (level-scanner shaped), and
+``out_key`` is in ``[0, num_slots)`` at valid positions.
+
+Layout:
+  a_key/a_vals/a_valid/out_key : (NA,)  — the outer (Gustavson row) stream
+  b_key/b_vals/b_valid         : (NB,)  — the searched stream, VMEM-resident
+  out                          : (num_slots, 2) = [sums, hits]
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(ak_ref, av_ref, ao_ref, bk_ref, bv_ref, o_ref, acc_ref, *,
+            n_slots, t, sent):
+    nt = pl.program_id(0)
+
+    @pl.when(nt == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    ak = ak_ref[0]                       # (T,)   invalid rows hold `sent`
+    av = av_ref[0]                       # (T,)
+    ok = ao_ref[0]                       # (T,)
+    bk = bk_ref[0]                       # (NB,)  invalid rows hold `sent`
+    bv = bv_ref[0]                       # (NB,)
+
+    # membership + gather in one shot: valid keys are strictly increasing,
+    # so each a row matches at most one live b row and the one-hot row sum
+    # IS the gathered value (the searchsorted probe of the fallback,
+    # unrolled into an MXU product against the resident b stream)
+    m = (ak[:, None] == bk[None, :]) & (ak[:, None] != sent)     # (T, NB)
+    hit = jnp.any(m, axis=1)
+    gathered = jnp.dot(m.astype(jnp.float32), bv[:, None],
+                       preferred_element_type=jnp.float32)[:, 0]
+    prod = jnp.where(hit, av * gathered, 0.0)
+
+    ids = jnp.where(hit, ok, n_slots - 1)
+    cols = jnp.stack([prod, hit.astype(jnp.float32)], axis=1)    # (T, 2)
+    seg_iota = jax.lax.broadcasted_iota(jnp.int32, (n_slots, t), 0)
+    onehot = (seg_iota == ids[None, :]).astype(jnp.float32)
+    acc_ref[...] += jnp.dot(onehot, cols,
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(nt == pl.num_programs(0) - 1)
+    def _():
+        o_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("num_slots", "t_tile", "interpret"))
+def fused_imr_workspace(a_key: jnp.ndarray, a_vals: jnp.ndarray,
+                        out_key: jnp.ndarray, b_key: jnp.ndarray,
+                        b_vals: jnp.ndarray, *, num_slots: int,
+                        t_tile: int = 512,
+                        interpret: bool = False) -> jnp.ndarray:
+    """Dense (num_slots, 2) = [sums, hits] workspace of the fused loop.
+
+    Invalid rows of either stream must already be keyed to int32 max (the
+    wrapper's job — it folds the validity masks into the keys); ``b_vals``
+    must be 0 at invalid rows.
+    """
+    sent = jnp.iinfo(jnp.int32).max
+    na = a_key.shape[0]
+    nb = b_key.shape[0]
+    pad_n = (-na) % t_tile
+    if pad_n:
+        a_key = jnp.pad(a_key, (0, pad_n), constant_values=sent)
+        a_vals = jnp.pad(a_vals, (0, pad_n))
+        out_key = jnp.pad(out_key, (0, pad_n))
+    n_p = a_key.shape[0]
+    s_p = num_slots + 1                  # pad slot swallows misses
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, n_slots=s_p, t=t_tile, sent=sent),
+        grid=(n_p // t_tile,),
+        in_specs=[
+            pl.BlockSpec((1, t_tile), lambda nt: (0, nt)),
+            pl.BlockSpec((1, t_tile), lambda nt: (0, nt)),
+            pl.BlockSpec((1, t_tile), lambda nt: (0, nt)),
+            pl.BlockSpec((1, nb), lambda nt: (0, 0)),
+            pl.BlockSpec((1, nb), lambda nt: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((s_p, 2), lambda nt: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((s_p, 2), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((s_p, 2), jnp.float32)],
+        interpret=interpret,
+    )(a_key.astype(jnp.int32).reshape(1, n_p),
+      a_vals.astype(jnp.float32).reshape(1, n_p),
+      out_key.astype(jnp.int32).reshape(1, n_p),
+      b_key.astype(jnp.int32).reshape(1, nb),
+      b_vals.astype(jnp.float32).reshape(1, nb))
+    return out[:num_slots]

@@ -1,0 +1,1 @@
+"""Roofline analysis of compiled artifacts and kernel launch shapes."""

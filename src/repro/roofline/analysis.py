@@ -178,3 +178,33 @@ def model_flops(n_params_active: int, tokens: int, kind: str) -> float:
     """MODEL_FLOPS: 6*N*D for a train step; 2*N*D for inference."""
     factor = 6.0 if kind == "train" else 2.0
     return factor * n_params_active * tokens
+
+
+def kernel_roofline(flops: float, bytes_moved: float, *,
+                    peak_flops: float = V5E_PEAK_FLOPS,
+                    hbm_bw: float = V5E_HBM_BW) -> Dict[str, float]:
+    """Two-term roofline bound for ONE kernel invocation.
+
+    Unlike ``analyze`` (which reads a compiled artifact), this takes the
+    ALGORITHMIC counts a kernel author can state from the launch shape —
+    ``benchmarks/kernels.py`` uses it to report what fraction of the roof
+    each streaming kernel's arithmetic could reach, and whether its
+    operational intensity puts it under the compute or the memory slope.
+
+    >>> r = kernel_roofline(2e9, 1e6)
+    >>> r["bound"], round(r["intensity"])
+    ('compute', 2000)
+    """
+    compute_s = flops / peak_flops
+    memory_s = bytes_moved / hbm_bw
+    t = max(compute_s, memory_s)
+    attainable = flops / t if t > 0 else 0.0
+    return {
+        "flops": float(flops), "bytes": float(bytes_moved),
+        "intensity": (flops / bytes_moved) if bytes_moved
+        else float("inf"),
+        "t_compute": compute_s, "t_memory": memory_s,
+        "bound": "compute" if compute_s >= memory_s else "memory",
+        "attainable_flops": attainable,
+        "peak_fraction": attainable / peak_flops,
+    }

@@ -183,7 +183,13 @@ def test_segment_sum_dispatch_matches_numpy(case):
 def test_union_reduce_dispatch_entry_is_the_fallback():
     from repro.kernels import ops as kops
 
-    assert kops.sam_primitive("keyed_union_reduce") is co.keyed_union_reduce
+    # CPU resolution keeps the coord_ops fallback; the tpu entry is the
+    # Pallas dense-workspace kernel (tests/test_kernel_conformance.py
+    # drives every entry differentially)
+    assert kops.sam_primitive("keyed_union_reduce", backend="cpu") \
+        is co.keyed_union_reduce
+    assert kops.sam_primitive("keyed_union_reduce", backend="tpu") \
+        is not co.keyed_union_reduce
 
 
 # -- coo_to_levels (the fusion splice primitive) ----------------------------

@@ -1,0 +1,117 @@
+"""Golden wire-level streams pin the FUSED Pallas engine path (§5).
+
+``tests/test_split_golden.py`` pins the unfused simulator's writer token
+streams for every Table 1 expression under a split + parallelized
+schedule. Here the compiled engine runs the SAME split schedules with
+the Pallas kernels injected — the fused intersect-multiply-reduce for
+the multiply collapse and the dense-workspace union reduce for the
+lane/term merge, both in interpret mode on CPU — and its per-lane
+partials must merge to exactly those golden token streams, and must be
+BIT-identical to the unfused coord_ops engine (integer-valued data, so
+any float is exact and equality is not a tolerance question).
+
+A tiled case closes the loop on the third merge site: per-tile partial
+COOs accumulated through the Pallas workspace kernel must reproduce the
+same golden streams too.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from test_custard_table1 import CASES, DIMS, make_arrays, oracle
+from test_split_golden import decode_writer_tokens
+
+from repro.core.custard import lower
+from repro.core.einsum import parse
+from repro.core.jax_backend import CompiledExpr, TiledExpr
+from repro.core.schedule import Format, Schedule
+from repro.core.simulator import Simulator
+from repro.kernels import ops as kops
+
+
+def _golden(expr, fmt, order, arrays):
+    """The unsplit simulator's writer tokens, keyed by LHS coordinates."""
+    assign = parse(expr)
+    low = lower(expr, fmt, Schedule(loop_order=tuple(order)), DIMS)
+    res = Simulator(low.graph, low.build_inputs(arrays)).run()
+    tok = decode_writer_tokens(res, assign.lhs.tensor, low.result_vars)
+    out = {}
+    for key, v in tok.items():
+        out[tuple(key[low.result_vars.index(w)]
+                  for w in assign.lhs.vars)] = v
+    return out
+
+
+def _as_dict(ft, rank):
+    dense = np.asarray(ft.to_dense()) if rank else np.asarray(ft.to_dense())
+    if rank == 0:
+        return {} if float(dense) == 0.0 else {(): float(dense)}
+    out = {}
+    for key in zip(*np.nonzero(dense)):
+        out[tuple(int(k) for k in key)] = float(dense[key])
+    return out
+
+
+def _inject_pallas(eng):
+    """Force the engine's dispatch slots onto the Pallas kernels (the
+    wrappers self-guard on crossover thresholds and dtypes, and run in
+    interpret mode off-TPU)."""
+    eng._union_reduce = kops._keyed_union_reduce_pallas
+    eng._mul_reduce = kops._mul_reduce_pallas
+    return eng
+
+
+@pytest.mark.parametrize("name,expr,order,fmts,expected", CASES,
+                         ids=[c[0] for c in CASES])
+def test_fused_engine_merges_to_golden_streams(name, expr, order, fmts,
+                                               expected):
+    assign = parse(expr)
+    fmt = Format(dict(fmts))
+    arrays = make_arrays(assign)
+    rank = len(assign.lhs.vars)
+    golden = _golden(expr, fmt, order, arrays)
+
+    # sanity: golden streams carry exactly the dense oracle
+    terms = [(t.sign, [(f.tensor, "".join(f.vars)) for f in t.factors])
+             for t in assign.terms]
+    want = oracle(terms, arrays, "".join(assign.result_vars), DIMS)
+    for key, v in golden.items():
+        assert np.isclose(want[key], v), (name, key)
+
+    # the engine under the split+parallel schedule: per-lane partials
+    # merge through the INJECTED Pallas union reduce, multiply collapses
+    # through the Pallas fused path
+    outer = order[0]
+    sch = Schedule(loop_order=tuple(order), split={outer: 2},
+                   parallelize={outer: 2})
+    fused = _inject_pallas(CompiledExpr(expr, fmt, sch, DIMS))
+    assert fused._mul_reduce is kops._mul_reduce_pallas
+    got_fused = _as_dict(fused(arrays), rank)
+    assert got_fused == golden, f"{name}: fused engine diverges from golden"
+
+    # bit-identity against the unfused coord_ops path on the same schedule
+    unfused = CompiledExpr(expr, fmt, sch, DIMS)
+    unfused._mul_reduce = None
+    unfused._union_reduce = None
+    got_unfused = _as_dict(unfused(arrays), rank)
+    assert got_fused == got_unfused, f"{name}: fused != unfused bitwise"
+
+
+def test_tiled_partials_merge_to_golden_streams():
+    """Per-tile partial COOs accumulated through the Pallas workspace
+    union reduce reproduce the unsplit golden token streams."""
+    name, expr, order, fmts, _ = next(c for c in CASES
+                                      if c[0].startswith("SpMSpM"))
+    assign = parse(expr)
+    fmt = Format(dict(fmts))
+    arrays = make_arrays(assign)
+    golden = _golden(expr, fmt, order, arrays)
+
+    red = [v for v in order if v not in assign.lhs.vars][0]
+    sch = Schedule(loop_order=tuple(order), tile={red: 2})
+    eng = TiledExpr(expr, fmt, sch, DIMS)
+    eng._union_reduce = kops._keyed_union_reduce_pallas
+    assert eng.n_tiles > 1
+    got = _as_dict(eng(arrays), len(assign.lhs.vars))
+    assert got == golden

@@ -1,0 +1,505 @@
+"""Differential kernel-conformance layer for the SAM primitive table.
+
+Every ``SAM_PRIMITIVES`` entry is driven through ALL of its registered
+implementations — the Pallas kernels (interpret mode on CPU), the
+coord_ops fallbacks, and a plain numpy oracle — on randomized and
+adversarial inputs: empty streams, all-padding tiles, duplicate keys,
+single-element segments, and sizes straddling the tile and
+``_PALLAS_*`` crossover boundaries. Agreement is BIT-identical on the
+integer-valued float data used throughout (one-hot f32 matmuls and
+segment sums are exact there, so any divergence is a real bug, not
+rounding). Runs under ``tests/_hypothesis_stub.py`` when hypothesis is
+absent, like ``test_coord_ops_fuzz.py``.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as hst
+except ImportError:
+    from _hypothesis_stub import given, settings, strategies as hst
+
+from repro.core import coord_ops as co
+from repro.kernels import ops as kops
+
+WS_MAX = kops._PALLAS_WORKSPACE_MAX_SLOTS
+SEG_MAX = kops._PALLAS_SEGSUM_MAX_SEGMENTS
+
+
+def assert_union_results_equal(ref, got, msg=""):
+    """(keys, vals, valid, count) tuples must agree bit for bit."""
+    for a, b, part in zip(ref, got, ("keys", "vals", "valid", "count")):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=f"{msg}: {part}")
+
+
+# -- dispatch-table contract ------------------------------------------------
+
+def test_every_primitive_has_a_fallback():
+    for name, impls in kops.SAM_PRIMITIVES.items():
+        assert "fallback" in impls, name
+        # CPU resolution never lands on a Pallas entry — the tier-1 suite
+        # cannot regress through the kernel layer
+        assert kops.sam_primitive(name, backend="cpu") is impls["fallback"]
+
+
+def test_register_primitive_requires_fallback_first():
+    with pytest.raises(ValueError):
+        kops.register_primitive("nonexistent_prim", "tpu", lambda: None)
+    assert "nonexistent_prim" not in kops.SAM_PRIMITIVES
+    try:
+        kops.register_primitive("nonexistent_prim", "fallback", co.mul_reduce)
+        assert kops.sam_primitive("nonexistent_prim") is co.mul_reduce
+    finally:
+        kops.SAM_PRIMITIVES.pop("nonexistent_prim", None)
+
+
+# -- strategies -------------------------------------------------------------
+
+@hst.composite
+def keyed_stream(draw):
+    """Random (keys, vals, valid, bound): duplicates, zeros, empty tails."""
+    n = draw(hst.integers(1, 96))
+    bound = draw(hst.integers(1, 48))
+    seed = draw(hst.integers(0, 2 ** 31 - 1))
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(0, bound, n)
+    vals = rng.integers(-4, 5, n).astype(np.float32)
+    valid = rng.random(n) < draw(hst.integers(0, 10)) / 10.0
+    return keys, vals, valid, bound
+
+
+@hst.composite
+def sorted_stream_pair(draw):
+    """Level-scanner-shaped stream pair for the fused kernel contract:
+    valid keys strictly increasing, b prefix-valid, a tail PAD-keyed."""
+    seed = draw(hst.integers(0, 2 ** 31 - 1))
+    na = draw(hst.integers(1, 64))
+    nb = draw(hst.integers(1, 64))
+    bound = draw(hst.integers(1, 48))
+    key_space = draw(hst.integers(4, 200))
+    rng = np.random.default_rng(seed)
+    la = int(rng.integers(0, min(na, key_space) + 1))
+    lb = int(rng.integers(0, min(nb, key_space) + 1))
+    a_key = np.full(na, co.PAD_KEY, np.int64)
+    a_key[:la] = np.sort(rng.choice(key_space, la, replace=False))
+    b_key = np.full(nb, co.PAD_KEY, np.int64)
+    b_key[:lb] = np.sort(rng.choice(key_space, lb, replace=False))
+    a_valid = np.arange(na) < la
+    b_valid = np.arange(nb) < lb
+    a_vals = rng.integers(-4, 5, na).astype(np.float32)
+    b_vals = rng.integers(-4, 5, nb).astype(np.float32)
+    out_key = rng.integers(0, bound, na)
+    return (a_key, a_valid, a_vals, b_key, b_valid, b_vals, out_key, bound)
+
+
+# -- keyed_union_reduce -----------------------------------------------------
+
+def _union_oracle(keys, vals, valid):
+    acc = {}
+    for k, v, ok in zip(keys, vals, valid):
+        if ok:
+            acc[int(k)] = acc.get(int(k), 0.0) + float(v)
+    return acc
+
+
+def _check_union(keys, vals, valid, bound, cap=None):
+    acc = _union_oracle(keys, vals, valid)
+    cap = cap or max(8, len(acc) + 2)
+    args = (jnp.asarray(keys, jnp.int64), jnp.asarray(vals),
+            jnp.asarray(valid), cap)
+    ref = co.keyed_union_reduce(*args, key_bound=bound)
+    got = kops._keyed_union_reduce_pallas(*args, key_bound=bound)
+    assert_union_results_equal(ref, got, "union_reduce")
+    uk, uv, ok, count = (np.asarray(x) for x in got)
+    assert int(count) == len(acc)
+    assert dict(zip(uk[ok].tolist(), uv[ok].tolist())) == acc
+
+
+@settings(max_examples=12, deadline=None)
+@given(keyed_stream())
+def test_union_reduce_pallas_matches_fallback_and_oracle(case):
+    _check_union(*case)
+
+
+def test_union_reduce_adversarial_edges():
+    # empty stream / all-padding tile
+    _check_union(np.zeros(8, np.int64), np.zeros(8, np.float32),
+                 np.zeros(8, bool), 16)
+    # single element
+    _check_union(np.asarray([3]), np.asarray([2.0], np.float32),
+                 np.asarray([True]), 8)
+    # every row the same key (maximal duplication)
+    _check_union(np.full(40, 7, np.int64),
+                 np.ones(40, np.float32), np.ones(40, bool), 9)
+    # live key cancelling to zero must keep its slot on both paths
+    _check_union(np.asarray([4, 4, 9]),
+                 np.asarray([1.0, -1.0, 5.0], np.float32),
+                 np.asarray([True, True, True]), 10)
+
+
+def test_union_reduce_straddles_workspace_crossover():
+    """On either side of ``_PALLAS_WORKSPACE_MAX_SLOTS`` the dispatch
+    wrapper must agree with the fallback — inside the guard it runs the
+    kernel, one past it it IS the fallback."""
+    rng = np.random.default_rng(5)
+    n = 64
+    keys = rng.integers(0, 60, n)
+    vals = rng.integers(-4, 5, n).astype(np.float32)
+    valid = rng.random(n) < 0.8
+    for bound in (WS_MAX, WS_MAX + 1):
+        _check_union(keys, vals, valid, bound)
+
+
+def test_union_reduce_tile_boundary_sizes():
+    """Input lengths straddling the kernel's t_tile=1024 padding edge."""
+    rng = np.random.default_rng(6)
+    for n in (1023, 1024, 1025):
+        keys = rng.integers(0, 32, n)
+        vals = rng.integers(-4, 5, n).astype(np.float32)
+        valid = rng.random(n) < 0.7
+        _check_union(keys, vals, valid, 32)
+
+
+def test_union_reduce_non_f32_dtype_routes_to_fallback():
+    """f64 values outside the exact-f32 set take the fallback inside the
+    wrapper — results stay f64-accurate, no silent narrowing."""
+    keys = jnp.asarray([0, 0, 1], jnp.int64)
+    vals = jnp.asarray([1.0, 1e-12, 3.0], jnp.float64)
+    valid = jnp.ones(3, bool)
+    uk, uv, ok, count = kops._keyed_union_reduce_pallas(
+        keys, vals, valid, 8, key_bound=4)
+    assert np.asarray(uv)[0] == 1.0 + 1e-12      # f32 would round this away
+
+
+# -- mul_reduce -------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(keyed_stream())
+def test_mul_reduce_pallas_matches_fallback(case):
+    keys, a_vals, valid, bound = case
+    rng = np.random.default_rng(int(np.sum(keys)) + 1)
+    b_vals = rng.integers(-4, 5, len(keys)).astype(np.float32)
+    args = (jnp.asarray(keys, jnp.int64), jnp.asarray(a_vals),
+            jnp.asarray(b_vals), jnp.asarray(valid), max(8, bound + 2))
+    ref = co.mul_reduce(*args, key_bound=bound)
+    got = kops._mul_reduce_pallas(*args, key_bound=bound)
+    assert_union_results_equal(ref, got, "mul_reduce")
+    # and both equal union_reduce of the eager product (the definition)
+    eager = co.keyed_union_reduce(args[0], args[1] * args[2], args[3],
+                                  args[4], key_bound=bound)
+    assert_union_results_equal(eager, got, "mul_reduce vs eager product")
+
+
+def test_mul_reduce_masks_garbage_at_invalid_rows():
+    """inf/nan at invalid rows must not poison the workspace (the kernel
+    masks the product BEFORE the one-hot dot: 0 * nan would otherwise
+    contaminate every accumulator row it touches)."""
+    keys = jnp.asarray([0, 1, 2, 3], jnp.int64)
+    a = jnp.asarray([2.0, np.nan, np.inf, 4.0], jnp.float32)
+    b = jnp.asarray([3.0, np.inf, np.nan, 5.0], jnp.float32)
+    valid = jnp.asarray([True, False, False, True])
+    ref = co.mul_reduce(keys, a, b, valid, 8, key_bound=4)
+    got = kops._mul_reduce_pallas(keys, a, b, valid, 8, key_bound=4)
+    assert_union_results_equal(ref, got, "nan masking")
+    assert np.isfinite(np.asarray(got[1])).all()
+
+
+# -- intersect_mul_reduce (the fused Gustavson inner loop) ------------------
+
+@settings(max_examples=12, deadline=None)
+@given(sorted_stream_pair())
+def test_fused_imr_pallas_matches_unfused_composition(case):
+    a_key, a_valid, a_vals, b_key, b_valid, b_vals, out_key, bound = case
+    cap = max(8, bound + 2)
+    args = (jnp.asarray(a_key), jnp.asarray(a_valid), jnp.asarray(a_vals),
+            jnp.asarray(b_key), jnp.asarray(b_valid), jnp.asarray(b_vals),
+            jnp.asarray(out_key, jnp.int64), cap)
+    ref = co.fused_intersect_mul_reduce(*args, key_bound=bound)
+    got = kops._fused_imr_pallas(*args, key_bound=bound)
+    assert_union_results_equal(ref, got, "fused imr")
+
+
+def test_fused_imr_empty_and_disjoint_streams():
+    pad = np.full(8, co.PAD_KEY, np.int64)
+    novalid = np.zeros(8, bool)
+    ones = np.ones(8, np.float32)
+    out_key = np.arange(8, dtype=np.int64)
+    # all-padding a-tile
+    ref = co.fused_intersect_mul_reduce(
+        jnp.asarray(pad), jnp.asarray(novalid), jnp.asarray(ones),
+        jnp.asarray(pad), jnp.asarray(novalid), jnp.asarray(ones),
+        jnp.asarray(out_key), 8, key_bound=8)
+    got = kops._fused_imr_pallas(
+        jnp.asarray(pad), jnp.asarray(novalid), jnp.asarray(ones),
+        jnp.asarray(pad), jnp.asarray(novalid), jnp.asarray(ones),
+        jnp.asarray(out_key), 8, key_bound=8)
+    assert_union_results_equal(ref, got, "empty")
+    assert int(got[3]) == 0
+    # disjoint keys: intersection is empty, reduce sees no hits
+    ak = np.asarray([0, 2, 4, co.PAD_KEY], np.int64)
+    bk = np.asarray([1, 3, 5, co.PAD_KEY], np.int64)
+    av = np.asarray([True, True, True, False])
+    vals = np.ones(4, np.float32)
+    ok4 = np.arange(4, dtype=np.int64)
+    ref = co.fused_intersect_mul_reduce(
+        jnp.asarray(ak), jnp.asarray(av), jnp.asarray(vals),
+        jnp.asarray(bk), jnp.asarray(av), jnp.asarray(vals),
+        jnp.asarray(ok4), 8, key_bound=8)
+    got = kops._fused_imr_pallas(
+        jnp.asarray(ak), jnp.asarray(av), jnp.asarray(vals),
+        jnp.asarray(bk), jnp.asarray(av), jnp.asarray(vals),
+        jnp.asarray(ok4), 8, key_bound=8)
+    assert_union_results_equal(ref, got, "disjoint")
+    assert int(got[3]) == 0
+
+
+def test_fused_imr_tile_boundary_sizes():
+    """a-stream lengths straddling the kernel's t_tile=512 padding edge."""
+    rng = np.random.default_rng(7)
+    for na in (511, 512, 513):
+        space = 2048
+        la = 300
+        a_key = np.full(na, co.PAD_KEY, np.int64)
+        a_key[:la] = np.sort(rng.choice(space, la, replace=False))
+        a_valid = np.arange(na) < la
+        a_vals = rng.integers(-3, 4, na).astype(np.float32)
+        lb = 200
+        b_key = np.full(256, co.PAD_KEY, np.int64)
+        b_key[:lb] = np.sort(rng.choice(space, lb, replace=False))
+        b_valid = np.arange(256) < lb
+        b_vals = rng.integers(-3, 4, 256).astype(np.float32)
+        out_key = rng.integers(0, 40, na)
+        args = (jnp.asarray(a_key), jnp.asarray(a_valid),
+                jnp.asarray(a_vals), jnp.asarray(b_key),
+                jnp.asarray(b_valid), jnp.asarray(b_vals),
+                jnp.asarray(out_key, jnp.int64), 48)
+        ref = co.fused_intersect_mul_reduce(*args, key_bound=40)
+        got = kops._fused_imr_pallas(*args, key_bound=40)
+        assert_union_results_equal(ref, got, f"na={na}")
+
+
+# -- keyed_segment_sum: crossover + dtype preservation ----------------------
+
+def test_segment_sum_straddles_crossover():
+    rng = np.random.default_rng(8)
+    n = 256
+    for nseg in (SEG_MAX, SEG_MAX + 1):
+        ids = rng.integers(0, nseg, n)
+        vals = rng.integers(-4, 5, n).astype(np.float32)
+        ref = np.asarray(co.default_segment_sum(
+            jnp.asarray(vals), jnp.asarray(ids), nseg))
+        got = np.asarray(kops._keyed_segment_sum_pallas(
+            jnp.asarray(vals), jnp.asarray(ids), nseg))
+        np.testing.assert_array_equal(ref, got, err_msg=f"nseg={nseg}")
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64, jnp.int32,
+                                   jnp.int64])
+def test_segment_sum_preserves_dtype_on_both_paths(dtype):
+    """Regression: the Pallas wrapper used to cast through float32 and
+    back, silently narrowing f64 (and rounding large ints). Every dtype
+    must round-trip exactly through BOTH dispatch entries."""
+    rng = np.random.default_rng(9)
+    ids = jnp.asarray(rng.integers(0, 10, 100))
+    if dtype in (jnp.float32, jnp.float64):
+        # 1 + 1e-12 survives f64 but rounds away in f32: proves the f64
+        # path never narrows
+        base = rng.integers(-4, 5, 100).astype(np.float64)
+        if dtype == jnp.float64:
+            base = base + 1e-12
+        vals = jnp.asarray(base, dtype)
+    else:
+        vals = jnp.asarray(rng.integers(-1000, 1000, 100), dtype)
+    for impl in (kops._keyed_segment_sum_pallas, co.default_segment_sum,
+                 kops.sam_primitive("keyed_segment_sum", backend="tpu")):
+        out = impl(vals, ids, 10)
+        assert out.dtype == vals.dtype, impl
+        ref = co.default_segment_sum(vals, ids, 10)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+# -- coo_to_levels ----------------------------------------------------------
+
+@hst.composite
+def coo_levels_case(draw):
+    nlev = draw(hst.integers(1, 3))
+    dims = tuple(draw(hst.integers(2, 6)) for _ in range(nlev))
+    seed = draw(hst.integers(0, 2 ** 31 - 1))
+    rng = np.random.default_rng(seed)
+    total = int(np.prod(dims))
+    nnz = draw(hst.integers(0, min(total, 24)))
+    keys = np.sort(rng.choice(total, size=nnz, replace=False)).astype(
+        np.int64)
+    return dims, keys
+
+
+def _check_levels(dims, keys, caps=None):
+    nnz = len(keys)
+    cap = max(8, nnz + 2)
+    padded = np.full(cap, co.PAD_KEY, np.int64)
+    padded[:nnz] = keys
+    valid = np.arange(cap) < nnz
+    caps = caps or [cap] * len(dims)
+    ref = co.coo_to_levels(jnp.asarray(padded), jnp.asarray(valid),
+                           list(dims), caps)
+    got = kops._coo_to_levels_pallas(jnp.asarray(padded), jnp.asarray(valid),
+                                     list(dims), caps)
+    for lvl in range(len(dims)):
+        np.testing.assert_array_equal(np.asarray(ref[0][lvl]),
+                                      np.asarray(got[0][lvl]),
+                                      err_msg=f"seg {lvl}")
+        np.testing.assert_array_equal(np.asarray(ref[1][lvl]),
+                                      np.asarray(got[1][lvl]),
+                                      err_msg=f"crd {lvl}")
+        assert int(ref[2][lvl]) == int(got[2][lvl]), f"count {lvl}"
+
+
+@settings(max_examples=12, deadline=None)
+@given(coo_levels_case())
+def test_coo_to_levels_pallas_matches_fallback(case):
+    _check_levels(*case)
+
+
+def test_coo_to_levels_edges_and_guard():
+    _check_levels((4, 5), np.zeros(0, np.int64))          # empty
+    _check_levels((4,), np.asarray([2], np.int64))        # single element
+    _check_levels((6, 5, 4), np.arange(24, dtype=np.int64))  # fully dense
+    # beyond the exact-f32 horizon the wrapper must return the fallback
+    big = kops._MAX_EXACT_COORD
+    keys = jnp.asarray([0, big + 1], jnp.int64)
+    valid = jnp.ones(2, bool)
+    ref = co.coo_to_levels(keys, valid, [big + 2], [4])
+    got = kops._coo_to_levels_pallas(keys, valid, [big + 2], [4])
+    np.testing.assert_array_equal(np.asarray(ref[1][0]),
+                                  np.asarray(got[1][0]))
+
+
+# -- sorted_intersect (fallback-only entry, numpy oracle) -------------------
+
+@settings(max_examples=12, deadline=None)
+@given(sorted_stream_pair())
+def test_sorted_intersect_entry_matches_set_oracle(case):
+    a_key, a_valid, _, b_key, b_valid, _, _, _ = case
+    impl = kops.sam_primitive("sorted_intersect", backend="tpu")
+    hit, idx = impl(jnp.asarray(a_key), jnp.asarray(a_valid),
+                    jnp.asarray(b_key), jnp.asarray(b_valid))
+    hit, idx = np.asarray(hit), np.asarray(idx)
+    b_live = set(b_key[b_valid].tolist())
+    for i, (k, ok) in enumerate(zip(a_key, a_valid)):
+        expect = bool(ok) and k != co.PAD_KEY and int(k) in b_live
+        assert bool(hit[i]) == expect, f"pos {i}"
+        if expect:
+            assert b_key[idx[i]] == k
+
+
+# -- bsr_from_block_coords vectorization ------------------------------------
+
+def _bsr_maps_reference(rows, cols, nnzb, n_brow):
+    """The pre-vectorization O(nnzb) loop, kept as the oracle."""
+    counts = np.bincount(rows, minlength=n_brow)
+    max_nnz = max(int(counts.max(initial=0)), 1)
+    blk_map = np.full((n_brow, max_nnz), nnzb, dtype=np.int32)
+    col_idx = np.zeros((n_brow, max_nnz), dtype=np.int32)
+    slot = np.zeros(n_brow, np.int64)
+    for b, (r, c) in enumerate(zip(rows, cols)):
+        blk_map[r, slot[r]] = b
+        col_idx[r, slot[r]] = c
+        slot[r] += 1
+    return blk_map, col_idx
+
+
+@settings(max_examples=25, deadline=None)
+@given(hst.integers(0, 60), hst.integers(1, 12), hst.integers(0, 2**31 - 1))
+def test_bsr_from_block_coords_matches_loop_reference(nnzb, n_brow, seed):
+    rng = np.random.default_rng(seed)
+    rows = rng.integers(0, n_brow, nnzb)
+    cols = rng.integers(0, 16, nnzb)
+    blocks = rng.random((nnzb, 2, 2)).astype(np.float32)
+    bm, ci, bp = kops.bsr_from_block_coords(rows, cols, blocks, n_brow)
+    bm_ref, ci_ref = _bsr_maps_reference(rows, cols, nnzb, n_brow)
+    np.testing.assert_array_equal(bm, bm_ref)
+    np.testing.assert_array_equal(ci, ci_ref)
+    assert bp.shape[0] == nnzb + 1 and not bp[-1].any()
+
+
+# -- b-format BSR bridge end-to-end -----------------------------------------
+
+def _bsr_engine(expr, fmt_map, dims):
+    from repro.core.jax_backend import compile_expr
+    from repro.core.schedule import Format, Schedule
+
+    return compile_expr(expr, Format(fmt_map),
+                        Schedule(loop_order=tuple(dims)), dims)
+
+
+def test_b_format_spmm_end_to_end():
+    from repro.core.bsr_bridge import BsrEngine
+
+    rng = np.random.default_rng(11)
+    B = (rng.integers(1, 5, (8, 12))
+         * (rng.random((8, 12)) < 0.3)).astype(float)
+    C = rng.integers(-3, 4, (12, 6)).astype(float)
+    eng = _bsr_engine("x(i,k) = B(i,j) * C(j,k)", {"B": "bb"},
+                      {"i": 8, "j": 12, "k": 6})
+    assert isinstance(eng, BsrEngine)
+    before = eng.stats["calls"]        # engine may be cache-shared
+    out = eng({"B": B, "C": C}).to_dense()
+    np.testing.assert_array_equal(out, B @ C)   # bit-identical to dense ref
+    assert eng.stats["kernel"] == "spmm"
+    assert eng.stats["calls"] == before + 1
+
+
+def test_b_format_sddmm_end_to_end():
+    from repro.core.bsr_bridge import BsrEngine
+
+    rng = np.random.default_rng(12)
+    M = (rng.integers(1, 4, (8, 8)) * (rng.random((8, 8)) < 0.4)).astype(float)
+    A = rng.integers(-2, 3, (8, 4)).astype(float)
+    C = rng.integers(-2, 3, (8, 4)).astype(float)
+    eng = _bsr_engine("X(i,j) = M(i,j) * A(i,k) * C(j,k)", {"M": "bb"},
+                      {"i": 8, "j": 8, "k": 4})
+    assert isinstance(eng, BsrEngine)
+    out = eng({"M": M, "A": A, "C": C}).to_dense()
+    np.testing.assert_array_equal(out, M * (A @ C.T))
+    assert eng.stats["kernel"] == "sddmm"
+
+
+def test_b_format_pattern_guardrails():
+    from repro.core.bsr_bridge import bsr_pattern
+    from repro.core.einsum import parse
+    from repro.core.schedule import Format
+
+    # matches: SpMM with a transposed dense factor
+    assert bsr_pattern(parse("x(i,k) = B(i,j) * C(k,j)"),
+                       Format({"B": "bb"})).kind == "spmm"
+    # no b operand -> no routing
+    assert bsr_pattern(parse("x(i,k) = B(i,j) * C(j,k)"),
+                       Format({"B": "cc"})) is None
+    # rank-1 output is not bridged
+    assert bsr_pattern(parse("x(i) = B(i,j) * c(j)"),
+                       Format({"B": "bb"})) is None
+    # additive terms are not bridged
+    assert bsr_pattern(parse("X(i,j) = B(i,j) + C(i,j)"),
+                       Format({"B": "bb"})) is None
+
+
+def test_b_format_server_admission():
+    from repro.core.serving import AdmissionError, Request, SamServer
+    from repro.core.schedule import Format
+
+    rng = np.random.default_rng(13)
+    B = (rng.integers(1, 5, (8, 8)) * (rng.random((8, 8)) < 0.3)).astype(float)
+    C = rng.integers(-2, 3, (8, 4)).astype(float)
+    with SamServer() as srv:
+        h = srv.submit(Request("x(i,k) = B(i,j) * C(j,k)",
+                               {"B": B, "C": C}, formats=Format({"B": "bb"})))
+        np.testing.assert_array_equal(h.result().to_dense(), B @ C)
+        # non-pattern b formats keep the unsupported-format refusal
+        h2 = srv.submit(Request("x(i) = B(i,j) * c(j)",
+                                {"B": B, "c": np.ones(8)},
+                                formats=Format({"B": "bb"})))
+        with pytest.raises(AdmissionError) as ei:
+            h2.result()
+        assert ei.value.reason == "unsupported-format"
