@@ -7,33 +7,57 @@ Crd+split / BV / BV+split(bit-tree) over (a) urandom sparsity sweep,
 Checks the paper's conclusions: bitvectors win when dense-ish and lose to
 compressed iteration as sparsity grows (a); skipping/splitting win with
 longer runs while BV stays flat (b).
+
+Cycles come from ``simulate_expr`` (the end-to-end lowering path: split +
+schedule + simulate — the legacy ``run_expr`` helper hand-rolled the same
+lowering); every variant's simulated values are checked against ``b*c``,
+and the non-bitvector variants additionally execute on the compiled
+engine (``jax_backend.compile_expr``) and must match numerically.
+Bitvector iteration is a simulator-only structure (DESIGN.md §5), so the
+BV variants carry no engine run.
 """
 from __future__ import annotations
 
 import numpy as np
 
-from .common import RNG, run_expr, runs_vector, uniform_sparse
+from repro.core.jax_backend import compile_expr
+from repro.core.schedule import Format, Schedule
+from repro.core.simulator import simulate_expr
+
+from .common import runs_vector, uniform_sparse
 
 DIM = 2000
 EXPR = "x(i) = b(i) * c(i)"
 
+# name -> (formats, schedule kwargs, runs-on-engine)
+VARIANTS = {
+    "Dense": ({"b": "d", "c": "d"}, {}, True),
+    "Crd": ({"b": "c", "c": "c"}, {}, True),
+    "Crd_skip": ({"b": "c", "c": "c"}, {"skip": frozenset("i")}, True),
+    "Crd_split": ({"b": "cc", "c": "cc"}, {"split": {"i": 64}}, True),
+    "BV": ({"b": "b", "c": "b"}, {"bitvector": frozenset("i")}, False),
+    "BV_split": ({"b": "bb", "c": "bb"},
+                 {"split": {"i": 64}, "bitvector": frozenset("i")}, False),
+}
+
 
 def variants(b, c):
+    """Cycles per structure variant; raises on any numeric mismatch."""
     arrays = {"b": b, "c": c}
     dims = {"i": DIM}
+    want = b * c
     out = {}
-    out["Dense"] = run_expr(EXPR, {"b": "d", "c": "d"}, "i", arrays, dims)[0]
-    out["Crd"] = run_expr(EXPR, {"b": "c", "c": "c"}, "i", arrays, dims)[0]
-    out["Crd_skip"] = run_expr(EXPR, {"b": "c", "c": "c"}, "i", arrays,
-                               dims, skip={"i"})[0]
-    out["Crd_split"] = run_expr(EXPR, {"b": "cc", "c": "cc"}, "i", arrays,
-                                dims, split={"i": 64})[0]
-    out["BV"] = run_expr(EXPR, {"b": "b", "c": "b"}, "i", arrays, dims,
-                         bitvector={"i"})[0]
-    out["BV_split"] = run_expr(EXPR, {"b": "bb", "c": "bb"}, "i", arrays,
-                               dims, split={"i": 64},
-                               bitvector={"i"})[0]
-    return {k: v.cycles for k, v in out.items()}
+    for name, (fmts, kw, on_engine) in VARIANTS.items():
+        sch = Schedule(loop_order=("i",), **kw)
+        res = simulate_expr(EXPR, Format(dict(fmts)), sch, arrays, dims)
+        if not np.array_equal(res.dense, want):
+            raise AssertionError(f"fig13 {name}: simulator != numpy")
+        if on_engine:
+            eng = compile_expr(EXPR, Format(dict(fmts)), sch, dims)
+            if not np.allclose(eng(arrays).to_dense(), want):
+                raise AssertionError(f"fig13 {name}: engine != numpy")
+        out[name] = res.cycles
+    return out
 
 
 def run(emit):

@@ -8,12 +8,19 @@ ExTensor's published parameters: 68.256 GB/s DRAM, 17 MB LLB, 128x128 PE
 tiles. Runtime = max(compute cycles, DRAM-bound cycles) with sparse tile
 skipping. The check: the paper's three regions — rising (more nonempty
 tiles), falling (tile skipping), saturating.
+
+The tile-sequencing cost comes from ``simulate_expr`` (the end-to-end
+lowering path; the legacy ``run_expr`` helper hand-rolled the same
+steps), and its simulated tile-level product is checked against numpy.
 """
 from __future__ import annotations
 
 import numpy as np
 
-from .common import RNG, run_expr
+from repro.core.schedule import Format, Schedule
+from repro.core.simulator import simulate_expr
+
+from .common import RNG
 
 NNZ = 5000
 TILE = 128
@@ -36,10 +43,13 @@ def model_point(d):
     occC = tile_occupancy(d, NNZ)
     # SAM tile-sequencing graph: tile-level SpM*SpM (values = per-tile nnz)
     nt = occB.shape[0]
-    res, _ = run_expr("X(i,j) = B(i,k) * C(k,j)",
-                      {"B": "cc", "C": "cc"}, "ikj",
-                      {"B": occB.astype(float), "C": occC.astype(float)},
-                      {"i": nt, "j": nt, "k": nt})
+    res = simulate_expr("X(i,j) = B(i,k) * C(k,j)",
+                        Format({"B": "cc", "C": "cc"}),
+                        Schedule(loop_order=("i", "k", "j")),
+                        {"B": occB.astype(float), "C": occC.astype(float)},
+                        {"i": nt, "j": nt, "k": nt})
+    if not np.array_equal(res.dense, occB.astype(float) @ occC):
+        raise AssertionError("fig15: tile-sequencing sim != numpy")
     seq_cycles = res.cycles              # tile-ID co-iteration cost
     # surviving tile pairs and their traffic/compute
     Bi, Bk = np.nonzero(occB)

@@ -3,15 +3,24 @@ study replayed inside an LM; DESIGN.md §8 deviations ledger).
 
 Reports wall time and the analytic work ratio E/k. The SAM (Gustavson
 sort-order) dispatch does O(k*T*D) expert work; the dense baseline does
-O(E*T*D)."""
+O(E*T*D).
+
+The same layer also runs as compiled SAM programs: ``MoEBlock``
+(``models/moe_blocks.py``, ``compile_program`` with the fused
+dispatch→GEMM cascades) executes at a capacity that guarantees zero
+drops and must match ``moe_dense_dispatch`` — the engine path and the
+jnp reference disagree only by f32 association (DESIGN.md §12).
+"""
 from __future__ import annotations
 
 import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models import moe as moe_mod
+from repro.models.moe_blocks import MoEBlock
 
 
 def run(emit, smoke: bool = False):
@@ -38,4 +47,23 @@ def run(emit, smoke: bool = False):
     emit(f"moe_dispatch,dense_us,{us_dense:.0f}")
     emit(f"moe_dispatch,wall_speedup,{us_dense / us_sam:.2f}")
     emit(f"moe_dispatch,analytic_work_ratio,{e / k:.1f}")
-    return us_sam < us_dense
+
+    # compiled SAM-program path: small shape, capacity = token count so
+    # nothing drops, output must agree with the dense one-hot reference
+    ce, ct = 8, 64
+    cp = moe_mod.init_moe(jax.random.PRNGKey(2), d, dff, ce,
+                          dtype=jnp.float32)
+    cx = jax.random.normal(jax.random.PRNGKey(3), (ct, d), jnp.float32)
+    block = MoEBlock(ce, ct, ct, d, dff)
+    t0 = time.perf_counter()
+    got = block({k2: np.asarray(v) for k2, v in cp.items()}, np.asarray(cx),
+                k=k)
+    prog_us = (time.perf_counter() - t0) * 1e6
+    want = np.asarray(moe_mod.moe_dense_dispatch(cp, cx, k=k,
+                                                 compute_dtype=jnp.float32))
+    err = float(np.abs(got - want).max() / np.abs(want).max())
+    prog_ok = block.last_dropped == 0 and err < 1e-5
+    emit(f"moe_dispatch,program_rel_err,{err:.2e},"
+         f"{'pass' if prog_ok else 'FAIL'}")
+    emit(f"moe_dispatch,program_us,{prog_us:.0f}")
+    return bool(us_sam < us_dense and prog_ok)

@@ -19,9 +19,9 @@ import time
 
 def main() -> None:
     from . import (autotune, compiled_cache, dist_tiles, fig11, fig12,
-                   fig13, fig14, fig15, kernels, moe_dispatch,
-                   program_fusion, serving, split_scaling, table1, table2,
-                   tiled_oob)
+                   fig13, fig14, fig15, kernels, model_blocks,
+                   moe_dispatch, program_fusion, serving, split_scaling,
+                   table1, table2, tiled_oob)
     benches = {
         "kernels": kernels.run,
         "table1": table1.run, "table2": table2.run,
@@ -32,6 +32,7 @@ def main() -> None:
         "split_scaling": split_scaling.run,
         "autotune": autotune.run,
         "program_fusion": program_fusion.run,
+        "model_blocks": model_blocks.run,
         "tiled_oob": tiled_oob.run,
         "serving": serving.run,
         "dist_tiles": dist_tiles.run,

@@ -4,9 +4,10 @@ The compiled streaming engine serves ``d``/``c`` level formats; tensors
 declared all-``b`` store sparsity at BLOCK granularity — exactly the
 hierarchical split the paper applies to fit finite memories (§4.1), and
 exactly the shape the seed BSR kernels (``kernels/spmm_bsr.py``,
-``kernels/sddmm_bsr.py``) execute as dense per-block MXU matmuls.
-``jax_backend.compile_expr`` recognizes the two canonical block-sparse
-contractions here and routes them to a ``BsrEngine`` instead of refusing:
+``kernels/sddmm_bsr.py``, ``kernels/bsr_attention.py``) execute as dense
+per-block MXU matmuls. ``jax_backend.compile_expr`` recognizes the three
+canonical block-sparse contractions here and routes them to a
+``BsrEngine`` instead of refusing:
 
 * **SpMM** — ``x(i,k) = B(i,j) * C(j,k)`` with ``B`` all-``b``: ``B``
   blockifies to BCSR and every surviving (block-row, block-col) runs one
@@ -15,12 +16,31 @@ contractions here and routes them to a ``BsrEngine`` instead of refusing:
   the dense product is computed ONLY at ``M``'s nonzero blocks (the
   paper's flagship fusion example, Fig. 11), then scaled elementwise by
   the mask block values.
+* **Attention** — ``O(i,d) = M(i,j) * Q(i,e) * K(j,e) * V(j,d)`` with
+  ``M`` all-``b``: the SDDMM→softmax→SpMM pipeline fused into
+  ``bsr_flash_attention``. This is the ONE bridged pattern whose
+  semantics deviate from the literal algebra (the admission rule,
+  DESIGN.md §12): ``M``'s nonzero BLOCKS gate which (q, kv) block pairs
+  are visited (block values do not scale scores), the sampled scores are
+  passed through a ``1/sqrt(e)``-scaled streaming softmax per query row,
+  and rows whose every block is masked produce zeros. Masking is
+  block-granular — causal *within-block* masking is the kernel's
+  ``causal`` flag, not expressible through ``M``.
 
 Either dense factor may list its indices in the transposed order (e.g.
 ``C(k,j)``); the bridge re-arranges host-side. The block size is the
 largest power-of-two divisor common to the blocked extents (capped at
 the 128-lane MXU width), so any extents work — degenerate 1×1 blocks
 simply recover element-granular COO.
+
+**Dtype discipline** (mirrors ``kernels/ops._PALLAS_EXACT_DTYPES``): the
+Pallas kernels accumulate in f32, so only float32 operands take the
+kernel path; every other dtype (float64 above all) routes to the
+blockified numpy fallback in the operands' OWN result dtype — a bridged
+f64 request must survive round-trip without narrowing, exactly like the
+``_keyed_segment_sum_pallas`` guard. The attention kernel additionally
+requires ``Q``/``K``'s feature extent to equal ``V``'s (one head dim);
+mismatched extents fall back too.
 
 The engine quacks like ``CompiledExpr`` for the serving paths
 (``__call__``/``execute``/``execute_batch``/``execute_many``/``stats``),
@@ -36,6 +56,12 @@ import numpy as np
 from .einsum import Access, Assignment
 from .fibertree import FiberTree
 from .schedule import Format
+
+# the Pallas BSR kernels accumulate in f32; only these operand dtypes
+# stay bit-exact through the kernel path (kernels/ops._PALLAS_EXACT_DTYPES
+# discipline) — everything else computes on the numpy fallback in its own
+# dtype
+_KERNEL_DTYPES = (np.float32,)
 
 
 def _is_block(fmt: Format, acc: Access) -> bool:
@@ -53,20 +79,21 @@ def _pow2_divisor(n: int, cap: int) -> int:
 @dataclasses.dataclass(frozen=True)
 class BsrPattern:
     """A recognized block-sparse contraction (see module docstring)."""
-    kind: str                    # "spmm" | "sddmm"
+    kind: str                    # "spmm" | "sddmm" | "attention"
     sparse: str                  # the all-``b`` operand
     dense: Tuple[str, ...]       # dense operand(s), kernel argument order
     transposed: Tuple[bool, ...]  # per dense operand: stored transposed?
-    red_var: str                 # the contracted index variable
+    red_var: str                 # the contracted index variable (for
+    #                              attention: the score contraction ``e``)
 
 
 def bsr_pattern(assign: Assignment, fmt: Format) -> Optional[BsrPattern]:
     """Match ``assign`` against the bridged block-sparse contractions.
 
     Returns a ``BsrPattern`` when the expression is a single positive
-    product term in SpMM or SDDMM shape with exactly one rank-2 all-``b``
-    factor (every other operand ``d``/``c``); None otherwise — callers
-    fall back to their normal handling.
+    product term in SpMM, SDDMM, or block-attention shape with exactly
+    one rank-2 all-``b`` factor (every other operand ``d``/``c``); None
+    otherwise — callers fall back to their normal handling.
     """
     if len(assign.terms) != 1 or assign.terms[0].sign != 1:
         return None
@@ -82,31 +109,54 @@ def bsr_pattern(assign: Assignment, fmt: Format) -> Optional[BsrPattern]:
             return None
     s = sparse[0]
     red = [v for v in term.vars if v not in assign.lhs.vars]
-    if len(red) != 1:
-        return None
-    k = red[0]
     ri, rj = assign.lhs.vars
 
-    if len(term.factors) == 2 and len(rest) == 1:
-        # SpMM: x(i,k) = B(i,j) * C(j,k) — B block-sparse over the output
-        # rows × contraction, C dense over contraction × output cols
-        d = rest[0]
-        if s.vars == (ri, k) and set(d.vars) == {k, rj}:
-            return BsrPattern("spmm", s.tensor, (d.tensor,),
-                              (d.vars != (k, rj),), k)
+    if len(red) == 1:
+        k = red[0]
+        if len(term.factors) == 2 and len(rest) == 1:
+            # SpMM: x(i,k) = B(i,j) * C(j,k) — B block-sparse over the
+            # output rows × contraction, C dense over contraction × cols
+            d = rest[0]
+            if s.vars == (ri, k) and set(d.vars) == {k, rj}:
+                return BsrPattern("spmm", s.tensor, (d.tensor,),
+                                  (d.vars != (k, rj),), k)
+            return None
+
+        if len(term.factors) == 3 and len(rest) == 2:
+            # SDDMM: X(i,j) = M(i,j) * A(i,k) * C(j,k) — M samples the
+            # output blocks, A carries the output rows, C the cols
+            if s.vars != (ri, rj):
+                return None
+            a = [f for f in rest if ri in f.vars and k in f.vars]
+            c = [f for f in rest if rj in f.vars and k in f.vars]
+            if len(a) != 1 or len(c) != 1:
+                return None
+            return BsrPattern("sddmm", s.tensor,
+                              (a[0].tensor, c[0].tensor),
+                              (a[0].vars != (ri, k), c[0].vars != (rj, k)),
+                              k)
         return None
 
-    if len(term.factors) == 3 and len(rest) == 2:
-        # SDDMM: X(i,j) = M(i,j) * A(i,k) * C(j,k) — M samples the output
-        # blocks, A carries the output rows, C the output cols
-        if s.vars != (ri, rj):
+    if len(red) == 2 and len(term.factors) == 4 and len(rest) == 3:
+        # attention: O(i,d) = M(i,j) * Q(i,e) * K(j,e) * V(j,d) — M's
+        # blocks gate which (q block, kv block) pairs the fused
+        # SDDMM→softmax→SpMM kernel visits (module docstring)
+        if len(set(s.vars)) != 2 or ri not in s.vars:
             return None
-        a = [f for f in rest if ri in f.vars and k in f.vars]
-        c = [f for f in rest if rj in f.vars and k in f.vars]
-        if len(a) != 1 or len(c) != 1:
+        j = s.vars[1] if s.vars[0] == ri else s.vars[0]
+        if s.vars != (ri, j) or j not in red:
             return None
-        return BsrPattern("sddmm", s.tensor, (a[0].tensor, c[0].tensor),
-                          (a[0].vars != (ri, k), c[0].vars != (rj, k)), k)
+        (e,) = [v for v in red if v != j]
+        q = [f for f in rest if set(f.vars) == {ri, e}]
+        kk = [f for f in rest if set(f.vars) == {j, e}]
+        v = [f for f in rest if set(f.vars) == {j, rj}]
+        if len(q) != 1 or len(kk) != 1 or len(v) != 1:
+            return None
+        return BsrPattern(
+            "attention", s.tensor,
+            (q[0].tensor, kk[0].tensor, v[0].tensor),
+            (q[0].vars != (ri, e), kk[0].vars != (j, e),
+             v[0].vars != (j, rj)), e)
     return None
 
 
@@ -120,12 +170,93 @@ def _blockify(m: np.ndarray, bs: int
     return rows, cols, np.ascontiguousarray(tiles[rows, cols])
 
 
+def _mask_block_size(sp: np.ndarray, cap: int = 128) -> int:
+    """Largest power-of-two block size at which the attention mask is
+    block-UNIFORM (every tile all-zero or all-nonzero). Unlike
+    SpMM/SDDMM — where block values ride along and any covering works —
+    the attention mask GATES whole blocks, so a coarser-than-uniform
+    blocking would silently admit masked positions."""
+    bs = _pow2_divisor(np.gcd(sp.shape[0], sp.shape[1]), cap)
+    nz = sp != 0
+    while bs > 1:
+        t = nz.reshape(sp.shape[0] // bs, bs, sp.shape[1] // bs, bs)
+        per_tile = t.sum(axis=(1, 3))
+        if np.all((per_tile == 0) | (per_tile == bs * bs)):
+            break
+        bs //= 2
+    return bs
+
+
+def _kv_index(rows: np.ndarray, cols: np.ndarray, n_qblk: int,
+              n_kvblk: int) -> np.ndarray:
+    """Block mask COO -> padded per-q-block kv slot map (the
+    ``bsr_flash_attention`` BCSR layout; pad slots carry the out-of-range
+    sentinel ``n_kvblk``, which masks the whole slot)."""
+    counts = np.bincount(rows, minlength=n_qblk)
+    max_kv = max(int(counts.max(initial=0)), 1)
+    idx = np.full((n_qblk, max_kv), n_kvblk, dtype=np.int32)
+    order = np.argsort(rows, kind="stable")
+    row_start = np.zeros(n_qblk, dtype=np.int64)
+    row_start[1:] = np.cumsum(counts)[:-1]
+    slot = np.arange(len(rows)) - row_start[rows[order]]
+    idx[rows[order], slot] = cols[order]
+    return idx
+
+
+# -- dtype-preserving numpy fallbacks (non-f32 operands) ---------------------
+
+def _spmm_numpy(rows, cols, blocks, c, n_brow: int, bs: int) -> np.ndarray:
+    """Blockified SpMM in the operands' own dtype."""
+    dt = np.result_type(blocks.dtype, c.dtype)
+    n = c.shape[1]
+    out = np.zeros((n_brow, bs, n), dt)
+    if len(rows):
+        cb = np.ascontiguousarray(c).reshape(c.shape[0] // bs, bs, n)
+        contrib = np.einsum("nij,njk->nik", blocks.astype(dt),
+                            cb[cols].astype(dt))
+        np.add.at(out, rows, contrib)
+    return out.reshape(n_brow * bs, n)
+
+
+def _sddmm_numpy(rows, cols, a, c, bs: int) -> np.ndarray:
+    """Sampled block products ``A_blk @ C_blk^T`` in the own dtype."""
+    dt = np.result_type(a.dtype, c.dtype)
+    ab = np.ascontiguousarray(a).reshape(a.shape[0] // bs, bs, a.shape[1])
+    cb = np.ascontiguousarray(c).reshape(c.shape[0] // bs, bs, c.shape[1])
+    if not len(rows):
+        return np.zeros((0, bs, bs), dt)
+    return np.einsum("nik,njk->nij", ab[rows].astype(dt),
+                     cb[cols].astype(dt))
+
+
+def _attention_numpy(q, k, v, rows, cols, bs: int, scale: float
+                     ) -> np.ndarray:
+    """Block-masked softmax attention in the operands' own dtype, with
+    the kernel's conventions: masked scores at -inf, fully-masked query
+    rows produce zeros."""
+    dt = np.result_type(q.dtype, k.dtype, v.dtype)
+    n_qblk, n_kvblk = q.shape[0] // bs, k.shape[0] // bs
+    allow = np.zeros((n_qblk, n_kvblk), bool)
+    allow[rows, cols] = True
+    allow = np.repeat(np.repeat(allow, bs, axis=0), bs, axis=1)
+    scores = (q.astype(dt) @ k.astype(dt).T) * dt.type(scale)
+    scores = np.where(allow, scores, -np.inf)
+    m = np.max(scores, axis=1, keepdims=True)
+    m = np.where(np.isfinite(m), m, 0.0)              # all-masked rows
+    p = np.where(allow, np.exp(scores - m), 0.0)
+    l = np.sum(p, axis=1, keepdims=True)
+    out = p @ v.astype(dt)
+    return np.divide(out, l, out=np.zeros_like(out), where=l > 0)
+
+
 class BsrEngine:
     """Executes one bridged block-sparse contraction (see ``bsr_pattern``).
 
     Results are assembled with ``FiberTree.from_dense`` in the LHS format,
     so downstream consumers see exactly what the streaming engine would
-    return for the same dense result.
+    return for the same dense result. Operand dtypes are PRESERVED:
+    float32 runs the Pallas kernels, anything else the blockified numpy
+    fallback in its own dtype (module docstring).
     """
 
     def __init__(self, assign: Assignment, fmt: Format,
@@ -140,42 +271,75 @@ class BsrEngine:
         # contractions have no parallel lanes to shard
         self._shard_lanes = False
         self.stats = {"calls": 0, "batch_calls": 0, "nnz_blocks": 0,
-                      "kernel": pattern.kind, "block_size": 0}
+                      "kernel": pattern.kind, "block_size": 0,
+                      "fallback_calls": 0}
 
     # -- execution -------------------------------------------------------
     def _dense_operand(self, arrays, idx: int) -> np.ndarray:
-        m = np.asarray(arrays[self.pattern.dense[idx]], dtype=np.float32)
+        m = np.asarray(arrays[self.pattern.dense[idx]])
         return np.ascontiguousarray(m.T) if self.pattern.transposed[idx] \
             else m
+
+    def _use_kernel(self, *operands: np.ndarray) -> bool:
+        """Kernel path iff every operand is bit-exact through the f32
+        Pallas accumulators; otherwise the dtype-preserving fallback."""
+        return all(o.dtype in _KERNEL_DTYPES for o in operands)
 
     def __call__(self, arrays: Dict[str, np.ndarray]) -> FiberTree:
         from ..kernels import ops as kops
 
         self.stats["calls"] += 1
         p = self.pattern
-        sp = np.asarray(arrays[p.sparse], dtype=np.float32)
+        sp = np.asarray(arrays[p.sparse])
+        bs = (_mask_block_size(sp) if p.kind == "attention"
+              else _pow2_divisor(np.gcd(sp.shape[0], sp.shape[1]), 128))
+        rows, cols, blocks = _blockify(sp, bs)
         if p.kind == "spmm":
             c = self._dense_operand(arrays, 0)           # (K, N)
-            bs = _pow2_divisor(np.gcd(sp.shape[0], sp.shape[1]), 128)
-            n_tile = _pow2_divisor(c.shape[1], 128)
-            rows, cols, blocks = _blockify(sp, bs)
-            bm, ci, bp = kops.bsr_from_block_coords(rows, cols, blocks,
-                                                    sp.shape[0] // bs)
-            out = np.asarray(kops.spmm_bsr(bm, ci, bp, c, n_tile=n_tile))
-        else:                                            # sddmm
+            if self._use_kernel(sp, c):
+                n_tile = _pow2_divisor(c.shape[1], 128)
+                bm, ci, bp = kops.bsr_from_block_coords(
+                    rows, cols, blocks, sp.shape[0] // bs)
+                out = np.asarray(kops.spmm_bsr(bm, ci, bp, c,
+                                               n_tile=n_tile))
+            else:
+                self.stats["fallback_calls"] += 1
+                out = _spmm_numpy(rows, cols, blocks, c,
+                                  sp.shape[0] // bs, bs)
+        elif p.kind == "sddmm":
             a = self._dense_operand(arrays, 0)           # (M, K)
             c = self._dense_operand(arrays, 1)           # (N, K)
-            bs = _pow2_divisor(np.gcd(sp.shape[0], sp.shape[1]), 128)
-            k_tile = _pow2_divisor(a.shape[1], 128)
-            rows, cols, blocks = _blockify(sp, bs)
-            sampled = np.asarray(kops.sddmm_bsr(rows, cols, a, c, bs,
-                                                k_tile=k_tile))
+            if self._use_kernel(sp, a, c):
+                k_tile = _pow2_divisor(a.shape[1], 128)
+                sampled = np.asarray(kops.sddmm_bsr(rows, cols, a, c, bs,
+                                                    k_tile=k_tile))
+            else:
+                self.stats["fallback_calls"] += 1
+                sampled = _sddmm_numpy(rows, cols, a, c, bs)
             # SDDMM scales the sampled dense product by the mask values
             sampled = sampled * blocks
             nr, nc = sp.shape[0] // bs, sp.shape[1] // bs
-            tiles = np.zeros((nr, nc, bs, bs), np.float32)
+            tiles = np.zeros((nr, nc, bs, bs), sampled.dtype)
             tiles[rows, cols] = sampled
             out = tiles.transpose(0, 2, 1, 3).reshape(sp.shape)
+        else:                                            # attention
+            q = self._dense_operand(arrays, 0)           # (Sq, E)
+            k = self._dense_operand(arrays, 1)           # (Skv, E)
+            v = self._dense_operand(arrays, 2)           # (Skv, Dv)
+            scale = 1.0 / float(q.shape[1]) ** 0.5
+            # the fused kernel streams one head-dim-wide accumulator, so
+            # it needs E == Dv; mismatched extents fall back like dtypes
+            if self._use_kernel(sp, q, k, v) and q.shape[1] == v.shape[1]:
+                kv_idx = _kv_index(rows, cols, sp.shape[0] // bs,
+                                   sp.shape[1] // bs)
+                # scale=None: the kernel's default is this same
+                # 1/sqrt(E) (a concrete scale cannot cross its jit)
+                out = np.asarray(kops.bsr_flash_attention(
+                    q[None], k[None], v[None], kv_idx, bq=bs,
+                    bkv=bs))[0]
+            else:
+                self.stats["fallback_calls"] += 1
+                out = _attention_numpy(q, k, v, rows, cols, bs, scale)
         self.stats["nnz_blocks"] = int(len(rows))
         self.stats["block_size"] = int(bs)
         return FiberTree.from_dense(out, self._out_fmt)

@@ -55,14 +55,27 @@ def compact(mask: jnp.ndarray, arrays: Tuple[jnp.ndarray, ...], cap: int,
     """Stable compaction of ``arrays`` rows where ``mask`` — jit-static cap.
 
     Returns (compacted arrays, count). Rows beyond ``count`` hold ``fill``.
+
+    Implemented gather-side: output slot ``i`` binary-searches the mask's
+    running count for the ``i+1``-th marked row. XLA:CPU serializes
+    scatters, so the older scatter formulation cost ~10x more wall time
+    on large buffers (the fused-chain splice runs this over the full
+    pre-reduction emission capacity — see DESIGN.md §6).
     """
-    idx = jnp.cumsum(mask) - 1
-    dest = jnp.where(mask, idx, cap)  # out-of-range => dropped
+    if mask.shape[0] == 0:
+        outs = tuple(jnp.full((cap,) + a.shape[1:], fill, dtype=a.dtype)
+                     for a in arrays)
+        return outs, jnp.zeros((), I32)
+    csum = jnp.cumsum(mask.astype(I64))
+    count = csum[-1]
+    src = jnp.searchsorted(csum, jnp.arange(1, cap + 1, dtype=csum.dtype))
+    src = jnp.clip(src, 0, mask.shape[0] - 1)
+    live = jnp.arange(cap) < count
     outs = []
     for a in arrays:
-        out = jnp.full((cap,) + a.shape[1:], fill, dtype=a.dtype)
-        outs.append(out.at[dest].set(a, mode="drop"))
-    return tuple(outs), jnp.sum(mask.astype(I32))
+        lv = live.reshape((cap,) + (1,) * (a.ndim - 1))
+        outs.append(jnp.where(lv, a[src], jnp.asarray(fill, a.dtype)))
+    return tuple(outs), count.astype(I32)
 
 
 def scan_level(seg: jnp.ndarray, crd: jnp.ndarray,

@@ -21,7 +21,15 @@ per-tile engine, while independent TILES spread across workers — a 2-D
   depth-bounded queue — the serving pipeline's discipline (DESIGN.md
   §9): while worker w computes tile t, its encoder prepares tile t+1.
   Every timestamp flows through an injectable ``clock``, so the chaos
-  tests run on a ``FakeClock`` with no wall-clock sleeps.
+  tests run on a ``FakeClock`` with no wall-clock sleeps. Overlap
+  defaults to ``"auto"``: threads spawn only when the live workers own
+  more than one distinct physical device. When every worker shares one
+  device (the plain-CPU case), ``_DEVICE_LOCK`` serializes all compute
+  anyway, so 2x-workers threads add scheduler contention and GIL churn
+  without overlapping anything — at 4 workers on one CPU that showed up
+  as ~1.8x WORSE wall than 1 worker. ``overlap=True`` still forces the
+  threaded scheduler (the chaos tests exercise it on shared devices);
+  ``overlap=False`` forces inline.
 * **Deterministic merge.** Completed tile partials are held per tile
   index and folded through ``coord_ops.accumulate_coo`` in tile-grid
   order AFTER the fan-out completes — the exact left-fold the
@@ -193,7 +201,7 @@ class DistTiledExpr:
     def __init__(self, tiled: TiledExpr, *, workers: int = 2,
                  clock: Optional[Callable[[], float]] = None,
                  max_attempts: int = 3, worker_fail_limit: int = 2,
-                 faults: Any = None, overlap: bool = True,
+                 faults: Any = None, overlap: Any = "auto",
                  pipeline_depth: int = 2,
                  tile_timeout_s: Optional[float] = None,
                  straggler: Optional[StragglerPolicy] = None):
@@ -528,9 +536,19 @@ class DistTiledExpr:
         if live_n == 0:
             raise DistributedError(
                 "no live workers (revive() or rebuild)", reason="no-workers")
-        if self.overlap and live_n > 1:
+        if self._overlap_effective() and live_n > 1:
             return self._run_threaded(arrays, tiles)
         return self._run_inline(arrays, tiles)
+
+    def _overlap_effective(self) -> bool:
+        """Resolve the ``overlap`` policy: ``"auto"`` enables the
+        threaded scheduler only when live workers own more than one
+        distinct physical device — on a shared device ``_DEVICE_LOCK``
+        serializes compute and threads cost more than they overlap
+        (module docstring)."""
+        if self.overlap != "auto":
+            return bool(self.overlap)
+        return len({str(w.device) for w in self.workers if w.alive}) > 1
 
     def merge_partials(self, partials: Dict[int, Any]) -> FiberTree:
         """Fold tile partials in TILE-GRID order — the exact left-fold

@@ -267,11 +267,56 @@ class FusionDecision:
     reason: str = ""
 
 
-def _scan_chain(graph_: g.Graph, tensor: str) -> Optional[List[g.Node]]:
+def _dense_isect_passthrough(graph_: g.Graph, isect: g.Node, port: str,
+                             prev: g.Node, fmt: Optional[Format]) -> bool:
+    """True when ``isect`` forwards ``prev``'s stream unfiltered: the
+    same-side crd/ref inputs come from ``prev`` and the other side is a
+    dense, non-bitvector level scan. A dense level emits every
+    coordinate of its range, so intersecting against it keeps the tensor
+    side intact — splicing the producer's full emission through such an
+    intersecter is semantics-preserving (the per-expert MoE dispatch
+    chain hits exactly this shape: the expert index is co-iterated with
+    a dense weight level at the intermediate's outer mode)."""
+    if fmt is None or isect.kind != g.INTERSECT or isect.params.get("bv"):
+        return False
+    side = port[-1:]
+    if port not in ("ref0", "ref1"):
+        return False
+    other = "1" if side == "0" else "0"
+    ins = {e.dst_port: e for e in graph_.in_edges(isect)}
+    same_crd, same_ref = ins.get(f"crd{side}"), ins.get(f"ref{side}")
+    if (same_ref is None or same_ref.src != prev.id
+            or same_ref.src_port != "ref"
+            or same_crd is None or same_crd.src != prev.id
+            or same_crd.src_port != "crd"):
+        return False
+    oc = ins.get(f"crd{other}")
+    if oc is None:
+        return False
+    osrc = graph_.nodes[oc.src]
+    if (osrc.kind != g.LEVEL_SCAN or osrc.params.get("bv")
+            or oc.src_port != "crd"):
+        return False
+    t, m = osrc.params.get("tensor"), osrc.params.get("mode")
+    if t is None or m is None:
+        return False
+    rank = 1 + max(n.params["mode"] for n in graph_.of_kind(g.LEVEL_SCAN)
+                   if n.params.get("tensor") == t)
+    return fmt.of(t, rank)[m] == "d"
+
+
+def _scan_chain(graph_: g.Graph, tensor: str,
+                fmt: Optional[Format] = None) -> Optional[List[g.Node]]:
     """The consumer's scanners of ``tensor`` as a root-driven chain, or
     None when the chain is broken (a scan driven by an intersect/repeat/
     locate output re-orders or filters the stream — splicing the
-    producer's full emission there would change semantics)."""
+    producer's full emission there would change semantics).
+
+    With ``fmt`` given, a scan reference that flows through an
+    intersecter whose other input is a dense level scan still counts as
+    chained: dense co-iteration never drops coordinates, so the stream
+    reaching the scan is exactly the previous scan's emission (see
+    ``_dense_isect_passthrough``)."""
     scans = sorted((n for n in graph_.of_kind(g.LEVEL_SCAN)
                     if n.params.get("tensor") == tensor),
                    key=lambda n: n.params["mode"])
@@ -289,7 +334,9 @@ def _scan_chain(graph_: g.Graph, tensor: str) -> Optional[List[g.Node]]:
             if src.kind != g.ROOT:
                 return None
         elif src.id != scans[i - 1].id or refs[0].src_port != "ref":
-            return None
+            if not _dense_isect_passthrough(graph_, src, refs[0].src_port,
+                                            scans[i - 1], fmt):
+                return None
     return scans
 
 
@@ -334,7 +381,7 @@ def fusion_legality(program: Program, loweds: List["Lowered"],
     if cons_modes != prod_modes:
         return no(f"consumer iterates modes {cons_modes}, producer "
                   f"emits {prod_modes}")
-    if _scan_chain(clow.graph, tensor) is None:
+    if _scan_chain(clow.graph, tensor, fmt) is None:
         return no("consumer's scanners of the intermediate are not a "
                   "root-driven chain")
     return FusionDecision(tensor, pi, ci, True)
@@ -512,13 +559,14 @@ def _positional(stream, counter: List[int]):
 
 
 def splice_injection(consumer_graph: g.Graph, tensor: str,
-                     crd_streams, val_stream, sign: int
+                     crd_streams, val_stream, sign: int,
+                     fmt: Optional[Format] = None
                      ) -> Tuple[Dict[Tuple[int, str], Any], FiberTree]:
     """Build the ``Simulator(inject=...)`` map that replaces the
     consumer's scanners of ``tensor`` with the producer's writer streams,
     plus the stub FiberTree carrying the (signed) flattened values for
     the consumer's array-load block."""
-    scans = _scan_chain(consumer_graph, tensor)
+    scans = _scan_chain(consumer_graph, tensor, fmt)
     if scans is None or len(scans) != len(crd_streams):
         raise ValueError(f"stage does not splice {tensor!r}")
     inject: Dict[Tuple[int, str], Any] = {}
@@ -626,7 +674,7 @@ def simulate_program(program, fmt: Format, schedules, dims: Dict[str, int],
                 inj, stub = splice_injection(
                     low.graph, name, crds, vals,
                     lp.stages[lp.program.producer_of(name)]
-                    .lowered.terms[0].sign)
+                    .lowered.terms[0].sign, fmt)
                 inject.update(inj)
                 tensors[name] = stub
             res = Simulator(low.graph, tensors, inject=inject).run()

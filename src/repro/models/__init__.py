@@ -1,0 +1,1 @@
+"""Model blocks: dense reference layers and their SAM-program ports."""

@@ -21,7 +21,15 @@ what the dense numpy oracle computes.
   distributed == single-device tiled == numpy, to the BYTE;
 * ``test_distributed_merge_order_determinism`` — tile partials merged
   from shuffled arrival orders produce identical result bytes (the
-  grid-order fold is completion-order-blind).
+  grid-order fold is completion-order-blind);
+* ``test_moe_dispatch_chain_conformance`` — the 4-stage MoE dispatch
+  chain (``models/moe_blocks.MOE_PROGRAM``) over random routing x d/c
+  format variants x split schedules: simulator == engine == numpy to
+  the integer, fused or not;
+* ``test_bsr_attention_*`` — the bridge's attention pattern against the
+  dense masked-softmax oracle: f32 on the Pallas kernel path, f64 on
+  the dtype-preserving fallback (where 1+1e-12 must survive — the
+  regression locked by ``test_bsr_bridge_f64_values_survive``).
 """
 import os
 import subprocess
@@ -401,6 +409,153 @@ def test_random_two_stage_program_conformance(case):
         np.testing.assert_allclose(out["T"].to_dense(), ref["T"])
     else:                               # fused away: the decision says so
         assert cp.decisions[0].fused
+
+
+@hst.composite
+def moe_chain_case(draw):
+    """Random routing + format/schedule variants for the MoE dispatch
+    chain (small shapes: the oracle is integer-exact either way)."""
+    seed = draw(hst.integers(0, 2 ** 31 - 1))
+    e = draw(hst.integers(2, 3))
+    cap = draw(hst.integers(2, 3))
+    t = draw(hst.integers(3, 5))
+    d = draw(hst.integers(2, 3))
+    f = draw(hst.integers(2, 3))
+    # intermediate formats: all-'c' keeps the chain fusible, all-'d'
+    # forces the materialized path — both must agree with numpy
+    fmt_int = ("ccc", "ddd")[draw(hst.integers(0, 1))]
+    # 0 = plain, 1 = split the dispatch stage, 2 = split the combine
+    mode = draw(hst.integers(0, 2))
+    factor = (2, 4)[draw(hst.integers(0, 1))]
+    return seed, e, cap, t, d, f, fmt_int, mode, factor
+
+
+@settings(max_examples=8, deadline=None)
+@given(moe_chain_case())
+def test_moe_dispatch_chain_conformance(case):
+    """Model-block acceptance: the paper-style sparse MoE dispatch
+    (one-hot G dispatch -> per-expert GEMMs -> S combine,
+    ``models/moe_blocks.MOE_PROGRAM``) computes exactly what the dense
+    numpy oracle computes — through the stitched/materialized simulator
+    AND the compiled program engine, for 'c'/'d' intermediate formats
+    and split schedules (integer operands: equality is exact)."""
+    from repro.core.jax_backend import compile_program
+    from repro.core.program import numpy_reference, simulate_program
+    from repro.models.moe_blocks import (MOE_PROGRAM, moe_dims,
+                                         moe_formats, moe_schedules,
+                                         routing_tensors)
+
+    seed, e, cap, t, d, f, fmt_int, mode, factor = case
+    rng = np.random.default_rng(seed)
+    ids = rng.integers(0, e, (t, 2))
+    w = np.ones((t, 2))                      # integer combine weights
+    G, S, _ = routing_tensors(w, ids, e, cap)
+    arrays = {"G": G, "S": S,
+              "X": rng.integers(-3, 4, (t, d)).astype(float),
+              "Wu": rng.integers(-2, 3, (e, d, f)).astype(float),
+              "Wd": rng.integers(-2, 3, (e, f, d)).astype(float)}
+    fmt_map = dict(moe_formats().formats)
+    for name in ("Y", "H", "Z"):
+        fmt_map[name] = fmt_int
+    fmt = Format(fmt_map)
+    sch = {k: Schedule(loop_order=v.loop_order)
+           for k, v in moe_schedules().items()}
+    if mode == 1:
+        sch["Y"] = Schedule(loop_order=sch["Y"].loop_order,
+                            split={"t": factor})
+    elif mode == 2:
+        sch["O"] = Schedule(loop_order=sch["O"].loop_order,
+                            split={"g": factor})
+    dims = moe_dims(e, cap, t, d, f)
+    ref = numpy_reference(MOE_PROGRAM, arrays)
+
+    sim = simulate_program(MOE_PROGRAM, fmt, sch, dims, arrays)
+    np.testing.assert_array_equal(sim.dense["O"], ref["O"],
+                                  err_msg=f"sim: {case}")
+
+    cp = compile_program(MOE_PROGRAM, fmt, sch, dims)
+    out = cp(arrays)
+    np.testing.assert_array_equal(out["O"].to_dense(), ref["O"],
+                                  err_msg=f"engine: {case} {cp.decisions}")
+    for name in ("Y", "H", "Z"):             # materialized stages too
+        if name in out:
+            np.testing.assert_array_equal(out[name].to_dense(), ref[name])
+
+
+def _attention_case(s, hd, bs, dtype, rng):
+    nb = s // bs
+    keep = np.tril(np.ones((nb, nb)))
+    M = np.kron(keep, np.ones((bs, bs))).astype(dtype)
+    Q, K, V = (rng.standard_normal((s, hd)).astype(dtype) for _ in range(3))
+    sc = (Q.astype(np.float64) @ K.astype(np.float64).T) / np.sqrt(hd)
+    sc = np.where(M > 0, sc, -np.inf)
+    p = np.exp(sc - sc.max(1, keepdims=True))
+    want = (p / p.sum(1, keepdims=True)) @ V.astype(np.float64)
+    return M, Q, K, V, want
+
+
+def test_bsr_attention_kernel_matches_softmax_oracle():
+    """f32 block-causal attention through the bridge's attention pattern
+    runs the fused streaming-softmax kernel and matches the dense
+    masked-softmax oracle."""
+    from repro.core.bsr_bridge import BsrEngine
+    from repro.core.jax_backend import compile_expr
+
+    rng = np.random.default_rng(21)
+    s, hd, bs = 32, 8, 8
+    M, Q, K, V, want = _attention_case(s, hd, bs, np.float32, rng)
+    dims = {"i": s, "j": s, "e": hd, "d": hd}
+    eng = compile_expr("O(i,d) = M(i,j) * Q(i,e) * K(j,e) * V(j,d)",
+                       Format({"M": "bb"}),
+                       Schedule(loop_order=("i", "j", "e", "d")), dims)
+    assert isinstance(eng, BsrEngine)
+    assert eng.stats["kernel"] == "attention"
+    out = eng({"M": M, "Q": Q, "K": K, "V": V}).to_dense()
+    np.testing.assert_allclose(out, want, atol=1e-5)
+
+
+def test_bsr_attention_f64_fallback_preserves_dtype():
+    """Non-f32 operands take the blockified numpy fallback in their own
+    dtype: the f64 result matches the f64 oracle far below f32
+    resolution, and the fallback counter ticks."""
+    from repro.core.bsr_bridge import BsrEngine
+    from repro.core.jax_backend import compile_expr
+
+    rng = np.random.default_rng(22)
+    s, hd, bs = 16, 4, 4
+    M, Q, K, V, want = _attention_case(s, hd, bs, np.float64, rng)
+    dims = {"i": s, "j": s, "e": hd, "d": hd}
+    eng = compile_expr("O(i,d) = M(i,j) * Q(i,e) * K(j,e) * V(j,d)",
+                       Format({"M": "bb"}),
+                       Schedule(loop_order=("i", "j", "e", "d")), dims)
+    assert isinstance(eng, BsrEngine)
+    before = eng.stats["fallback_calls"]
+    out = eng({"M": M, "Q": Q, "K": K, "V": V}).to_dense()
+    assert eng.stats["fallback_calls"] == before + 1
+    assert np.asarray(out).dtype == np.float64
+    np.testing.assert_allclose(out, want, atol=1e-12)
+
+
+def test_bsr_bridge_f64_values_survive():
+    """Regression: the bridge used to hard-cast operands to float32,
+    silently flushing sub-f32 structure. A 1+1e-12 perturbation must
+    round-trip exactly through the f64 fallback path."""
+    from repro.core.bsr_bridge import BsrEngine
+    from repro.core.jax_backend import compile_expr
+
+    tiny = 1.0 + 1e-12
+    assert np.float32(tiny) == np.float32(1.0)   # f32 would destroy it
+    B = np.zeros((4, 4), dtype=np.float64)
+    B[0, 0] = tiny
+    B[2, 3] = tiny
+    C = np.eye(4, dtype=np.float64)
+    eng = compile_expr("x(i,k) = B(i,j) * C(j,k)", Format({"B": "bb"}),
+                       Schedule(loop_order=("i", "j", "k")),
+                       {"i": 4, "j": 4, "k": 4})
+    assert isinstance(eng, BsrEngine)
+    out = np.asarray(eng({"B": B, "C": C}).to_dense())
+    assert out.dtype == np.float64
+    np.testing.assert_array_equal(out, B)        # exact, not allclose
 
 
 def test_sharded_dispatch_forced_multi_device():

@@ -155,6 +155,49 @@ def test_broken_scan_chain_materializes():
     np.testing.assert_allclose(sim.dense["A"], ref["A"])
 
 
+def test_dense_intersect_passthrough_fuses_moe_chain():
+    """The §6 relaxation: a scan ref crossing an intersect whose OTHER
+    input is a dense level scan still counts as root-chained (dense
+    co-iteration drops nothing), so the per-expert MoE chain fuses —
+    dispatch and both GEMMs stitch into one cascade while the combine
+    stays a materialization barrier. Numerics stay integer-exact."""
+    from repro.models.moe_blocks import (MOE_PROGRAM, moe_dims,
+                                         moe_formats, moe_schedules,
+                                         routing_tensors)
+
+    rng = np.random.default_rng(33)
+    e, cap, t, d, f = 3, 2, 5, 2, 3
+    G, S, _ = routing_tensors(np.ones((t, 2)),
+                              rng.integers(0, e, (t, 2)), e, cap)
+    arrays = {"G": G, "S": S,
+              "X": rng.integers(-3, 4, (t, d)).astype(float),
+              "Wu": rng.integers(-2, 3, (e, d, f)).astype(float),
+              "Wd": rng.integers(-2, 3, (e, f, d)).astype(float)}
+    dims = moe_dims(e, cap, t, d, f)
+    lp = lower_program(MOE_PROGRAM, moe_formats(), moe_schedules(), dims)
+    assert [dec.fused for dec in lp.decisions] == [True, True, False]
+    ref = numpy_reference(MOE_PROGRAM, arrays)
+    sim = simulate_program(MOE_PROGRAM, moe_formats(), moe_schedules(),
+                           dims, arrays)
+    np.testing.assert_array_equal(sim.dense["O"], ref["O"])
+
+
+def test_compressed_coiterated_level_blocks_passthrough():
+    """Negative control for the pass-through: when the co-iterated
+    weight level is COMPRESSED the intersect can genuinely drop
+    producer coordinates, so the chain must still break there."""
+    from repro.models.moe_blocks import (MOE_PROGRAM, moe_dims,
+                                         moe_formats, moe_schedules)
+
+    fmt_map = dict(moe_formats().formats)
+    fmt_map["Wu"] = "cdd"                  # expert level now compressed
+    dims = moe_dims(3, 2, 5, 2, 3)
+    lp = lower_program(MOE_PROGRAM, Format(fmt_map), moe_schedules(),
+                       dims)
+    y_dec = [dec for dec in lp.decisions if dec.tensor == "Y"][0]
+    assert not y_dec.fused and "chain" in y_dec.reason
+
+
 def test_custard_lower_program_wrapper():
     dims, _ = sddmm_spmm_setup()
     lp = custard_lower_program(SDDMM_SPMM, Format(default="c"),
