@@ -1,0 +1,92 @@
+"""Level-format acceptance: joint (format x schedule) search beats d/c.
+
+The autoscheduler searching formats jointly with order x split x lanes
+(``format_choices=FORMAT_CHOICES``) must find a (format, schedule) pair
+whose FULL-SIZE simulated cycles beat the best pair from the plain
+d/c-only space by >=1.2x on sparse elementwise Mul, with the winning
+cell bit-identical to numpy on the compiled JAX engine. The winner is
+then re-costed under every ``simulator.HW_PRESETS`` hardware model and
+the whole grid lands in ``BENCH_formats.json`` for the CI trajectory.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+import numpy as np
+
+from .common import uniform_sparse
+
+EXPR = "X(i,j) = B(i,j) * C(i,j)"
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+# pinned acceptance floor: best joint (format, schedule) vs best d/c-only
+MARGIN = 1.2
+
+
+def run(emit, smoke: bool = False):
+    from repro.core.autoschedule import FORMAT_CHOICES, search
+    from repro.core.einsum import parse
+    from repro.core.jax_backend import execute_expr
+    from repro.core.schedule import Format
+    from repro.core.simulator import HW_PRESETS, simulate_expr
+
+    n = 128 if smoke else 256
+    dims = {"i": n, "j": n}
+    B = uniform_sparse((n, n), 0.25)
+    C = uniform_sparse((n, n), 0.25)
+    arrays = {"B": B, "C": C}
+    assign = parse(EXPR)
+    base = Format({"B": "cc", "C": "cc", "X": "cc"})
+
+    # plain d/c-only search vs the joint format+schedule search
+    rep_plain = search(assign, base, dims, arrays=arrays, device_count=1)
+    rep_joint = search(assign, base, dims, arrays=arrays, device_count=1,
+                       format_choices=FORMAT_CHOICES)
+
+    def full_cycles(cand):
+        return simulate_expr(assign, cand.spec.format(base), cand.schedule,
+                             arrays, dims).cycles
+
+    plain = full_cycles(rep_plain.best)
+    joint = full_cycles(rep_joint.best)
+    margin = plain / joint
+    emit(f"formats/search,plain_best_cycles,{plain}")
+    emit(f"formats/search,joint_best_cycles,{joint}")
+    emit(f"formats/search,margin,{margin:.3f}")
+    win_fmt = rep_joint.best.spec.format(base)
+    emit(f"formats/winner,formats,"
+         f"{'|'.join(f'{t}:{s}' for t, s in sorted(win_fmt.formats.items()))}")
+    emit(f"formats/winner,schedule,{rep_joint.best.spec.key()}")
+
+    # the winning cell must be bit-identical to numpy on the JAX engine
+    got = execute_expr(assign, win_fmt, rep_joint.best.schedule,
+                       arrays, dims).to_dense()
+    exact = bool(np.array_equal(got, B * C))
+    emit(f"formats/winner,engine_bit_identical,{int(exact)}")
+
+    # re-cost the winner under every hardware preset
+    hw_cycles = {}
+    for hw, cfg in sorted(HW_PRESETS.items()):
+        hw_cycles[hw] = int(simulate_expr(assign, win_fmt,
+                                          rep_joint.best.schedule,
+                                          arrays, dims, hw=cfg).cycles)
+        emit(f"formats/hw,{hw},{hw_cycles[hw]}")
+
+    out = {
+        "expr": EXPR, "n": n, "density": 0.25, "smoke": smoke,
+        "plain_best": {"schedule": rep_plain.best.spec.key(),
+                       "cycles": int(plain)},
+        "joint_best": {"schedule": rep_joint.best.spec.key(),
+                       "formats": dict(rep_joint.best.spec.formats),
+                       "cycles": int(joint)},
+        "margin": float(margin), "margin_floor": MARGIN,
+        "engine_bit_identical": exact,
+        "hw_cycles": hw_cycles,
+        "enumerated": {"plain": rep_plain.enumerated,
+                       "joint": rep_joint.enumerated},
+    }
+    (ROOT / "BENCH_formats.json").write_text(json.dumps(out, indent=2))
+
+    won_formats = bool(rep_joint.best.spec.formats)
+    return margin >= MARGIN and exact and won_formats

@@ -19,7 +19,7 @@ import time
 
 def main() -> None:
     from . import (autotune, compiled_cache, dist_tiles, fig11, fig12,
-                   fig13, fig14, fig15, kernels, model_blocks,
+                   fig13, fig14, fig15, formats, kernels, model_blocks,
                    moe_dispatch, program_fusion, serving, split_scaling,
                    table1, table2, tiled_oob)
     benches = {
@@ -31,6 +31,7 @@ def main() -> None:
         "compiled_cache": compiled_cache.run,
         "split_scaling": split_scaling.run,
         "autotune": autotune.run,
+        "formats": formats.run,
         "program_fusion": program_fusion.run,
         "model_blocks": model_blocks.run,
         "tiled_oob": tiled_oob.run,

@@ -9,8 +9,11 @@ something the system searches:
 1. **Enumerate** the legal schedule space (``enumerate_space``): loop
    orders consistent with the expression (permutations of its index
    variables), iteration-split factors over power-of-two candidates
-   (§4.1), and §4.4 lane counts up to the device count riding on the
-   split variable.
+   (§4.1), §4.4 lane counts up to the device count riding on the split
+   variable, and — when ``format_choices`` is given — per-tensor level
+   formats drawn from the pluggable level interface
+   (``fibertree.LEVEL_SPECS``; only formats whose capability flags
+   support iteration are legal candidates).
 2. **Prune** with a cheap analytic estimate (``analytic_cost``): expected
    stream lengths derived from formats + dims + a sparsity hint, combined
    with the simulator's steady-state law (cycles ≈ max per-block work).
@@ -59,11 +62,19 @@ from .simulator import downsample_operands, simulate_expr
 DEFAULT_SPARSITY = 0.1
 SPLIT_FACTORS = (2, 4, 8)
 MAX_ORDERS = 720          # full permutations up to 6 index variables
-# v2: Schedule serialization gained the out-of-core `tile` field, and
-# budget-qualified searches can persist tiled winners (DESIGN.md §7) —
-# the version rides the default cache FILENAME, so v1 stores are simply
-# never read (or clobbered) by v2 tools
-CACHE_VERSION = 2
+# per-level format chars the joint (format x schedule) search draws from
+# when ``format_choices`` is requested but unspecified
+FORMAT_CHOICES = ("c", "m", "h", "s")
+MAX_FORMAT_COMBOS = 32    # cap on the per-tensor format cross product
+# v3: the search space gained per-tensor level formats
+# (``CandidateSpec.formats``) and the analytic model gained format terms
+# (bitmap word streams, hashed sort stages, singleton tree conversion) —
+# a v2 winner may no longer be the winner of the same key's search. The
+# version rides the default cache FILENAME, so older stores are simply
+# never read (or clobbered) by v3 tools; a shared $SAM_SCHEDULE_CACHE
+# file is guarded by the version stamp INSIDE the file instead (see
+# ``ScheduleCache._load``).
+CACHE_VERSION = 3
 
 SparsityHint = Union[None, float, Dict[str, float]]
 
@@ -80,13 +91,17 @@ class CandidateSpec:
     most one ``(var, factor)`` §4.1 split; ``lanes > 1`` parallelizes the
     split variable's outer half into that many §4.4 lanes. ``tile``
     carries the out-of-core coordinate partition a memory budget forced
-    (``search(mem_budget=...)``; empty without a budget).
+    (``search(mem_budget=...)``; empty without a budget). ``formats``
+    carries per-tensor level-format OVERRIDES of the caller's baseline
+    ``Format`` — empty means "use the baseline unchanged", which keeps
+    the format-less space byte-identical to the historical one.
     """
 
     order: Tuple[str, ...]
     split: Tuple[Tuple[str, int], ...] = ()
     lanes: int = 1
     tile: Tuple[Tuple[str, int], ...] = ()
+    formats: Tuple[Tuple[str, str], ...] = ()   # (tensor, format string)
 
     def schedule(self) -> Schedule:
         split = dict(self.split)
@@ -96,19 +111,71 @@ class CandidateSpec:
         return Schedule(loop_order=self.order, split=split, parallelize=par,
                         tile=dict(self.tile))
 
+    def format(self, base: Format) -> Format:
+        """The baseline ``Format`` with this spec's overrides applied."""
+        if not self.formats:
+            return base
+        merged = dict(base.formats)
+        merged.update(dict(self.formats))
+        return Format(merged, default=base.default)
+
     def key(self) -> str:
         """Deterministic total-order tie-breaker (the separator keeps
         multi-character variable names collision-free)."""
         sp = ",".join(f"{v}:{f}" for v, f in self.split)
         ti = ",".join(f"{v}:{n}" for v, n in self.tile)
+        fo = ",".join(f"{t}:{s}" for t, s in self.formats)
         return (f"{','.join(self.order)}|split={sp}|lanes={self.lanes}"
-                + (f"|tile={ti}" if ti else ""))
+                + (f"|tile={ti}" if ti else "")
+                + (f"|fmt={fo}" if fo else ""))
+
+
+def _format_combos(assign: Assignment, fmt: Optional[Format],
+                   format_choices: Sequence[str]
+                   ) -> List[Tuple[Tuple[str, str], ...]]:
+    """Per-tensor format override combinations, baseline (empty) first.
+
+    Legality comes from the level-format capability flags: only formats
+    that support streaming iteration (``spec_of(ch).iterate``) can feed a
+    level scanner, so only those enumerate. The cross product over input
+    tensors is capped at ``MAX_FORMAT_COMBOS`` (deterministic prefix).
+    """
+    from itertools import product
+
+    from .fibertree import spec_of
+
+    fmt = fmt or Format()
+    tensors: List[Tuple[str, int]] = []
+    for term in assign.terms:
+        for acc in term.factors:
+            if acc.tensor not in dict(tensors):
+                tensors.append((acc.tensor, len(acc.vars)))
+    per_tensor: List[List[Tuple[str, str]]] = []
+    for t, rank in sorted(tensors):
+        base = fmt.of(t, rank)
+        opts = [base]
+        for ch in format_choices:
+            s = ch * rank if rank else ""
+            if s not in opts and spec_of(ch).iterate:
+                opts.append(s)
+        per_tensor.append([(t, s) for s in opts])
+    combos: List[Tuple[Tuple[str, str], ...]] = []
+    for combo in islice(product(*per_tensor), MAX_FORMAT_COMBOS):
+        # keep only the entries that differ from the baseline, so the
+        # all-baseline combo is the empty tuple (spec key stability)
+        combos.append(tuple((t, s) for (t, s), (bt, rank) in
+                            zip(combo, sorted(tensors))
+                            if s != fmt.of(t, rank)))
+    return combos
 
 
 def enumerate_space(assign: Union[str, Assignment], dims: Dict[str, int], *,
                     device_count: Optional[int] = None,
                     split_factors: Sequence[int] = SPLIT_FACTORS,
-                    max_orders: int = MAX_ORDERS) -> List[CandidateSpec]:
+                    max_orders: int = MAX_ORDERS,
+                    fmt: Optional[Format] = None,
+                    format_choices: Optional[Sequence[str]] = None
+                    ) -> List[CandidateSpec]:
     """Enumerate the legal schedule space for an expression.
 
     Legality invariants (pinned by ``tests/test_autoschedule.py``):
@@ -121,7 +188,12 @@ def enumerate_space(assign: Union[str, Assignment], dims: Dict[str, int], *,
     * variables whose §4.1 rename ``(vo, vi)`` would collide with an
       existing variable are never split;
     * lane counts are powers of two, ``lanes <= device_count`` and
-      ``lanes <= factor`` (a lane per coordinate chunk at most).
+      ``lanes <= factor`` (a lane per coordinate chunk at most);
+    * format candidates (``format_choices``, e.g. ``("c", "m", "h",
+      "s")``; ``None`` keeps the historical format-less space) are
+      uniform per-tensor level strings restricted to formats whose
+      ``fibertree.LevelSpec.iterate`` capability is set, crossed with
+      every schedule point and capped at ``MAX_FORMAT_COMBOS``.
     """
     assign = parse(assign) if isinstance(assign, str) else assign
     vars_ = list(assign.all_vars)
@@ -150,6 +222,10 @@ def enumerate_space(assign: Union[str, Assignment], dims: Dict[str, int], *,
                     if n <= f:
                         specs.append(CandidateSpec(
                             order=order, split=((v, f),), lanes=n))
+    if format_choices:
+        combos = _format_combos(assign, fmt, format_choices)
+        specs = [dataclasses.replace(s, formats=c)
+                 for c in combos for s in specs]
     return specs
 
 
@@ -207,7 +283,16 @@ def analytic_cost(assign: Assignment, fmt: Format, dims: Dict[str, int],
     estimate times the tile-grid volume (tiles stream sequentially) with
     a small overhead factor, so untiled schedules win whenever they fit
     the budget.
+
+    Format terms (``spec.formats`` overrides the baseline ``fmt``):
+    a variable whose scanned sources are ALL bitmap (``m``) streams one
+    token per packed word — ``ceil(dim/64)`` per fiber instead of
+    ``dim * fill`` (the §4.3 win the simulator models); each hashed
+    (``h``) source adds an in-stream sort stage of ``~2x`` its token
+    count; a tensor with singleton (``s``) levels adds a one-time
+    tree-conversion stage of ``~2x`` its estimated nnz.
     """
+    fmt = spec.format(fmt)
     if spec.tile:
         from .tiling import n_tiles, tile_extents
         ext = tile_extents(dims, dict(spec.tile))
@@ -217,17 +302,24 @@ def analytic_cost(assign: Assignment, fmt: Format, dims: Dict[str, int],
     pos = {v: i for i, v in enumerate(spec.order)}
     result_vars = set(assign.lhs.vars)
     fills: Dict[str, float] = {}
+    stages: List[float] = []
     for term in assign.terms:
         for acc in term.factors:
             if acc.tensor in fills:
                 continue
             s = fmt.of(acc.tensor, len(acc.vars))
-            m = sum(1 for ch in s if ch in "cb")
+            m = sum(1 for ch in s if ch in "cbshm")
             p = densities.get(acc.tensor, DEFAULT_SPARSITY)
             fills[acc.tensor] = p ** (1.0 / m) if m else 1.0
+            if "s" in s:
+                # non-unique storage rebuilds canonically once, up front
+                # (the op="tree" CONVERT node): ~2 tokens per entry
+                size = 1.0
+                for v in acc.vars:
+                    size *= dims.get(v, 1)
+                stages.append(2.0 * p * size + 1.0)
 
     par_var = spec.split[0][0] if (spec.lanes > 1 and spec.split) else None
-    stages: List[float] = []
     result_est = 0.0
     for term in assign.terms:
         scope = [v for v in spec.order
@@ -235,16 +327,26 @@ def analytic_cost(assign: Assignment, fmt: Format, dims: Dict[str, int],
         count = 1.0
         laned = par_var is not None and par_var in term.vars
         for v in scope:
-            flens: List[float] = []
-            fprob = 1.0
+            srcs: List[Tuple[str, str]] = []
             for f in term.factors:
                 if v not in f.vars:
                     continue
                 s = fmt.of(f.tensor, len(f.vars))
                 path = sorted(f.vars, key=lambda w: pos[w])
                 ch = s[path.index(v)] if path.index(v) < len(s) else "c"
-                fill = fills[f.tensor] if ch in "cb" else 1.0
-                flens.append(max(dims[v] * fill, 1e-9))
+                srcs.append((f.tensor, ch))
+            # all-bitmap co-iteration streams packed words (§4.3)
+            all_m = bool(srcs) and all(ch == "m" for _, ch in srcs)
+            flens: List[float] = []
+            fprob = 1.0
+            sort_extra = 0.0
+            for t, ch in srcs:
+                fill = fills[t] if ch in "cbshm" else 1.0
+                flen = (max(dims[v] / 64.0, 1.0) if all_m
+                        else max(dims[v] * fill, 1e-9))
+                flens.append(flen)
+                if ch == "h":
+                    sort_extra += 2.0 * flen   # in-stream sort conversion
                 fprob *= fill
             lanes = (spec.lanes
                      if laned and pos.get(par_var, -1) <= pos[v] else 1)
@@ -255,6 +357,8 @@ def analytic_cost(assign: Assignment, fmt: Format, dims: Dict[str, int],
                 work = count * dims[v]         # broadcast result var
                 matches = dims[v]
             stages.append(work / lanes)
+            if sort_extra:
+                stages.append(count * sort_extra / lanes)
             count *= max(matches, 1e-9)
         stages.append(count / (spec.lanes if laned else 1))  # values/reduce
         result_est += count
@@ -363,8 +467,17 @@ def search(expr: Union[str, Assignment], fmt: Format, dims: Dict[str, int], *,
            device_count: Optional[int] = None,
            split_factors: Sequence[int] = SPLIT_FACTORS,
            max_orders: int = MAX_ORDERS,
-           mem_budget: Optional[int] = None) -> SearchReport:
+           mem_budget: Optional[int] = None,
+           format_choices: Optional[Sequence[str]] = None) -> SearchReport:
     """Search the schedule space; return candidates ranked best-first.
+
+    ``format_choices`` (e.g. ``autoschedule.FORMAT_CHOICES``) joins
+    per-tensor level formats into the space: every schedule point is
+    crossed with legal format overrides and ranked under them — both the
+    analytic prune and the sampled simulation run with the candidate's
+    ``spec.format(fmt)``. The winning overrides ride the report
+    (``report.best.spec.formats``); ``None`` keeps the historical
+    format-less space.
 
     Deterministic: the analytic prune sorts on (cost, spec key), the
     sampler inputs are either the caller's operands downsampled or seeded
@@ -385,7 +498,8 @@ def search(expr: Union[str, Assignment], fmt: Format, dims: Dict[str, int], *,
     densities = resolve_densities(assign, sparsity, arrays)
     specs = enumerate_space(assign, dims, device_count=device_count,
                             split_factors=split_factors,
-                            max_orders=max_orders)
+                            max_orders=max_orders, fmt=fmt,
+                            format_choices=format_choices)
     scored = sorted(
         (analytic_cost(assign, fmt, dims, s, densities), s.key(), s)
         for s in specs)
@@ -444,8 +558,8 @@ def search(expr: Union[str, Assignment], fmt: Format, dims: Dict[str, int], *,
         sch = spec.schedule()
         simulated += 1
         try:
-            cycles = _sampled_candidate_cycles(assign, fmt, spec, sch,
-                                               s_arrays, s_dims)
+            cycles = _sampled_candidate_cycles(assign, spec.format(fmt),
+                                               spec, sch, s_arrays, s_dims)
         except Exception:              # noqa: BLE001 - schedule can't lower:
             continue                   # drop it, keep searching the ranking
         candidates.append(Candidate(spec=spec, schedule=sch,

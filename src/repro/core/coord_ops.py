@@ -291,6 +291,55 @@ def accumulate_coo(acc_keys, acc_vals, keys, vals, key_bound=None,
     return np.asarray(uk[:n]), np.asarray(uv[:n])
 
 
+def convert_level(level, num_parents: int):
+    """Canonicalize ONE fibertree level to engine-native (seg, crd) storage.
+
+    The per-level half of the format-conversion path (DESIGN.md §13): the
+    compiled engine only scans dense and compressed levels, so hashed and
+    bitmap/bitvector levels are re-laid on ingest — without touching the
+    tensor's value array, because their backing storage already lists
+    children in canonical sorted order:
+
+      * ``hashed``            — the slot table is an iteration-order view
+                                over sorted (seg, crd) backing arrays;
+                                conversion just drops the view.
+      * ``bitmap``/``bitvector`` — packed words expand to (seg, crd) in
+                                ascending bit order (= popcount ref order).
+      * ``dense``/``compressed`` — already native; returned unchanged.
+
+    Non-unique (``singleton``) levels cannot convert level-locally — a
+    merged duplicate renumbers every descendant — so they raise here;
+    ``fibertree.canonical_tree`` routes such trees through the whole-tree
+    ``FiberTree.convert`` rebuild instead.
+    """
+    from .fibertree import (BITMAP, BITVECTOR, BV_WIDTH, COMPRESSED, DENSE,
+                            HASHED, SINGLETON, Level)
+    if level.format in (DENSE, COMPRESSED):
+        return level
+    if level.format == HASHED:
+        return Level(format=COMPRESSED, dim=level.dim, seg=level.seg,
+                     crd=level.crd)
+    if level.format in (BITVECTOR, BITMAP):
+        segs = [0]
+        crds: list = []
+        for p in range(int(num_parents)):
+            for wi, w in enumerate(level.words[p]):
+                w = int(w)
+                b = 0
+                while w >> b:
+                    if (w >> b) & 1:
+                        crds.append(wi * BV_WIDTH + b)
+                    b += 1
+            segs.append(len(crds))
+        return Level(format=COMPRESSED, dim=level.dim,
+                     seg=np.asarray(segs, dtype=np.int64),
+                     crd=np.asarray(crds, dtype=np.int64))
+    if level.format == SINGLETON:
+        raise ValueError("singleton levels convert tree-wide "
+                         "(FiberTree.convert), not level-locally")
+    raise ValueError(level.format)
+
+
 def sorted_segment_reduce(keys, vals, valid, cap: int):
     """Back-compat 3-tuple wrapper around ``keyed_union_reduce``."""
     uk, uv, out_valid, _ = keyed_union_reduce(keys, vals, valid, cap)

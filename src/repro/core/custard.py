@@ -34,6 +34,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 from . import graph as g
 from . import streams as st
 from .einsum import Access, Assignment, Term, parse
+from .fibertree import spec_of
 from .schedule import (Format, Schedule, build_inputs, split_assignment,
                        split_dims, split_format, split_schedule,
                        unsplit_result)
@@ -98,6 +99,30 @@ class Custard:
                                       for i in range(len(t.factors))})
             terms.append(st_)
 
+        # non-unique (COO/singleton) tensors: a tree-conversion node sits
+        # between the root and the tensor's scanners — the stored tree is
+        # rebuilt into canonical unique levels once, in-stream, before any
+        # scanner reads it (graph.py CONVERT, op="tree"); the node also
+        # exposes the converted top-level coordinate fiber on its "crd"
+        # port for wire-level observability
+        tree_cvt: Dict[str, g.Node] = {}
+        for ts_ in terms:
+            for i, f in enumerate(ts_.term.factors):
+                fstr = self.fmt.of(f.tensor, len(f.vars)) or ""
+                if all(spec_of(ch).unique for ch in fstr):
+                    continue
+                node = tree_cvt.get(f.tensor)
+                if node is None:
+                    node = G.add(
+                        g.CONVERT, f"{f.tensor}_cvt", tensor=f.tensor,
+                        op="tree", from_format=fstr,
+                        to_format="".join(
+                            ch if spec_of(ch).unique else "c"
+                            for ch in fstr))
+                    G.connect(root, "ref", node, "ref", st.REF)
+                    tree_cvt[f.tensor] = node
+                ts_.cur_ref[i] = (node, "ref")
+
         multi = len(terms) > 1
         union_crd: Dict[str, Port] = {}
 
@@ -116,19 +141,39 @@ class Custard:
                     # union across terms (handled after union)
                     per_term_bundle.append((ts, None, []))
                     continue
-                use_bv = v in self.s.bitvector
+                # word-packed co-iteration: explicit schedule opt-in, or
+                # automatic when EVERY scanned source stores this level as
+                # a bitmap ('m') — the §4.3 b-bits-per-cycle win without a
+                # schedule annotation
+                src_chars = [self._level_char(ts.term.factors[i], v)
+                             for i in sources]
+                use_bv = (v in self.s.bitvector
+                          or (bool(src_chars)
+                              and all(ch == "m" for ch in src_chars)))
                 scanned: List[Tuple[int, Port, Port]] = []  # (idx, crd, ref)
                 for i in sources:
                     f = ts.term.factors[i]
+                    mode = self.s.tensor_path(f.vars).index(v)
                     node = G.add(
                         g.LEVEL_SCAN, f"{f.tensor}_{v}",
-                        tensor=f.tensor,
-                        mode=self.s.tensor_path(f.vars).index(v),
+                        tensor=f.tensor, mode=mode,
                         var=v, bv=use_bv, **self._chunk(v))
                     src, port = ts.cur_ref[i]
                     G.connect(src, port, node, "ref", st.REF)
                     crd_port = (node, "bv" if use_bv else "crd")
-                    scanned.append((i, crd_port, (node, "ref")))
+                    ref_port: Port = (node, "ref")
+                    if not use_bv and not spec_of(
+                            self._level_char(f, v)).ordered:
+                        # unordered (hashed) level: an in-stream sort
+                        # conversion restores ascending coordinate order
+                        # before any downstream merge (op="sort")
+                        cvt = G.add(g.CONVERT, f"{f.tensor}_{v}_cvt",
+                                    tensor=f.tensor, var=v, mode=mode,
+                                    op="sort")
+                        G.connect(node, "crd", cvt, "crd", st.CRD)
+                        G.connect(node, "ref", cvt, "ref", st.REF)
+                        crd_port, ref_port = (cvt, "crd"), (cvt, "ref")
+                    scanned.append((i, crd_port, ref_port))
                 if len(scanned) >= 2:
                     inter = G.add(
                         g.INTERSECT, f"{v}_isect",
@@ -331,6 +376,12 @@ class Custard:
         if v == self.par_var:
             return {"chunk_n": self.par_n}
         return {}
+
+    def _level_char(self, f: Access, v: str) -> str:
+        """Storage-format letter of factor ``f``'s level at variable ``v``."""
+        fstr = self.fmt.of(f.tensor, len(f.vars)) or ""
+        k = self.s.tensor_path(f.vars).index(v)
+        return fstr[k] if k < len(fstr) else "c"
 
     def _place_cascade_droppers(self, ts: _TermState,
                                 stage_drops: List[str]) -> None:

@@ -39,11 +39,13 @@ LEVEL_WRITE = "level_write"
 CRD_DROP = "crd_drop"
 LOCATE = "locate"
 BV_CONVERT = "bv_convert"
+CONVERT = "convert"
 PARALLELIZE = "parallelize"
 SERIALIZE = "serialize"
 
 ALL_KINDS = (ROOT, LEVEL_SCAN, INTERSECT, UNION, REPEAT, ARRAY, ALU, REDUCE,
-             LEVEL_WRITE, CRD_DROP, LOCATE, BV_CONVERT, PARALLELIZE, SERIALIZE)
+             LEVEL_WRITE, CRD_DROP, LOCATE, BV_CONVERT, CONVERT, PARALLELIZE,
+             SERIALIZE)
 
 # Table-1 column order (paper §6.1)
 TABLE1_COLUMNS = ("level_scan", "repeat", "intersect", "union", "alu",
@@ -69,6 +71,10 @@ class Node:
     #  level_write: tensor, var or "vals", format
     #  crd_drop: outer var, inner ("<var>"|"vals"), outer_depth (static)
     #  locate: tensor, var, format
+    #  convert: tensor, op ("sort": re-order an unordered level's crd/ref
+    #           streams into ascending-coordinate order; "tree": rebuild a
+    #           non-unique tensor into canonical unique levels before its
+    #           scanners run), var+mode (sort), from_format/to_format (tree)
     params: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
     def __repr__(self) -> str:  # pragma: no cover - cosmetic

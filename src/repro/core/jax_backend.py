@@ -70,7 +70,7 @@ from . import coord_ops as co
 from . import graph as g
 from .custard import expr_cache_key, lower
 from .einsum import Assignment, parse
-from .fibertree import COMPRESSED, DENSE, FiberTree
+from .fibertree import BITVECTOR, COMPRESSED, DENSE, FiberTree, canonical_tree
 from .schedule import Format, Schedule
 
 try:  # moved to the jax namespace in newer releases
@@ -89,6 +89,24 @@ class JLevel:
     dim: int
 
 
+def _engine_tree(ft: FiberTree) -> FiberTree:
+    """Canonicalize a tensor for engine ingest.
+
+    The compiled kernels iterate (seg, crd) levels in ascending coordinate
+    order, so singleton/hashed/bitmap storage is converted to its d/c
+    canonical form here (bit-identical values; see
+    ``fibertree.canonical_tree``). The graph's CONVERT nodes then become
+    pass-throughs: the conversion they model in the token-level simulator
+    has already happened at the array level. Explicit ``b`` (bitvector)
+    storage stays simulator-only, as documented in fibertree.
+    """
+    for lv in ft.levels:
+        if lv.format == BITVECTOR:
+            raise NotImplementedError(
+                f"JAX backend supports d/c levels, not {lv.format}")
+    return canonical_tree(ft)
+
+
 @dataclasses.dataclass
 class JTensor:
     levels: List[JLevel]
@@ -96,6 +114,7 @@ class JTensor:
 
     @staticmethod
     def from_fibertree(ft: FiberTree) -> "JTensor":
+        ft = _engine_tree(ft)
         levels = []
         num_parents = 1
         for lv in ft.levels:
@@ -296,11 +315,18 @@ class JaxBackend:
             ref_valid = valid & (crd >= lo) & (crd < lo + csz)
         cs = CanonStream(var=node.params["var"], crd=crd, parent_idx=sid,
                          valid=valid, dim=lv.dim, parent=r.stream)
-        return {"crd": cs, "ref": RefStream(cs, ref, ref_valid)}
+        out = {"crd": cs, "ref": RefStream(cs, ref, ref_valid)}
+        if node.params.get("bv"):
+            # word-packed graphs label this edge "bv"; canonical execution
+            # publishes the same coordinate stream under both port names
+            out["bv"] = cs
+        return out
 
     def _intersect(self, node, ins):
         m = node.params.get("arity", 2)
-        crds: List[CanonStream] = [ins[f"crd{i}"] for i in range(m)]
+        crds: List[CanonStream] = [
+            ins[f"crd{i}"] if f"crd{i}" in ins else ins[f"bv{i}"]
+            for i in range(m)]
         refs: List[RefStream] = [ins[f"ref{i}"] for i in range(m)]
         base = crds[0]
         hit = base.valid
@@ -450,6 +476,13 @@ class JaxBackend:
     def _level_write(self, node, ins):
         return dict(ins)
 
+    def _convert(self, node, ins):
+        # format-conversion nodes are pass-throughs on the engine: operands
+        # were canonicalized to d/c order at ingest (``_engine_tree``), so
+        # the sort/tree reorderings they model are already applied. Ports
+        # forward unchanged (sort: crd+ref; tree: ref).
+        return dict(ins)
+
     def run_nodes(self) -> None:
         handlers = {
             g.ROOT: self._root, g.LEVEL_SCAN: self._level_scan,
@@ -457,6 +490,7 @@ class JaxBackend:
             g.REPEAT: self._repeat, g.ARRAY: self._array, g.ALU: self._alu,
             g.REDUCE: self._reduce, g.CRD_DROP: self._crd_drop,
             g.LOCATE: self._locate, g.LEVEL_WRITE: self._level_write,
+            g.CONVERT: self._convert,
         }
         for node in self.g.topo_order():
             outs = handlers[node.kind](node, self._ins(node))
@@ -793,6 +827,7 @@ class CompiledExpr:
         tensors = self.low.build_inputs(arrays)
         raw = {}
         for name, ft in tensors.items():
+            ft = _engine_tree(ft)   # s/h/m storage canonicalizes to d/c
             self._level_meta.setdefault(
                 name, [(lv.format, lv.dim) for lv in ft.levels])
             raw[name] = _raw_flat_of(ft)
@@ -1704,6 +1739,7 @@ class _FusedChain:
                                 {a.tensor: env[a.tensor] for a in accs})
             for name, ft in fts.items():
                 key = f"s{i}.{name}"
+                ft = _engine_tree(ft)
                 self._level_meta.setdefault(
                     key, [(lv.format, lv.dim) for lv in ft.levels])
                 raw[key] = _raw_flat_of(ft)

@@ -1,7 +1,8 @@
 """Custard's format and scheduling languages (paper §5, TACO input APIs).
 
 ``Format`` assigns each tensor a per-level storage format string (one char
-per mode: d/c/b). ``Schedule`` carries the dataflow (index-variable) order
+per mode: d/c/b/s/h/m; see ``fibertree.LEVEL_SPECS`` for the capability
+matrix). ``Schedule`` carries the dataflow (index-variable) order
 and the §4 optimizations: iterate-locate, coordinate skipping, bitvector
 iteration, iteration splitting, and parallelization.
 
@@ -25,7 +26,8 @@ from .fibertree import FiberTree
 @dataclasses.dataclass
 class Format:
     """Per-tensor level-format strings: one character per storage mode —
-    ``d`` (dense), ``c`` (compressed), ``b`` (bitvector). Tensors without
+    ``d`` (dense), ``c`` (compressed), ``b`` (bitvector), ``s``
+    (singleton/COO), ``h`` (hashed), ``m`` (bitmap). Tensors without
     an explicit entry use ``default`` at every level.
 
     >>> fmt = Format({"B": "dc"})          # CSR-like: dense rows, compressed cols

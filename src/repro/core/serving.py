@@ -390,12 +390,15 @@ class SamServer:
         tensors[assign.lhs.tensor] = len(assign.lhs.vars)
         for name, order in tensors.items():
             levels = fmt.of(name, order) or ""
-            bad = set(levels) - set("dc")
+            # s/h/m storage canonicalizes to d/c on engine ingest
+            # (jax_backend._engine_tree); only explicit bitvector 'b'
+            # levels remain simulator-only
+            bad = set(levels) - set("dcshm")
             if bad:
                 raise AdmissionError(
-                    f"{name}={levels}: the compiled engine serves d/c "
-                    f"level formats; {sorted(bad)} run on the simulator "
-                    f"only", reason="unsupported-format")
+                    f"{name}={levels}: the compiled engine serves "
+                    f"d/c/s/h/m level formats; {sorted(bad)} run on the "
+                    f"simulator only", reason="unsupported-format")
 
     def _resolve_engine(self, req: Request) -> Tuple[Any, _EngineEntry,
                                                      Dict[str, np.ndarray]]:

@@ -45,6 +45,71 @@ from . import streams as st
 from .fibertree import BV_WIDTH, COMPRESSED, DENSE, BITVECTOR, FiberTree, Level
 
 
+@dataclasses.dataclass(frozen=True)
+class HardwareConfig:
+    """Hardware attributes of the modeled SAM machine (the TeAAL move:
+    the cycle law becomes a function of the hardware point, turning the
+    simulator into a design-space explorer).
+
+    The defaults model the paper's idealized machine — one PE per block
+    pipeline, infinite-depth inter-block queues, infinite memory
+    bandwidth — under which every term below is inert and the law reduces
+    EXACTLY to the historical ``max(block work) + graph depth`` form
+    (pinned by tests/test_format_conformance.py's cycle-law regressions).
+
+    * ``pes``           — processing elements executing block work. With
+      fewer PEs than busy blocks the machine time-multiplexes them, so
+      the steady term is floored by ``ceil(total work / pes)`` (Brent's
+      bound ``max(T_inf, T_1/p)``). 0 = unbounded.
+    * ``buffer_depth``  — tokens per inter-block queue. Finite queues
+      back-pressure the pipeline once per ``buffer_depth`` tokens of the
+      bottleneck block (one refill bubble each), adding
+      ``steady // buffer_depth`` cycles. 0 = unbounded.
+    * ``mem_bandwidth`` — memory tokens per cycle sustained by the
+      tensor-storage side. Memory traffic is the work of the blocks that
+      touch stored tensors (level scanners + value arrays); the steady
+      term is floored by ``ceil(traffic / mem_bandwidth)``. 0 = unbounded.
+    """
+
+    pes: int = 0
+    buffer_depth: int = 0
+    mem_bandwidth: float = 0.0
+    name: str = "paper"
+
+
+HW_PRESETS = {
+    "paper": HardwareConfig(),
+    "pe8": HardwareConfig(pes=8, name="pe8"),
+    "pe16": HardwareConfig(pes=16, name="pe16"),
+    "bw4": HardwareConfig(mem_bandwidth=4.0, name="bw4"),
+    "bw16": HardwareConfig(mem_bandwidth=16.0, name="bw16"),
+    "edge": HardwareConfig(pes=4, mem_bandwidth=2.0, buffer_depth=64,
+                           name="edge"),
+}
+
+
+def _hw_steady(hw: HardwareConfig, steady: int, total: int, mem: int) -> int:
+    """Apply the hardware floors to a pipeline's steady-state term."""
+    s = int(steady)
+    if hw.pes > 0:
+        s = max(s, -(-int(total) // hw.pes))
+    if hw.mem_bandwidth > 0:
+        s = max(s, int(np.ceil(mem / hw.mem_bandwidth)))
+    return s
+
+
+def _hw_stall(hw: HardwareConfig, steady: int) -> int:
+    """Back-pressure bubbles of finite inter-block queues."""
+    return int(steady) // hw.buffer_depth if hw.buffer_depth > 0 else 0
+
+
+def _sim_mem_tokens(res: "SimResult") -> int:
+    """Memory traffic of one simulated graph: tokens moved by the blocks
+    that read stored tensors (level scanners + value arrays)."""
+    return sum(w for nid, w in res.work.items()
+               if res.graph.nodes[nid].kind in (g.ARRAY, g.LEVEL_SCAN))
+
+
 @dataclasses.dataclass
 class SimResult:
     outputs: Dict[str, FiberTree]
@@ -153,11 +218,14 @@ class Simulator:
 
     def __init__(self, graph_: g.Graph, tensors: Dict[str, FiberTree],
                  lane: Optional[int] = None,
-                 inject: Optional[Dict[Tuple[int, str], Any]] = None):
+                 inject: Optional[Dict[Tuple[int, str], Any]] = None,
+                 hw: Optional[HardwareConfig] = None):
         self.g = graph_
-        self.tensors = tensors
+        # copied: tree-conversion nodes rebind their tensor in-run
+        self.tensors = dict(tensors)
         self.lane = lane
         self.inject = dict(inject or {})
+        self.hw = hw or HardwareConfig()
         self.env: Dict[Tuple[int, str], Any] = {}
         self.work: Dict[int, int] = {}
 
@@ -561,7 +629,9 @@ class Simulator:
                 if level.format == DENSE:
                     out.append(int(base) * level.dim + int(c))
                 else:
-                    crds, refs = level.fiber(int(base))
+                    # canonical sorted view: a hashed level probes its
+                    # backing table, not its slot-iteration order
+                    crds, refs = level.sorted_fiber(int(base))
                     k = int(np.searchsorted(crds, c))
                     if k < len(crds) and crds[k] == c:
                         out.append(int(refs[k]))
@@ -597,6 +667,52 @@ class Simulator:
         depth = st.nested_depth(ins["crd"]) - 1
         return {"bv": st.map_fibers(conv, ins["crd"], depth=depth)}, total[0]
 
+    def _eval_convert(self, node, ins):
+        """Format-conversion node (graph.py CONVERT).
+
+        ``op="tree"``: rebuild a non-unique (COO/singleton) tensor into
+        canonical unique levels before its scanners run — the node sits
+        between the root and the tensor's first scanner, so by topological
+        order the rebind below happens before any scan. Work models one
+        read + one write of every stored entry. The converted top-level
+        coordinate fiber is exposed on "crd" for wire observability.
+
+        ``op="sort"``: re-order each (crd, ref) fiber of an unordered
+        (hashed) level's scanner output into ascending-coordinate order.
+        Work is input + output tokens of both streams.
+        """
+        if node.params.get("op") == "tree":
+            t = node.params["tensor"]
+            conv = self.tensors[t].convert(node.params["to_format"],
+                                           merge_duplicates=True)
+            self.tensors[t] = conv
+            entries = conv.nnz + sum(lv.nnz for lv in conv.levels
+                                     if lv.format != DENSE)
+            if conv.levels:
+                top, _ = conv.levels[0].fiber(0)
+                top_crd = [int(c) for c in top]
+            else:
+                top_crd = []
+            return ({"ref": ins["ref"], "crd": top_crd}, 2 * entries + 1)
+
+        crds, refs = ins["crd"], ins["ref"]
+        depth = st.nested_depth(crds) - 1
+        total = [0]
+
+        def srt(cf, rf):
+            total[0] += 2 * (len(cf) + 1)
+            order = sorted(range(len(cf)), key=lambda k: cf[k])
+            return ([cf[k] for k in order], [rf[k] for k in order])
+
+        merged = st.map_fibers(srt, crds, refs, depth=depth)
+
+        def pick(x, i):
+            if isinstance(x, tuple):
+                return x[i]
+            return [pick(c, i) for c in x]
+
+        return {"crd": pick(merged, 0), "ref": pick(merged, 1)}, total[0]
+
     def _eval_level_write(self, node, ins):
         key = "val" if "val" in ins else "crd"
         stream = ins[key]
@@ -617,6 +733,7 @@ class Simulator:
             g.ALU: self._eval_alu, g.REDUCE: self._eval_reduce,
             g.CRD_DROP: self._eval_crd_drop, g.LOCATE: self._eval_locate,
             g.BV_CONVERT: self._eval_bv_convert,
+            g.CONVERT: self._eval_convert,
             g.LEVEL_WRITE: self._eval_level_write,
             g.PARALLELIZE: self._eval_parallelize,
             g.SERIALIZE: self._eval_serialize,
@@ -651,7 +768,11 @@ class Simulator:
                                             self.work[node.id] + 2)
 
         outputs = self._assemble_outputs()
-        cycles = max(self.work.values(), default=1) + self.g.depth()
+        steady = max(self.work.values(), default=1)
+        mem = sum(w for nid, w in self.work.items()
+                  if self.g.nodes[nid].kind in (g.ARRAY, g.LEVEL_SCAN))
+        steady = _hw_steady(self.hw, steady, sum(self.work.values()), mem)
+        cycles = steady + self.g.depth() + _hw_stall(self.hw, steady)
         return SimResult(outputs=outputs, work=self.work, cycles=cycles,
                          edge_streams=self.env, graph=self.g)
 
@@ -815,9 +936,16 @@ def sampled_cycles(expr, fmt, schedule, arrays, dims, *,
 
 
 def simulate_expr(expr, fmt, schedule, arrays, dims, *,
-                  workers: int = 1) -> ExprSimResult:
+                  workers: int = 1,
+                  hw: Optional[HardwareConfig] = None) -> ExprSimResult:
     """Lower (split + parallelize + tile) and simulate an expression
     end-to-end.
+
+    ``hw`` selects a ``HardwareConfig`` point: finite PE counts, queue
+    depths, and memory bandwidth floor/stretch the steady-state term as
+    described on ``HardwareConfig``. The default point reproduces the
+    paper's idealized machine — and therefore the historical cycle law —
+    exactly.
 
     Serial schedules run the combined multi-term graph exactly as
     ``simulate`` always has. Parallel schedules run every (term, lane)
@@ -853,19 +981,26 @@ def simulate_expr(expr, fmt, schedule, arrays, dims, *,
     ...                      workers=3)
     >>> dist.dense.tolist(), dist.workers, dist.cycles <= tiled.cycles
     ([3.0, 3.0], 3, True)
+    >>> slow = simulate_expr("x(i) = B(i,j) * c(j)", Format({"B": "cc"}),
+    ...                      Schedule(loop_order=("i", "j")),
+    ...                      {"B": B, "c": np.ones(3)}, {"i": 2, "j": 3},
+    ...                      hw=HardwareConfig(mem_bandwidth=0.25))
+    >>> slow.dense.tolist() == res.dense.tolist(), slow.cycles > res.cycles
+    (True, True)
     """
     from .custard import lower
 
+    hw = hw or HardwareConfig()
     if getattr(schedule, "tile", None):
         return _simulate_tiled(expr, fmt, schedule, arrays, dims,
-                               workers=workers)
+                               workers=workers, hw=hw)
 
     low = lower(expr, fmt, schedule, dims)
     tensors = low.build_inputs(arrays)
     out_name = low.assign.lhs.tensor
 
     if low.par_n <= 1 and low.graph is not None:
-        res = Simulator(low.graph, tensors).run()
+        res = Simulator(low.graph, tensors, hw=hw).run()
         # a single-term graph carries no sign (signs live outside the graph
         # on every execution path); multi-term graphs fold signs internally
         sign = low.terms[0].sign if len(low.terms) == 1 else 1
@@ -894,14 +1029,19 @@ def simulate_expr(expr, fmt, schedule, arrays, dims, *,
 
     steady = max((max(ls.result.work.values(), default=1) for ls in lanes),
                  default=1)
+    steady = _hw_steady(
+        hw, steady,
+        sum(sum(ls.result.work.values()) for ls in lanes),
+        sum(_sim_mem_tokens(ls.result) for ls in lanes))
     fill = max((ls.result.graph.depth() for ls in lanes), default=0) + 1
-    cycles = max(steady, merge_work) + fill
+    cycles = max(steady, merge_work) + fill + _hw_stall(hw, steady)
     return ExprSimResult(dense=dense, cycles=cycles, lanes=lanes,
                          merge_work=merge_work)
 
 
 def _simulate_tiled(expr, fmt, schedule, arrays, dims,
-                    workers: int = 1) -> ExprSimResult:
+                    workers: int = 1,
+                    hw: Optional[HardwareConfig] = None) -> ExprSimResult:
     """Simulate a ``Schedule.tile`` schedule: one inner simulation per
     coordinate tile, combined under the streaming law.
 
@@ -923,10 +1063,11 @@ def _simulate_tiled(expr, fmt, schedule, arrays, dims,
     from .einsum import parse
 
     assign = parse(expr) if isinstance(expr, str) else expr
+    hw = hw or HardwareConfig()
     tile = tiling.normalize_tile(schedule)
     inner = dataclasses.replace(schedule, tile={})
     if not tile:
-        return simulate_expr(assign, fmt, inner, arrays, dims)
+        return simulate_expr(assign, fmt, inner, arrays, dims, hw=hw)
     tiling.check_tile(assign, tile, schedule=schedule)
     ext = tiling.tile_extents(dims, tile)
     lhs_vars = assign.lhs.vars
@@ -966,7 +1107,11 @@ def _simulate_tiled(expr, fmt, schedule, arrays, dims,
                 out[tuple(idx)] += d
         else:
             out = out + res.dense
-    cycles = max(max(per_worker), merge_work) + fill
+    steady = _hw_steady(
+        hw, max(per_worker),
+        sum(sum(ls.result.work.values()) for ls in lanes),
+        sum(_sim_mem_tokens(ls.result) for ls in lanes))
+    cycles = max(steady, merge_work) + fill + _hw_stall(hw, steady)
     return ExprSimResult(dense=out if lhs_vars else np.asarray(out),
                          cycles=cycles, lanes=lanes, merge_work=merge_work,
                          tiles=tiling.n_tiles(tile),

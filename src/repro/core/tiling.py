@@ -111,16 +111,19 @@ def _densities(assign: Assignment, densities) -> Dict[str, float]:
 def _level_fills(assign: Assignment, fmt: Format,
                  densities: Dict[str, float]) -> Dict[str, float]:
     """Per-level fill of each tensor: a tensor of density ``p`` with ``m``
-    compressed/bitvector levels contributes ``p**(1/m)`` per such level
-    (the same uniform-independence model as ``autoschedule.analytic_cost``,
-    so the budget gate and the cost model agree about sizes)."""
+    sparse (compressed/bitvector/singleton/hashed/bitmap) levels
+    contributes ``p**(1/m)`` per such level (the same
+    uniform-independence model as ``autoschedule.analytic_cost``, so the
+    budget gate and the cost model agree about sizes; s/h/m storage
+    canonicalizes to ``c`` on engine ingest, so compressed estimates are
+    the right device-side sizes for them too)."""
     fills = {}
     for term in assign.terms:
         for acc in term.factors:
             if acc.tensor in fills:
                 continue
             s = fmt.of(acc.tensor, len(acc.vars))
-            m = sum(1 for ch in s if ch in "cb")
+            m = sum(1 for ch in s if ch in "cbshm")
             p = densities[acc.tensor]
             fills[acc.tensor] = p ** (1.0 / m) if m else 1.0
     return fills
@@ -174,7 +177,7 @@ def estimate_call_bytes(assign, fmt: Format, schedule: Schedule,
             cnt, fill = 1.0, fills[acc.tensor]
             for v, ch in zip(path, s):
                 total += 4 * (cnt + 1)                      # seg (int32)
-                cnt *= dims[v] * (fill if ch in "cb" else 1.0)
+                cnt *= dims[v] * (fill if ch in "cbshm" else 1.0)
                 cnt = max(cnt, 1.0)
                 total += 4 * cnt                            # crd (int32)
             total += 4 * cnt                                # vals (f32)
@@ -194,7 +197,7 @@ def estimate_call_bytes(assign, fmt: Format, schedule: Schedule,
                 s = fmt.of(f.tensor, len(f.vars))
                 path = tuple(sorted(f.vars, key=lambda w: pos.get(w, 0)))
                 ch = s[path.index(v)] if path.index(v) < len(s) else "c"
-                fill = fills[f.tensor] if ch in "cb" else 1.0
+                fill = fills[f.tensor] if ch in "cbshm" else 1.0
                 flens.append(max(dims[v] * fill, 1.0))
                 fprob *= fill
             if flens:

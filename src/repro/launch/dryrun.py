@@ -15,6 +15,16 @@ or ``--all`` for the full 40-cell x 2-mesh matrix. For each cell this
 prints ``compiled.memory_analysis()`` (proves the state fits per-device
 HBM) and ``compiled.cost_analysis()`` (FLOPs/bytes for §Roofline), and —
 with ``--json`` — records collective bytes parsed from the optimized HLO.
+
+``--sam`` switches to the SAM dry-run: every uniform per-tensor level
+format drawn from ``autoschedule.FORMAT_CHOICES`` is lowered through
+Custard AND compiled/executed on the JAX engine at the given dims,
+proving the (format x schedule) cell runs end-to-end before a real
+sweep; each cell also records modeled cycles under every
+``simulator.HW_PRESETS`` hardware model::
+
+    PYTHONPATH=src python -m repro.launch.dryrun \
+        --sam "x(i) = B(i,j) * c(j)" --sam-dims i=32,j=32 --json sam.json
 """
 import argparse
 import json
@@ -139,8 +149,63 @@ def run_cell(arch, shape_name, *, multi_pod=False, remat="dots", n_micro=1,
     return meta
 
 
+def sam_dryrun(args) -> None:
+    """Lower + engine-compile every SAM format cell; modeled cycles per
+    hardware preset ride each record (incremental, crash-safe JSON)."""
+    from ..core.autoschedule import (_format_combos, FORMAT_CHOICES,
+                                     resolve_densities, synthetic_operands)
+    from ..core.einsum import parse
+    from ..core.jax_backend import execute_expr
+    from ..core.schedule import Format, Schedule
+    from ..core.simulator import HW_PRESETS, simulate_expr
+
+    def parse_kv(text, cast=int):
+        return {k: cast(v) for k, v in
+                (item.split("=") for item in text.split(","))} if text else {}
+
+    dims = parse_kv(args.sam_dims)
+    base = Format(parse_kv(args.sam_formats, cast=str))
+    assign = parse(args.sam)
+    densities = resolve_densities(assign, args.sam_density)
+    arrays = synthetic_operands(assign, dims, densities)
+    sch = Schedule(loop_order=tuple(assign.all_vars))
+    results, failures = [], []
+    for combo in _format_combos(assign, base, FORMAT_CHOICES):
+        fmt = Format({**base.formats, **dict(combo)}, default=base.default)
+        cell = {"expr": args.sam, "formats": dict(combo) or "baseline"}
+        t0 = time.time()
+        try:
+            got = execute_expr(assign, fmt, sch, arrays, dims).to_dense()
+            cell["engine_nnz"] = int(np.count_nonzero(got))
+            cell["cycles"] = {
+                hw: int(simulate_expr(assign, fmt, sch, arrays, dims,
+                                      hw=cfg).cycles)
+                for hw, cfg in sorted(HW_PRESETS.items())}
+            cell["compile_s"] = time.time() - t0
+            print(f"[sam-dryrun] {cell['formats']}: OK "
+                  f"cycles={cell['cycles']}", flush=True)
+        except Exception as e:  # noqa: BLE001 - report and continue
+            traceback.print_exc()
+            cell["error"] = str(e)
+            failures.append((cell["formats"], str(e)))
+        results.append(cell)
+        if args.json:
+            with open(args.json + ".tmp", "w") as f:
+                json.dump(results, f, indent=1)
+            os.replace(args.json + ".tmp", args.json)
+    if failures:
+        print(f"[sam-dryrun] {len(failures)} FAILURES: {failures}")
+        sys.exit(1)
+    print(f"[sam-dryrun] all {len(results)} format cells OK")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
+    ap.add_argument("--sam", default=None,
+                    help="SAM einsum: dry-run every level-format cell")
+    ap.add_argument("--sam-dims", default="")
+    ap.add_argument("--sam-formats", default="")
+    ap.add_argument("--sam-density", type=float, default=0.1)
     ap.add_argument("--arch", choices=list_archs())
     ap.add_argument("--shape", choices=sorted(SHAPES))
     ap.add_argument("--all", action="store_true")
@@ -152,6 +217,10 @@ def main(argv=None):
     ap.add_argument("--compress-grads", action="store_true")
     ap.add_argument("--json", default=None)
     args = ap.parse_args(argv)
+
+    if args.sam:
+        sam_dryrun(args)
+        return
 
     cells = []
     if args.all:

@@ -6,14 +6,61 @@ os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
 single-pod 16x16 mesh, trip-count-corrected via layer probes.
 
     PYTHONPATH=src python -m repro.launch.roofline_sweep --json roofline.json
+
+``--sam`` switches to the SAM (format x schedule x hardware) sweep: the
+autoscheduler searches the joint format+schedule space once, then every
+surviving candidate is re-costed under every ``simulator.HW_PRESETS``
+hardware model (or ``--hw pe8,bw4``) — one command produces the full
+modeled-cycles grid, written incrementally to ``--json``:
+
+    PYTHONPATH=src python -m repro.launch.roofline_sweep \
+        --sam "X(i,j) = B(i,j) * C(i,j)" --sam-dims i=128,j=128 \
+        --sam-density 0.25 --json sam_roofline.json
 """
 import argparse
 import json
 import time
 import traceback
 
-from ..configs import SHAPES, get_config, list_archs, supports_shape
-from ..roofline.probe import probe_cell
+
+def _parse_kv(text, cast=int):
+    return {k: cast(v) for k, v in
+            (item.split("=") for item in text.split(","))} if text else {}
+
+
+def sam_sweep(args) -> None:
+    """(format x schedule x hardware) sweep over the SAM cost model."""
+    from ..core.autoschedule import (FORMAT_CHOICES, resolve_densities,
+                                     search, synthetic_operands)
+    from ..core.einsum import parse
+    from ..core.schedule import Format
+    from ..core.simulator import HW_PRESETS, simulate_expr
+
+    dims = _parse_kv(args.sam_dims)
+    fmt = Format(_parse_kv(args.sam_formats, cast=str))
+    assign = parse(args.sam)
+    densities = resolve_densities(assign, args.sam_density)
+    arrays = synthetic_operands(assign, dims, densities)
+    hw_names = args.hw.split(",") if args.hw else sorted(HW_PRESETS)
+    rep = search(assign, fmt, dims, arrays=arrays, device_count=1,
+                 top_k=args.top_k, format_choices=FORMAT_CHOICES)
+    results = []
+    for cand in rep.candidates:
+        cfmt = cand.spec.format(fmt)
+        for hw in hw_names:
+            t0 = time.time()
+            res = simulate_expr(assign, cfmt, cand.schedule, arrays, dims,
+                                hw=HW_PRESETS[hw])
+            results.append({
+                "expr": args.sam, "schedule": cand.spec.key(),
+                "formats": dict(cand.spec.formats), "hw": hw,
+                "cycles": int(res.cycles), "sweep_s": time.time() - t0})
+            print(f"[sam-roofline] {cand.spec.key()} x {hw}: "
+                  f"{res.cycles} cycles", flush=True)
+            with open(args.json + ".tmp", "w") as f:
+                json.dump(results, f, indent=1)
+            os.replace(args.json + ".tmp", args.json)
+    print(f"[sam-roofline] wrote {len(results)} cells to {args.json}")
 
 
 def main(argv=None):
@@ -22,7 +69,24 @@ def main(argv=None):
     ap.add_argument("--remat", default="dots")
     ap.add_argument("--arch", default=None)
     ap.add_argument("--shape", default=None)
+    ap.add_argument("--sam", default=None,
+                    help="SAM einsum: sweep (format x schedule x hardware)")
+    ap.add_argument("--sam-dims", default="",
+                    help="index extents, e.g. i=128,j=128")
+    ap.add_argument("--sam-formats", default="",
+                    help="baseline formats, e.g. B=cc,C=cc")
+    ap.add_argument("--sam-density", type=float, default=0.1)
+    ap.add_argument("--hw", default=None,
+                    help="comma-joined simulator.HW_PRESETS names (default all)")
+    ap.add_argument("--top-k", type=int, default=8)
     args = ap.parse_args(argv)
+
+    if args.sam:
+        sam_sweep(args)
+        return
+
+    from ..configs import SHAPES, get_config, list_archs, supports_shape
+    from ..roofline.probe import probe_cell
 
     results = []
     archs = [args.arch] if args.arch else list_archs()

@@ -1,0 +1,347 @@
+"""Format-conformance property suite (level-format interface).
+
+The pluggable level-format interface (``fibertree.LEVEL_SPECS``) adds
+singleton/COO (``s``), hashed (``h``) and bitmap (``m``) storage beside
+the seed's d/c/b. This module locks the interface down three ways:
+
+* **semantics** — random einsums x ALL format combinations x loop
+  orders produce identical results in the token-level simulator, the
+  compiled JAX engine, and the numpy oracle (including empty operands);
+* **capabilities** — the flag matrix is what legality decisions read:
+  duplicate coordinates are rejected exactly when every level is
+  ``unique``, hashed iteration is unordered-but-complete, the
+  autoscheduler only enumerates ``iterate``-capable formats;
+* **conversion** — ``FiberTree.convert`` round trips (c -> COO -> c)
+  are bit-identical, and the hardware-parameterized cycle law
+  (``simulator.HardwareConfig``) reproduces the unparameterized law
+  exactly at its default (regression-pinned literal cycle counts below).
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.autoschedule import (FORMAT_CHOICES, CandidateSpec,
+                                     enumerate_space, search)
+from repro.core.einsum import parse
+from repro.core.fibertree import (BV_WIDTH, FiberTree, canonical_formats,
+                                  canonical_tree, spec_of)
+from repro.core.jax_backend import execute_expr
+from repro.core.schedule import Format, Schedule
+from repro.core.simulator import (HW_PRESETS, HardwareConfig, simulate_expr)
+
+DIMS = {"i": 6, "j": 7}
+CHARS = "dcshm"          # every engine-executable level format
+
+
+def rand(shape, seed, density=0.4):
+    rng = np.random.default_rng(seed)
+    return ((rng.random(shape) < density)
+            * rng.integers(1, 5, shape)).astype(float)
+
+
+def _check(expr, fmts, order, arrays, dims, *, engine=True):
+    """simulator == engine == numpy for one (expr, formats, order) cell."""
+    fmt = Format(dict(fmts))
+    sch = Schedule(loop_order=tuple(order))
+    assign = parse(expr)
+    spec = (",".join("".join(a.vars) for t in assign.terms
+                     for a in t.factors)
+            + "->" + "".join(assign.lhs.vars))
+    ops = [arrays[a.tensor] for t in assign.terms for a in t.factors]
+    want = np.einsum(spec, *ops)
+    sim = simulate_expr(expr, fmt, sch, arrays, dims)
+    np.testing.assert_allclose(sim.dense, want,
+                               err_msg=f"sim: {expr} {fmts} {order}")
+    if engine:
+        got = execute_expr(expr, fmt, sch, arrays, dims).to_dense()
+        np.testing.assert_allclose(got, want,
+                                   err_msg=f"engine: {expr} {fmts} {order}")
+
+
+# ---------------------------------------------------------------------------
+# random einsums x all formats x loop orders
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("ch", CHARS)
+@pytest.mark.parametrize("order", [("i", "j"), ("j", "i")])
+def test_matvec_uniform_formats_both_orders(ch, order):
+    arrays = {"B": rand((6, 7), 1), "c": rand((7,), 2)}
+    _check("x(i) = B(i,j) * c(j)", {"B": ch * 2, "c": ch}, order,
+           arrays, DIMS)
+
+
+@pytest.mark.parametrize("bf,cf", [
+    ("mm", "mm"), ("sh", "hs"), ("ss", "cc"), ("hh", "mm"),
+    ("dm", "sc"), ("cs", "hd"),
+])
+def test_elementwise_mixed_formats(bf, cf):
+    arrays = {"B": rand((6, 7), 3), "C": rand((6, 7), 4)}
+    _check("X(i,j) = B(i,j) * C(i,j)",
+           {"B": bf, "C": cf, "X": "cc"}, ("i", "j"), arrays, DIMS)
+
+
+RANDOM_POOL = [
+    ("x(i) = B(i,j) * c(j)", {"B": (6, 7), "c": (7,)}, {"i": 6, "j": 7}),
+    ("X(i,j) = B(i,j) * C(i,j)", {"B": (6, 7), "C": (6, 7)},
+     {"i": 6, "j": 7}),
+    ("s = b(i) * c(i)", {"b": (7,), "c": (7,)}, {"i": 7}),
+]
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_random_einsum_random_formats(seed):
+    """Property: a random (expression, per-level format, order) draw is
+    exact against numpy on both backends."""
+    rng = np.random.default_rng(100 + seed)
+    expr, shapes, dims = RANDOM_POOL[int(rng.integers(len(RANDOM_POOL)))]
+    fmts = {t: "".join(rng.choice(list(CHARS), size=len(sh)))
+            for t, sh in shapes.items()}
+    order = tuple(rng.permutation(sorted(dims)))
+    arrays = {t: rand(sh, int(rng.integers(1 << 30)))
+              for t, sh in shapes.items()}
+    _check(expr, fmts, order, arrays, dims)
+
+
+@pytest.mark.parametrize("ch", CHARS)
+def test_empty_operands(ch):
+    """All-zero operands flow through every format as empty fibers."""
+    arrays = {"B": np.zeros((6, 7)), "c": np.zeros(7)}
+    _check("x(i) = B(i,j) * c(j)", {"B": ch * 2, "c": ch}, ("i", "j"),
+           arrays, DIMS)
+
+
+def test_split_schedule_with_new_formats():
+    arrays = {"B": rand((8, 8), 7), "C": rand((8, 8), 8)}
+    _check("X(i,j) = B(i,j) * C(i,j)", {"B": "mm", "C": "ss", "X": "cc"},
+           ("i", "j"), arrays, {"i": 8, "j": 8})
+    fmt = Format({"B": "mm", "C": "ss", "X": "cc"})
+    sch = Schedule(loop_order=("i", "j"), split={"i": 2})
+    want = arrays["B"] * arrays["C"]
+    sim = simulate_expr("X(i,j) = B(i,j) * C(i,j)", fmt, sch, arrays,
+                        {"i": 8, "j": 8})
+    np.testing.assert_allclose(sim.dense, want)
+    got = execute_expr("X(i,j) = B(i,j) * C(i,j)", fmt, sch, arrays,
+                       {"i": 8, "j": 8}).to_dense()
+    np.testing.assert_allclose(got, want)
+
+
+# ---------------------------------------------------------------------------
+# capability flags drive the rules
+# ---------------------------------------------------------------------------
+
+def test_capability_matrix():
+    assert spec_of("s").unique is False and spec_of("s").ordered is True
+    assert spec_of("h").ordered is False and spec_of("h").locate is True
+    assert spec_of("m").ordered and spec_of("m").unique
+    assert all(spec_of(ch).iterate for ch in CHARS + "b")
+
+
+def test_duplicate_coords_rejected_by_unique_levels():
+    coords = np.array([[1, 1], [1, 1], [0, 2]])
+    vals = np.array([1.0, 2.0, 4.0])
+    for fmts in ("cc", "dc", "hh", "mm", "dm"):
+        with pytest.raises(ValueError, match="duplicate coordinates"):
+            FiberTree.from_coords((3, 3), coords, vals, fmts)
+    # a non-unique (singleton) level keeps the fork; to_dense accumulates
+    coo = FiberTree.from_coords((3, 3), coords, vals, "ss")
+    assert coo.nnz == 3
+    dense = coo.to_dense()
+    assert dense[1, 1] == 3.0 and dense[0, 2] == 4.0
+
+
+def test_hashed_iteration_unordered_but_complete():
+    ft = FiberTree.from_dense(rand((1, 16), 11, density=0.6)[0], "h")
+    crds, _ = ft.levels[0].fiber(0)
+    scrds, _ = ft.levels[0].sorted_fiber(0)
+    assert sorted(crds.tolist()) == scrds.tolist()
+    assert list(scrds) == sorted(set(scrds))
+
+
+def test_autoscheduler_enumerates_only_iterable_formats():
+    specs = enumerate_space(parse("x(i) = B(i,j) * c(j)"),
+                            {"i": 8, "j": 8}, device_count=1,
+                            fmt=Format({}), format_choices=FORMAT_CHOICES)
+    combos = {s.formats for s in specs}
+    assert len(combos) == 16          # {c,m,h,s}^2, baseline included
+    for combo in combos:
+        for _, s in combo:
+            assert all(spec_of(ch).iterate for ch in s)
+    # formats ride the spec key (cache/tie-break identity)
+    keyed = CandidateSpec(order=("i", "j"), formats=(("B", "mm"),))
+    assert "fmt=B:mm" in keyed.key()
+    base = CandidateSpec(order=("i", "j"))
+    assert "fmt=" not in base.key()
+
+
+def test_format_search_beats_dc_space():
+    """The joint (format x schedule) search finds a strictly cheaper
+    modeled plan than the d/c-only space on a bitmap-friendly operand."""
+    arrays = {"B": rand((64, 64), 21, density=0.25),
+              "C": rand((64, 64), 22, density=0.25)}
+    fmt = Format({"B": "cc", "C": "cc", "X": "cc"})
+    dims = {"i": 64, "j": 64}
+    plain = search("X(i,j) = B(i,j) * C(i,j)", fmt, dims, arrays=arrays,
+                   device_count=1)
+    joint = search("X(i,j) = B(i,j) * C(i,j)", fmt, dims, arrays=arrays,
+                   device_count=1, format_choices=FORMAT_CHOICES)
+    assert joint.best.cycles < plain.best.cycles
+    assert joint.best.spec.formats      # a non-baseline format won
+
+
+# ---------------------------------------------------------------------------
+# conversion round trips
+# ---------------------------------------------------------------------------
+
+def test_c_coo_c_round_trip_bit_identical():
+    ft = FiberTree.from_dense(rand((6, 7), 31), "cc")
+    back = ft.convert("ss").convert("cc")
+    for lv, lv2 in zip(ft.levels, back.levels):
+        assert np.array_equal(lv.seg, lv2.seg)
+        assert np.array_equal(lv.crd, lv2.crd)
+    assert np.array_equal(ft.vals, back.vals)
+
+
+@pytest.mark.parametrize("via", ["hh", "mm", "sh", "ms"])
+def test_round_trip_through_every_format(via):
+    ft = FiberTree.from_dense(rand((6, 7), 32), "cc")
+    back = ft.convert(via).convert("cc")
+    np.testing.assert_array_equal(ft.to_dense(), back.to_dense())
+    # conversion lexsorts rebuilt coordinates, so even round trips
+    # through unordered (hashed) levels restore the exact value array
+    assert np.array_equal(ft.vals, back.vals)
+
+
+def test_canonical_tree_engine_form():
+    ft = FiberTree.from_dense(rand((6, 7), 33), "hm")
+    canon = canonical_tree(ft)
+    assert canonical_formats(canon) == "cc"
+    np.testing.assert_array_equal(canon.to_dense(), ft.to_dense())
+    # unique-level-only trees canonicalize WITHOUT touching values
+    assert np.array_equal(canon.vals, ft.vals)
+
+
+def test_bitmap_word_packing():
+    ft = FiberTree.from_dense(rand((70,), 34), "m")
+    lv = ft.levels[0]
+    assert lv.words is not None and lv.words.shape[1] == -(-70 // BV_WIDTH)
+    crds, _ = lv.fiber(0)
+    assert list(crds) == sorted(crds)
+
+
+# ---------------------------------------------------------------------------
+# hardware-parameterized cycle law (HardwareConfig)
+# ---------------------------------------------------------------------------
+
+# Fresh literal pins: the default ("paper") HardwareConfig must reproduce
+# the unparameterized cycle law exactly — these literals were measured at
+# the introduction of HardwareConfig and lock the law against drift.
+CYCLE_PINS = [
+    ("x(i) = B(i,j) * c(j)", {"B": "cc", "c": "c"}, ("i", "j"), 45),
+    ("x(i) = B(i,j) * c(j)", {"B": "dc", "c": "c"}, ("j", "i"), 22),
+    ("X(i,j) = B(i,j) * C(i,j)", {"B": "cc", "C": "cc", "X": "cc"},
+     ("i", "j"), 34),
+    ("X(i,j) = B(i,j) * C(i,j)", {"B": "mm", "C": "mm", "X": "cc"},
+     ("i", "j"), 20),
+]
+
+
+@pytest.mark.parametrize("expr,fmts,order,pinned", CYCLE_PINS,
+                         ids=[f"pin{i}" for i in range(len(CYCLE_PINS))])
+def test_default_hardware_reproduces_pinned_cycles(expr, fmts, order,
+                                                   pinned):
+    arrays = {"B": rand((6, 7), 1), "c": rand((7,), 2),
+              "C": rand((6, 7), 4)}
+    arrays = {t: arrays[t] for t in fmts if t in arrays}
+    fmt = Format(dict(fmts))
+    sch = Schedule(loop_order=tuple(order))
+    res = simulate_expr(expr, fmt, sch, arrays, DIMS)
+    assert res.cycles == pinned
+    # explicit default config == no config, cycle for cycle
+    res_hw = simulate_expr(expr, fmt, sch, arrays, DIMS,
+                           hw=HardwareConfig())
+    assert res_hw.cycles == pinned
+    assert HW_PRESETS["paper"] == HardwareConfig()
+
+
+def test_halving_bandwidth_never_decreases_cycles():
+    arrays = {"B": rand((12, 12), 41, density=0.5),
+              "c": rand((12,), 42, density=0.8)}
+    fmt = Format({"B": "cc", "c": "c"})
+    sch = Schedule(loop_order=("i", "j"))
+    dims = {"i": 12, "j": 12}
+    prev = None
+    for bw in (8.0, 4.0, 2.0, 1.0, 0.5, 0.25):
+        res = simulate_expr("x(i) = B(i,j) * c(j)", fmt, sch, arrays, dims,
+                            hw=HardwareConfig(mem_bandwidth=bw))
+        if prev is not None:
+            assert res.cycles >= prev, f"bw {bw}: cycles decreased"
+        prev = res.cycles
+    base = simulate_expr("x(i) = B(i,j) * c(j)", fmt, sch, arrays, dims)
+    assert prev > base.cycles        # a real bottleneck eventually bites
+    np.testing.assert_allclose(
+        simulate_expr("x(i) = B(i,j) * c(j)", fmt, sch, arrays, dims,
+                      hw=HardwareConfig(mem_bandwidth=0.25)).dense,
+        base.dense)                  # hardware never changes semantics
+
+
+def test_finite_pe_and_buffer_terms():
+    arrays = {"B": rand((12, 12), 43, density=0.5),
+              "C": rand((12, 12), 44, density=0.5)}
+    fmt = Format({"B": "cc", "C": "cc", "X": "cc"})
+    sch = Schedule(loop_order=("i", "j"))
+    dims = {"i": 12, "j": 12}
+    base = simulate_expr("X(i,j) = B(i,j) * C(i,j)", fmt, sch, arrays, dims)
+    pe1 = simulate_expr("X(i,j) = B(i,j) * C(i,j)", fmt, sch, arrays, dims,
+                        hw=HardwareConfig(pes=1))
+    shallow = simulate_expr("X(i,j) = B(i,j) * C(i,j)", fmt, sch, arrays,
+                            dims, hw=HardwareConfig(buffer_depth=2))
+    assert pe1.cycles >= base.cycles       # serialization can only slow
+    assert shallow.cycles > base.cycles    # stalls add cycles
+    np.testing.assert_allclose(pe1.dense, base.dense)
+
+
+def test_hw_threads_through_lanes_and_tiles():
+    arrays = {"B": rand((8, 8), 45), "C": rand((8, 8), 46)}
+    fmt = Format({"B": "cc", "C": "cc", "X": "cc"})
+    dims = {"i": 8, "j": 8}
+    slow = HardwareConfig(mem_bandwidth=0.25)
+    for sch in (Schedule(loop_order=("i", "j"), split={"i": 2},
+                         parallelize={"i": 2}),
+                Schedule(loop_order=("i", "j"), tile={"i": 2})):
+        base = simulate_expr("X(i,j) = B(i,j) * C(i,j)", fmt, sch,
+                             arrays, dims)
+        res = simulate_expr("X(i,j) = B(i,j) * C(i,j)", fmt, sch,
+                            arrays, dims, hw=slow)
+        assert res.cycles > base.cycles
+        np.testing.assert_allclose(res.dense, base.dense)
+
+
+# ---------------------------------------------------------------------------
+# schedule-cache cross-version invalidation ($SAM_SCHEDULE_CACHE)
+# ---------------------------------------------------------------------------
+
+def test_schedule_cache_rejects_prior_version_entries(tmp_path, monkeypatch):
+    """A shared $SAM_SCHEDULE_CACHE file written by v2 tools must read as
+    EMPTY after the v3 bump — a v2 winner may not be the v3 winner."""
+    from repro.core import autoschedule as a
+
+    path = tmp_path / "shared_cache.json"
+    monkeypatch.setenv("SAM_SCHEDULE_CACHE", str(path))
+    a.clear_resolution_memo()
+    # fabricate a v2-era store holding a plausible entry
+    with open(path, "w") as f:
+        json.dump({"version": 2, "entries": {
+            "k": {"schedule": {"loop_order": ["i", "j"]},
+                  "meta": {}, "created": 0.0}}}, f)
+    cache = a.ScheduleCache()
+    assert cache.path == str(path)
+    assert cache.lookup("k") is None          # v2 entries never served
+    # same-version writes round trip through the same file
+    cache.store("k", Schedule(loop_order=("j", "i")))
+    got = cache.lookup("k")
+    assert got is not None and tuple(got.loop_order) == ("j", "i")
+    with open(path) as f:
+        assert json.load(f)["version"] == a.CACHE_VERSION
+    a.clear_resolution_memo()

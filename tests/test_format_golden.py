@@ -1,0 +1,162 @@
+"""Golden wire-level token streams for the format-conversion nodes.
+
+Each CONVERT node kind gets a hand-derived golden stream, mirroring
+``test_split_golden``'s wire-token methodology:
+
+* ``op="sort"`` — a hashed level's scanner emits hash-slot order; the
+  in-stream sort conversion must re-emit the exact ascending stream.
+  The coordinate set {1, 2, 7} hashes (c*11 mod 8, linear probing,
+  ascending-coordinate insertion) to slots {3, 6, 5}, so the scanner's
+  wire order is [1, 7, 2] — derived by hand from ``_hash_order``'s
+  model, asserted token for token.
+* ``op="tree"`` — a singleton (COO) tensor with duplicate coordinates
+  rebuilds canonically before its scanners run; the node's observability
+  port carries the converted top-level coordinate fiber.
+* bitmap (``m``) levels auto-enable §4.3 word-packed co-iteration: the
+  scanner's bv port carries hand-packed 64-bit words.
+
+Two Table-1 expressions (SpMV, elementwise Mul) additionally run with
+s/h storage and must produce writer token streams with the same decoded
+content as their all-compressed golden runs.
+"""
+import numpy as np
+import pytest
+
+from test_split_golden import decode_writer_tokens
+
+from repro.core import streams as st
+from repro.core.custard import lower
+from repro.core.einsum import parse
+from repro.core.fibertree import _hash_order
+from repro.core.schedule import Format, Schedule
+from repro.core.simulator import Simulator
+
+
+def _node_env(res, name, port):
+    """The nested output stream a named node produced on ``port``."""
+    for n in res.graph.nodes.values():
+        if n.name == name:
+            return res.edge_streams[(n.id, port)]
+    raise KeyError(name)
+
+
+def test_hash_order_model():
+    # {1, 2, 7} -> slots {3, 6, 5}: iteration order [0, 2, 1]
+    assert _hash_order(np.array([1, 2, 7])).tolist() == [0, 2, 1]
+
+
+def test_sort_convert_golden_tokens():
+    b = np.zeros(8)
+    b[[1, 2, 7]] = [10.0, 20.0, 70.0]
+    c = np.ones(8)
+    low = lower("x = b(i) * c(i)", Format({"b": "h", "c": "c"}),
+                Schedule(loop_order=("i",)), {"i": 8})
+    res = Simulator(low.graph, low.build_inputs({"b": b, "c": c})).run()
+
+    # the hashed scanner's WIRE stream is hash-slot order...
+    assert res.edge_tokens("b_i", "crd") == st.nested_to_tokens([1, 7, 2])
+    # ...and the op="sort" CONVERT re-emits ascending coordinates
+    assert res.edge_tokens("b_i_cvt", "crd") == st.nested_to_tokens(
+        [1, 2, 7])
+    # refs permute WITH their coordinates (value alignment)
+    crds = _node_env(res, "b_i_cvt", "crd")
+    refs = _node_env(res, "b_i_cvt", "ref")
+    bvals = low.build_inputs({"b": b, "c": c})["b"].vals
+    assert [float(bvals[r]) for r in refs] == [10.0, 20.0, 70.0]
+    assert list(crds) == [1, 2, 7]
+    # sort work: 2 * (fiber length + 1) tokens
+    cvt = next(n for n in res.graph.nodes.values() if n.name == "b_i_cvt")
+    assert res.work[cvt.id] == 2 * (3 + 1)
+    # end-to-end: the sorted stream intersects correctly
+    assert float(res.outputs["x"].vals[0]) == 100.0
+
+
+def test_tree_convert_golden_tokens():
+    import repro.core.fibertree as fib
+
+    coords = np.array([[0, 2], [1, 1], [1, 1]])
+    vals = np.array([4.0, 1.0, 2.0])
+    B = fib.FiberTree.from_coords((2, 3), coords, vals, "ss")
+    c = np.ones(3)
+    low = lower("x(i) = B(i,j) * c(j)", Format({"B": "ss", "c": "c"}),
+                Schedule(loop_order=("i", "j")), {"i": 2, "j": 3})
+    tensors = low.build_inputs({"B": np.zeros((2, 3)), "c": c})
+    tensors["B"] = B       # the duplicate-holding COO tree, hand-built
+    res = Simulator(low.graph, tensors).run()
+
+    # the op="tree" node rebuilds the tensor canonically up front: its
+    # observability port carries the converted TOP-LEVEL crd fiber
+    assert res.edge_tokens("B_cvt", "crd") == st.nested_to_tokens([0, 1])
+    # downstream scanners then see unique levels: duplicate (1,1) merged
+    assert res.edge_tokens("B_i", "crd") == st.nested_to_tokens([0, 1])
+    assert res.edge_tokens("B_j", "crd") == st.nested_to_tokens(
+        [[2], [1]])
+    x = res.outputs["x"].to_dense()
+    np.testing.assert_allclose(x, [4.0, 3.0])   # 1.0 + 2.0 merged
+    # tree work: 2 * surviving entries + 1 (2 levels x 2 + 2 vals + root)
+    cvt = next(n for n in res.graph.nodes.values() if n.name == "B_cvt")
+    assert res.work[cvt.id] == 2 * (2 + 2 + 2) + 1
+
+
+def test_bitmap_bv_word_golden_tokens():
+    B = np.zeros((2, 7))
+    C = np.zeros((2, 7))
+    B[0, [1, 2, 5]] = 1.0
+    B[1, [0, 6]] = 1.0
+    C[0, [2, 5, 6]] = 1.0
+    C[1, [0, 1]] = 1.0
+    low = lower("X(i,j) = B(i,j) * C(i,j)",
+                Format({"B": "mm", "C": "mm", "X": "cc"}),
+                Schedule(loop_order=("i", "j")), {"i": 2, "j": 7})
+    # all-bitmap sources auto-enable §4.3 word-packed co-iteration
+    assert all(n.params.get("bv") for n in low.graph.nodes.values()
+               if n.kind == "level_scan")
+    res = Simulator(low.graph, low.build_inputs({"B": B, "C": C})).run()
+
+    # hand-packed words: row bitmap then per-row column bitmaps
+    rows = _node_env(res, "B_i", "bv")
+    assert [w for w, _ in rows] == [0b11]              # rows {0, 1}
+    cols = _node_env(res, "B_j", "bv")
+    assert [[w for w, _ in fiber] for fiber in cols] == [
+        [(1 << 1) | (1 << 2) | (1 << 5)],              # 38
+        [(1 << 0) | (1 << 6)]]                         # 65
+    np.testing.assert_allclose(res.outputs["X"].to_dense(), B * C)
+
+
+TABLE1_MIRRORS = [
+    ("SpMV_coo", "x(i) = B(i,j) * c(j)", ("i", "j"),
+     {"B": "ss", "c": "c"}, {"B": "cc", "c": "c"}),
+    ("SpMV_hashed", "x(i) = B(i,j) * c(j)", ("i", "j"),
+     {"B": "hh", "c": "h"}, {"B": "cc", "c": "c"}),
+    ("Mul_mixed", "X(i,j) = B(i,j) * C(i,j)", ("i", "j"),
+     {"B": "sh", "C": "mm", "X": "cc"},
+     {"B": "cc", "C": "cc", "X": "cc"}),
+]
+
+
+@pytest.mark.parametrize("name,expr,order,fmts,golden_fmts", TABLE1_MIRRORS,
+                         ids=[m[0] for m in TABLE1_MIRRORS])
+def test_table1_writer_streams_match_compressed_golden(name, expr, order,
+                                                       fmts, golden_fmts):
+    rng = np.random.default_rng(17)
+    dims = {"i": 5, "j": 6}
+    arrays = {}
+    for t in fmts:
+        if t == "X":
+            continue
+        shape = (5, 6) if t.isupper() else (6,)
+        arrays[t] = ((rng.random(shape) < 0.5)
+                     * rng.integers(1, 5, shape)).astype(float)
+    assign = parse(expr)
+    lhs = assign.lhs.tensor
+
+    low_g = lower(expr, Format(dict(golden_fmts)),
+                  Schedule(loop_order=order), dims)
+    res_g = Simulator(low_g.graph, low_g.build_inputs(arrays)).run()
+    golden = decode_writer_tokens(res_g, lhs, low_g.result_vars)
+
+    low = lower(expr, Format(dict(fmts)), Schedule(loop_order=order), dims)
+    res = Simulator(low.graph, low.build_inputs(arrays)).run()
+    got = decode_writer_tokens(res, lhs, low.result_vars)
+
+    assert got == golden, f"{name}: writer stream content diverged"
